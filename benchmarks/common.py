@@ -1,0 +1,68 @@
+"""Shared benchmark plumbing: scene setup, engine timing, CSV emission."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_call(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds over repeats (after warmup)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# Simple RoboCore-style cycle model used where the paper reports simulator
+# cycles we cannot measure (Figs. 12/13/16).  Calibrated in relative terms:
+#   axis test      : CYCLES_AXIS per executed axis (decoded-but-skipped axes
+#                    cost CYCLES_DECODE on predication designs)
+#   interconnect   : CYCLES_PER_BYTE * bytes moved between units
+#   sphere test    : CYCLES_SPHERE
+# Energy model: pJ per executed op / per byte moved (45nm-scaled, relative).
+CYCLES_AXIS = 4.0
+CYCLES_DECODE = 1.0
+CYCLES_SPHERE = 6.0
+CYCLES_PER_BYTE = 0.05
+PJ_PER_AXIS = 8.0
+PJ_PER_BYTE = 1.2
+PJ_PER_SHADER = 400.0
+
+
+def work_model_cycles(c, mode: str) -> float:
+    """Counters -> modeled cycles for one query batch.
+
+    no-exit designs (naive / rta_like / staged_noexit) execute every decoded
+    axis; predication executes only until the exit but still decodes+routes
+    the rest; conditional returns (wavefront*) skip them entirely.
+    """
+    executed = c.axis_tests_executed
+    decoded = c.axis_tests_decoded
+    skipped = max(decoded - executed, 0)
+    if mode in ("naive", "rta_like", "staged_noexit"):
+        cycles = decoded * CYCLES_AXIS
+    elif mode == "predicated":
+        cycles = executed * CYCLES_AXIS + skipped * CYCLES_DECODE
+    else:                                      # conditional returns
+        cycles = executed * CYCLES_AXIS
+    cycles += c.sphere_tests * CYCLES_SPHERE
+    cycles += c.bytes_moved * CYCLES_PER_BYTE
+    cycles += c.shader_invocations * 50.0
+    return cycles
+
+
+def work_model_energy_pj(c) -> float:
+    return (c.axis_tests_executed * PJ_PER_AXIS
+            + c.bytes_moved * PJ_PER_BYTE
+            + c.shader_invocations * PJ_PER_SHADER)

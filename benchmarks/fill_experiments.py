@@ -1,0 +1,38 @@
+"""Inject generated dry-run/roofline tables into EXPERIMENTS.md markers."""
+import io
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def gen(sections: str, d: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.report", "--sections", sections,
+         "--dir", d],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert out.returncode == 0, out.stderr
+    return out.stdout
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    base_dir = os.path.join(ROOT, "benchmarks", "results", "dryrun")
+    opt_dir = os.path.join(ROOT, "benchmarks", "results", "dryrun_opt")
+    subs = {
+        "<!-- ROOFLINE_BASELINE -->": gen("roofline", base_dir),
+        "<!-- DRYRUN_TABLE -->": gen("dryrun", opt_dir),
+        "<!-- ROOFLINE_OPT -->": gen("roofline", opt_dir),
+    }
+    for marker, content in subs.items():
+        if marker in text:
+            text = text.replace(marker, content)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

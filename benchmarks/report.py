@@ -1,0 +1,98 @@
+"""Generate the §Dry-run / §Roofline markdown tables from dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/results/dryrun]
+
+Markdown goes to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs.base import ARCH_REGISTRY, SHAPES
+from repro.roofline import hw
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(d):
+    recs = {}
+    for fn in os.listdir(d):
+        if fn.endswith(".json"):
+            r = json.load(open(os.path.join(d, fn)))
+            recs[r["cell"]] = r
+    return recs
+
+
+def roofline_table(recs, mesh: str):
+    print(f"\n### Roofline — {mesh} mesh "
+          f"({256 if mesh == 'single' else 512} chips, per-chip terms)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful FLOPs ratio | mem/chip |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_REGISTRY:
+        for shape in SHAPES:
+            cell = f"{arch}__{shape}__{mesh}"
+            r = recs.get(cell)
+            if r is None:
+                print(f"| {arch} | {shape} | - | - | - | MISSING | | |")
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | *skipped: "
+                      f"full-attention @524k* | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | - | - | - | ERROR | | |")
+                continue
+            fit = "" if r["peak_mem_per_chip"] <= hw.HBM_BYTES else " ⚠"
+            print(f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                  f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                  f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+                  f"{r['peak_mem_per_chip']/2**30:.1f} GiB{fit} |")
+
+
+def dryrun_table(recs):
+    print("\n### Dry-run summary (lower+compile status, all cells)\n")
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"cells: {len(recs)} — ok {ok}, documented skips {sk}, errors "
+          f"{er}\n")
+    print("| cell | status | compile | FLOPs/chip | HBM B/chip | "
+          "coll B/chip | mem/chip |")
+    print("|---|---|---|---|---|---|---|")
+    for cell in sorted(recs):
+        r = recs[cell]
+        if r["status"] != "ok":
+            print(f"| {cell} | {r['status']} | | | | | |")
+            continue
+        print(f"| {cell} | ok | {r['compile_s']:.1f}s | "
+              f"{r['flops_per_chip']:.2e} | {r['hbm_bytes_per_chip']:.2e} | "
+              f"{r['collective_bytes_per_chip']:.2e} | "
+              f"{r['peak_mem_per_chip']/2**30:.1f} GiB |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "results", "dryrun"))
+    ap.add_argument("--sections", default="roofline,dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    secs = args.sections.split(",")
+    if "roofline" in secs:
+        roofline_table(recs, "single")
+        roofline_table(recs, "multi")
+    if "dryrun" in secs:
+        dryrun_table(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,407 @@
+"""Benchmark harness: one function per RoboGPU table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default sizes are scaled so
+the suite finishes on one CPU core; pass --full for paper-scale inputs
+(524288-point clouds).  Simulator-cycle/energy claims use the work model in
+benchmarks/common.py; wall-clock rows are measured on the JAX engine.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig11,table4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (emit, time_call, work_model_cycles,
+                               work_model_energy_pj)
+from repro.core.ballquery import (ball_query_pray, ball_query_psphere,
+                                  ball_query_ref)
+from repro.core.counters import Counters
+from repro.core.fps import (farthest_point_sampling, random_sampling,
+                            sampling_spread)
+from repro.core.octree import build_octree
+from repro.core.wavefront import MODES, CollisionEngine, EngineConfig
+from repro.data.robotics import (ENVIRONMENTS, make_mpaccel_scenario,
+                                 make_scene, scene_trajectories)
+
+SCALE = {"points": 65536, "trajs": 6, "wps": 30, "depth": 6,
+         "mpaccel_scenarios": 4, "mpaccel_points": 16384}
+FULL_SCALE = {"points": 524288, "trajs": 25, "wps": 60, "depth": 7,
+              "mpaccel_scenarios": 10, "mpaccel_points": 65536}
+
+_scene_cache = {}
+
+
+def get_scene(name, n_points, depth, trajs, wps):
+    key = (name, n_points, depth, trajs, wps)
+    if key not in _scene_cache:
+        sc = make_scene(name, num_points=n_points)
+        tree = build_octree(sc.points, depth=depth)
+        obbs = scene_trajectories(sc, num_trajectories=trajs, waypoints=wps)
+        _scene_cache[key] = (sc, tree, obbs)
+    return _scene_cache[key]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11 — collision detection speedup per environment x design arm
+# ---------------------------------------------------------------------------
+
+def fig11_collision_speedup(S):
+    rows = {}
+    for env in ENVIRONMENTS:
+        _, tree, obbs = get_scene(env, S["points"], S["depth"], S["trajs"],
+                                  S["wps"])
+        base_cycles = None
+        ref = None
+        for mode in ("naive", "rta_like", "staged_noexit", "predicated",
+                     "wavefront", "wavefront_fused"):
+            eng = CollisionEngine(tree, EngineConfig(mode=mode))
+            col, c = eng.query(obbs)
+            col2, c2 = eng.query(obbs)       # timed second run (post-jit)
+            if ref is None:
+                ref = np.asarray(col)
+            assert (np.asarray(col2) == ref).all(), (env, mode)
+            cycles = work_model_cycles(c2, mode)
+            if mode == "naive":
+                base_cycles = cycles
+            speed = base_cycles / cycles
+            emit(f"fig11/{env}/{mode}", c2.wall_time_s * 1e6,
+                 f"model_speedup_vs_cuda={speed:.1f};collisions="
+                 f"{int(ref.sum())};axis_exec={c2.axis_tests_executed}")
+            rows[(env, mode)] = (c2, cycles)
+    # headline: RC_CR_CU vs rta_like (paper: 3.1x) and vs naive (14.8x)
+    for env in ENVIRONMENTS:
+        full = rows[(env, "wavefront_fused")][1]
+        emit(f"fig11/{env}/headline", 0.0,
+             f"vs_mochi={rows[(env, 'rta_like')][1]/full:.1f}x;"
+             f"vs_cuda={rows[(env, 'naive')][1]/full:.1f}x;"
+             f"vs_tta={rows[(env, 'staged_noexit')][1]/full:.1f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12 — unit utilization proxy (work distribution per design)
+# ---------------------------------------------------------------------------
+
+def fig12_unit_utilization(S):
+    _, tree, obbs = get_scene("cubby", S["points"], S["depth"], S["trajs"],
+                              S["wps"])
+    for mode in ("staged_noexit", "predicated", "wavefront",
+                 "wavefront_fused"):
+        eng = CollisionEngine(tree, EngineConfig(mode=mode))
+        _, c = eng.query(obbs)
+        total = work_model_cycles(c, mode)
+        icnt = c.bytes_moved * 0.05 / max(total, 1)
+        box_normal = min(c.axis_tests_executed, c.nodes_traversed * 6)
+        edge = max(c.axis_tests_executed - box_normal, 0)
+        emit(f"fig12/{mode}", 0.0,
+             f"icnt_frac={icnt:.2f};box_normal_tests={box_normal};"
+             f"edge_tests={edge};bytes={c.bytes_moved}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 13 — sensitivity to collision-unit latency (work model)
+# ---------------------------------------------------------------------------
+
+def fig13_latency_sensitivity(S):
+    from benchmarks import common
+    _, tree, obbs = get_scene("cubby", S["points"], S["depth"], S["trajs"],
+                              S["wps"])
+    counters = {}
+    for mode in ("predicated", "wavefront"):
+        eng = CollisionEngine(tree, EngineConfig(mode=mode))
+        _, counters[mode] = eng.query(obbs)
+    base = common.CYCLES_AXIS
+    for mult in (0.5, 1.0, 1.5, 2.0):
+        common.CYCLES_AXIS = base * mult
+        cr = work_model_cycles(counters["wavefront"], "wavefront")
+        p = work_model_cycles(counters["predicated"], "predicated")
+        emit(f"fig13/lat_{mult}x", 0.0,
+             f"cond_return_cycles={cr:.3e};predication_cycles={p:.3e}")
+    common.CYCLES_AXIS = base
+
+
+# ---------------------------------------------------------------------------
+# Fig. 14 — MPAccel small scenarios: avg/min/max speedup vs naive
+# ---------------------------------------------------------------------------
+
+def fig14_mpaccel(S):
+    speeds = []
+    for i in range(S["mpaccel_scenarios"]):
+        sc = make_mpaccel_scenario(i, num_points=S["mpaccel_points"])
+        tree = build_octree(sc.points, depth=5)
+        obbs = scene_trajectories(sc, num_trajectories=4, waypoints=25)
+        cyc = {}
+        for mode in ("naive", "wavefront_fused"):
+            eng = CollisionEngine(tree, EngineConfig(mode=mode))
+            _, c = eng.query(obbs)
+            cyc[mode] = work_model_cycles(c, mode)
+        speeds.append(cyc["naive"] / cyc["wavefront_fused"])
+    emit("fig14/mpaccel", 0.0,
+         f"avg={np.mean(speeds):.1f}x;min={np.min(speeds):.1f}x;"
+         f"max={np.max(speeds):.1f}x;"
+         f"note=paper_sees_smaller_gains_on_small_scenes")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 15 — latency distribution per exit condition (+ sphere ablation)
+# ---------------------------------------------------------------------------
+
+def fig15_exit_distribution(S):
+    _, tree, obbs = get_scene("dresser", S["points"], S["depth"],
+                              S["trajs"], S["wps"])
+    for spheres in (False, True):
+        eng = CollisionEngine(tree, EngineConfig(mode="wavefront",
+                                                 use_spheres=spheres))
+        _, c = eng.query(obbs)
+        h = c.exit_histogram
+        early = c.early_exit_fraction()
+        emit(f"fig15/spheres_{spheres}", 0.0,
+             f"bsphere={h[0]};isphere={h[1]};"
+             f"box_normal={int(h[2:8].sum())};edge={int(h[8:17].sum())};"
+             f"full={h[17]};early_exit_frac={early:.2f};"
+             f"sphere_tests={c.sphere_tests}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 16 — energy model comparison
+# ---------------------------------------------------------------------------
+
+def fig16_energy(S):
+    _, tree, obbs = get_scene("merged_cubby", S["points"], S["depth"],
+                              S["trajs"], S["wps"])
+    pj = {}
+    for mode in ("naive", "rta_like", "wavefront_fused"):
+        eng = CollisionEngine(tree, EngineConfig(mode=mode))
+        _, c = eng.query(obbs)
+        pj[mode] = work_model_energy_pj(c)
+    emit("fig16/energy", 0.0,
+         f"vs_cuda_savings={1-pj['wavefront_fused']/pj['naive']:.2f};"
+         f"vs_mochi_savings={1-pj['wavefront_fused']/pj['rta_like']:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Table IV — P-Ray vs P-Sphere ball query
+# ---------------------------------------------------------------------------
+
+def table4_pray_psphere(S):
+    sc, tree, _ = get_scene("cubby", S["points"], S["depth"], 1, 2)
+    rs = np.random.RandomState(0)
+    m = 512
+    qidx = rs.choice(len(sc.points), m, replace=False)
+    queries = jnp.asarray(sc.points[qidx])
+    radius, k = 0.05, 32
+
+    t = time.perf_counter()
+    ps_idx, ps_cnt, c_ps = ball_query_psphere(tree, queries, radius, k)
+    t_ps = time.perf_counter() - t
+    t = time.perf_counter()
+    pr_idx, pr_cnt, c_pr = ball_query_pray(jnp.asarray(sc.points), queries,
+                                           radius, k, depth=4)
+    t_pr = time.perf_counter() - t
+    assert (np.asarray(ps_cnt) == np.asarray(pr_cnt)).all()
+    emit("table4/p_ray", t_pr * 1e6,
+         f"rays={len(sc.points)};spheres={m};tree_depth=4;"
+         f"nodes={c_pr.nodes_traversed};"
+         f"nodes_per_ray={c_pr.nodes_traversed/len(sc.points):.1f}")
+    emit("table4/p_sphere", t_ps * 1e6,
+         f"rays={m};spheres={len(sc.points)};tree_depth={tree.depth};"
+         f"nodes={c_ps.nodes_traversed};"
+         f"nodes_per_ray={c_ps.nodes_traversed/m:.1f};"
+         f"speedup_vs_pray={t_pr/t_ps:.1f}x")
+    # early-exit node saving (paper: 6x fewer nodes)
+    _, _, c_ne = ball_query_psphere(tree, queries, radius, k,
+                                    early_exit=False)
+    emit("table4/early_exit", 0.0,
+         f"nodes_with_ee={c_ps.nodes_traversed};"
+         f"nodes_without={c_ne.nodes_traversed};"
+         f"ratio={c_ne.nodes_traversed/max(c_ps.nodes_traversed,1):.1f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 17 — ball query radius sweep
+# ---------------------------------------------------------------------------
+
+def fig17_radius_sweep(S):
+    sc, tree, _ = get_scene("cubby", S["points"], S["depth"], 1, 2)
+    rs = np.random.RandomState(1)
+    queries = jnp.asarray(
+        sc.points[rs.choice(len(sc.points), 256, replace=False)])
+    base = None
+    for r in (0.05, 0.1, 0.2, 0.4):
+        t = time.perf_counter()
+        _, _, c = ball_query_psphere(tree, queries, r, 32)
+        dt = time.perf_counter() - t
+        if base is None:
+            base = dt
+        emit(f"fig17/psphere_r{r}", dt * 1e6,
+             f"rel={dt/base:.2f};nodes={c.nodes_traversed}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — sampling strategy: FPS vs random in the PointNet++ front end
+# ---------------------------------------------------------------------------
+
+def fig9_sampling(S):
+    from repro.models.pointnet import init_pointnet, pointnet_encode
+    rs = np.random.RandomState(0)
+    cloud = jnp.asarray(rs.uniform(-1, 1, (2, 2048, 3)).astype(np.float32))
+    params = init_pointnet(jax.random.PRNGKey(0))
+    enc_fps = jax.jit(lambda p, c: pointnet_encode(p, c, "fps"))
+    enc_rnd = jax.jit(lambda p, c, k: pointnet_encode(p, c, "random", k))
+    key = jax.random.PRNGKey(1)
+    t_fps = time_call(lambda: enc_fps(params, cloud).block_until_ready())
+    t_rnd = time_call(
+        lambda: enc_rnd(params, cloud, key).block_until_ready())
+    pts = cloud[0]
+    s_fps = float(sampling_spread(pts, farthest_point_sampling(pts, 256)))
+    s_rnd = float(np.mean([float(sampling_spread(
+        pts, random_sampling(jax.random.PRNGKey(s), 2048, 256)))
+        for s in range(4)]))
+    emit("fig9/fps", t_fps * 1e6, f"spread={s_fps:.4f}")
+    emit("fig9/random", t_rnd * 1e6,
+         f"spread={s_rnd:.4f};latency_saving={1-t_rnd/t_fps:.2f};"
+         f"note=collision_gate_catches_quality_loss")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 18 — full pipeline latency breakdown with collision gate
+# ---------------------------------------------------------------------------
+
+def fig18_pipeline(S):
+    from repro.core.pipeline import plan_with_collision_gate
+    from repro.models.planner import init_planner, rollout
+    sc, tree, _ = get_scene("tabletop", S["points"], S["depth"], 1, 2)
+    engine = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+    params = init_planner(jax.random.PRNGKey(0))
+    rs = np.random.RandomState(2)
+    cloud = jnp.asarray(
+        sc.points[rs.choice(len(sc.points), 2048, replace=False)])
+    q0 = jnp.asarray(rs.uniform(-1, 1, 7).astype(np.float32))
+    goal = jnp.asarray(rs.uniform(-1, 1, 7).astype(np.float32))
+    fns = {"rollout": jax.jit(rollout, static_argnames=("num_steps",
+                                                        "sampling"))}
+    for sampling in ("fps", "random"):
+        plan_with_collision_gate(params, fns, engine, cloud, q0, goal,
+                                 num_steps=20, sampling=sampling,
+                                 key=jax.random.PRNGKey(3))
+        res2 = plan_with_collision_gate(params, fns, engine, cloud, q0,
+                                        goal, num_steps=20,
+                                        sampling=sampling,
+                                        key=jax.random.PRNGKey(3))
+        t = res2.timings
+        emit(f"fig18/{sampling}", (t["plan_s"] + t["collision_s"]) * 1e6,
+             f"plan_us={t['plan_s']*1e6:.0f};"
+             f"collision_us={t['collision_s']*1e6:.0f};"
+             f"collision_free={res2.collision_free}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 19 — MCL (DeliBot) with dynamic engine switching
+# ---------------------------------------------------------------------------
+
+def fig19_mcl(S):
+    from repro.core.mcl import (choose_engine, init_particles,
+                                make_corridor_world, mcl_step,
+                                ray_cast_dense)
+    grid = make_corridor_world(jax.random.PRNGKey(0), size=192)
+    angles = jnp.linspace(-np.pi, np.pi, 24, endpoint=False)
+    true_pose = jnp.asarray([5.0, 5.0, 0.4])
+    obs, _ = ray_cast_dense(grid, jnp.tile(true_pose[None, :2], (24, 1)),
+                            true_pose[2] + angles, 6.0)
+    iters = 8
+    results = {}
+    for policy in ("dense", "compacted", "dynamic"):
+        st = init_particles(jax.random.PRNGKey(1), grid, 192)
+        total, cells_hist = 0.0, 1e9
+        for it in range(iters):
+            eng = (policy if policy != "dynamic"
+                   else choose_engine(cells_hist, threshold=60.0))
+            st, stats = mcl_step(jax.random.PRNGKey(10 + it), st, grid, obs,
+                                 angles, jnp.zeros(3), eng, sigma=0.5)
+            cells_hist = stats["cells_per_ray"]
+            if it > 0:                     # skip compile iteration
+                total += stats["time_s"]
+        results[policy] = total
+        emit(f"fig19/{policy}", total / max(iters - 1, 1) * 1e6,
+             f"cumulative_s={total:.3f}")
+    best_fixed = min(results["dense"], results["compacted"])
+    emit("fig19/dynamic_vs_best_fixed", 0.0,
+         f"speedup={best_fixed/max(results['dynamic'],1e-9):.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Roofline table (reads the dry-run artifacts; §Roofline source of truth)
+# ---------------------------------------------------------------------------
+
+def roofline_table(S):
+    d = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+    if not os.path.isdir(d):
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(d, fn)) as f:
+            r = json.load(f)
+        if r.get("status") == "skipped":
+            emit(f"roofline/{r['cell']}", 0.0, f"skipped:{r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            emit(f"roofline/{r['cell']}", 0.0, "ERROR")
+            continue
+        emit(f"roofline/{r['cell']}", r["compile_s"] * 1e6,
+             f"compute_s={r['compute_s']:.3f};memory_s={r['memory_s']:.3f};"
+             f"collective_s={r['collective_s']:.3f};"
+             f"dominant={r['dominant']};"
+             f"useful_ratio={r['useful_flops_ratio']:.2f};"
+             f"mem_gb={r['peak_mem_per_chip']/1e9:.1f}")
+
+
+BENCHES = {
+    "fig9": fig9_sampling,
+    "fig11": fig11_collision_speedup,
+    "fig12": fig12_unit_utilization,
+    "fig13": fig13_latency_sensitivity,
+    "fig14": fig14_mpaccel,
+    "fig15": fig15_exit_distribution,
+    "fig16": fig16_energy,
+    "table4": table4_pray_psphere,
+    "fig17": fig17_radius_sweep,
+    "fig18": fig18_pipeline,
+    "fig19": fig19_mcl,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale inputs (slow)")
+    args = ap.parse_args()
+    S = FULL_SCALE if args.full else SCALE
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            BENCHES[name](S)
+        except Exception as e:  # keep the suite going
+            import traceback
+            traceback.print_exc()
+            emit(f"{name}/ERROR", 0.0, repr(e)[:120])
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

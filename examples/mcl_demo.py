@@ -1,0 +1,44 @@
+"""Monte Carlo Localization with dynamic engine switching (paper §VI-C).
+
+    PYTHONPATH=src python examples/mcl_demo.py
+
+A DeliBot-style robot localizes on a synthetic floor plan.  Each filter
+iteration chooses between the dense masked marcher ("CUDA cores") and the
+compacted wavefront marcher ("RoboCore") using the paper's heuristic: mean
+cells traversed per ray in the previous iteration vs a threshold.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mcl import (choose_engine, init_particles,
+                            make_corridor_world, mcl_step, ray_cast_dense)
+
+
+def main():
+    grid = make_corridor_world(jax.random.PRNGKey(0), size=192)
+    angles = jnp.linspace(-np.pi, np.pi, 32, endpoint=False)
+    true_pose = jnp.asarray([5.0, 5.0, 0.4])
+    obs, _ = ray_cast_dense(grid, jnp.tile(true_pose[None, :2], (32, 1)),
+                            true_pose[2] + angles, 6.0)
+    st = init_particles(jax.random.PRNGKey(1), grid, 256)
+    cells_per_ray = 1e9
+    print(f"{'iter':>4} {'engine':>10} {'cells/ray':>10} {'ms':>8} "
+          f"{'mean err (m)':>13}")
+    for it in range(10):
+        eng = choose_engine(cells_per_ray, threshold=60.0)
+        st, stats = mcl_step(jax.random.PRNGKey(100 + it), st, grid, obs,
+                             angles, jnp.zeros(3), eng, sigma=0.5)
+        cells_per_ray = stats["cells_per_ray"]
+        err = float(jnp.mean(jnp.linalg.norm(
+            st.particles[:, :2] - true_pose[None, :2], axis=-1)))
+        print(f"{it:>4} {stats['engine']:>10} {cells_per_ray:>10.1f} "
+              f"{stats['time_s']*1e3:>8.1f} {err:>13.3f}")
+
+
+if __name__ == "__main__":
+    main()

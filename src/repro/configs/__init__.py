@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_REGISTRY, ModelConfig, get_config,
+                                get_smoke_config)  # noqa: F401

@@ -1,0 +1,18 @@
+"""nemotron-4-340b [dense]: GQA 96q/8kv, squared-ReLU MLP.
+
+[arXiv:2402.16819; unverified]  96L d_model=18432 96H (kv=8) d_ff=73728
+vocab=256000.  head_dim = 192.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron_4_340b", family="dense", num_layers=96, d_model=18432,
+    num_heads=96, num_kv_heads=8, d_ff=73728, vocab_size=256000,
+    head_dim=192, mlp_act="relu2", norm="layernorm", use_rope=True,
+    train_microbatches=8, seq_parallel=True,
+    param_dtype="bfloat16", compute_dtype="bfloat16")
+
+SMOKE_CONFIG = CONFIG.replace(
+    name="nemotron_smoke", num_layers=2, d_model=128, num_heads=8,
+    num_kv_heads=2, d_ff=512, vocab_size=512, head_dim=16,
+    param_dtype="float32", compute_dtype="float32")

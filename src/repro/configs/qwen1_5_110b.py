@@ -1,0 +1,18 @@
+"""qwen1.5-110b [dense]: GQA 64q/8kv, SwiGLU, QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B; hf]  80L d_model=8192 64H (kv=8) d_ff=49152
+vocab=152064.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1_5_110b", family="dense", num_layers=80, d_model=8192,
+    num_heads=64, num_kv_heads=8, d_ff=49152, vocab_size=152064,
+    mlp_act="swiglu", qkv_bias=True, train_microbatches=8,
+    seq_parallel=True, param_dtype="bfloat16",
+    compute_dtype="bfloat16")
+
+SMOKE_CONFIG = CONFIG.replace(
+    name="qwen_smoke", num_layers=2, d_model=128, num_heads=8,
+    num_kv_heads=2, d_ff=384, vocab_size=512,
+    param_dtype="float32", compute_dtype="float32")

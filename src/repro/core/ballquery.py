@@ -1,0 +1,228 @@
+"""Fixed-radius neighbor search (PointNet++ "ball query") on the octree.
+
+RoboGPU §IV: ball query can be posed as tree traversal two ways —
+  P-Ray:    sampled points are spheres, every cloud point is a "ray" that
+            traverses a small tree built over the M sampled centers;
+  P-Sphere: cloud points are spheres in a deep tree, each sampled center
+            traverses it (M rays over a large tree).
+The paper finds P-Sphere superior *given early exit*: a query that has
+already gathered ``k`` neighbors retires, and on average 6x fewer nodes are
+traversed.  We realize the early exit at batch granularity: leaf visits are
+processed in per-query rank chunks; queries that fill up drop out of later
+chunks (wavefront compaction, DESIGN.md §2).
+
+All routines return (idx (M, k) int32, count (M,) int32, Counters); slots
+``>= count`` are filled with -1.  Neighbor *order* within a ball is
+unspecified (matches PointNet++ semantics); tests compare sets/counts.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.counters import Counters
+from repro.core.geometry import point_aabb_sq_distance
+from repro.core.octree import (Octree, build_octree, lookup_children,
+                               node_centers_from_codes)
+
+
+def ball_query_ref(points: jax.Array, queries: jax.Array, radius: float,
+                   k: int) -> Tuple[jax.Array, jax.Array]:
+    """Brute-force oracle: first-k (by point index) neighbors within radius."""
+    d2 = jnp.sum(jnp.square(queries[:, None, :] - points[None, :, :]), -1)
+    hit = d2 <= radius * radius                       # (M, N)
+    count = jnp.minimum(jnp.sum(hit, -1), k).astype(jnp.int32)
+    # first-k hit indices per row
+    N = points.shape[0]
+    rank = jnp.cumsum(hit, axis=-1) - 1               # rank among hits
+    slot = jnp.where(hit & (rank < k), rank, k)
+    M = queries.shape[0]
+    out = jnp.full((M, k + 1), -1, jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(M)[:, None], (M, N))
+    out = out.at[rows, slot].set(
+        jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None, :], (M, N)))
+    return out[:, :k], count
+
+
+def _merge_candidates(out_idx, counts, q_flat, p_flat, hit):
+    """Append candidate hits (q, p) into per-query buffers, capped at k."""
+    M, K = out_idx.shape
+    E = q_flat.shape[0]
+    qk = jnp.where(hit, q_flat, M).astype(jnp.int32)
+    order = jnp.argsort(qk, stable=True)
+    qs = qk[order]
+    ps = p_flat[order]
+    seg_start = jnp.searchsorted(qs, qs, side="left")
+    rank = jnp.arange(E, dtype=jnp.int32) - seg_start.astype(jnp.int32)
+    base = counts[jnp.minimum(qs, M - 1)]
+    slot = base + rank
+    ok = (qs < M) & (slot < K)
+    rows = jnp.where(ok, qs, M)          # M = out of range -> dropped
+    cols = jnp.where(ok, slot, 0)
+    out_idx = out_idx.at[rows, cols].set(ps.astype(jnp.int32), mode="drop")
+    counts = counts.at[rows].add(jnp.where(ok, 1, 0), mode="drop")
+    return out_idx, counts
+
+
+def _traverse_to_leaves(tree: Octree, centers: jax.Array, radius: float,
+                        c: Counters, max_frontier: int = 1 << 22):
+    """Wavefront sphere-vs-node descent; returns leaf frontier (q, leaf_pos)."""
+    M = centers.shape[0]
+    q_idx = jnp.arange(M, dtype=jnp.int32)
+    codes = jnp.zeros((M,), jnp.uint32)
+    scene_lo = jnp.asarray(tree.scene_lo)
+    r2 = radius * radius
+    for level in range(tree.depth + 1):
+        node_c, node_h = node_centers_from_codes(codes, scene_lo,
+                                                 tree.cell_size(level))
+        d2 = point_aabb_sq_distance(centers[q_idx], node_c, node_h)
+        overlap = d2 <= r2
+        c.nodes_traversed += int(codes.shape[0])
+        c.nodes_per_level.append(int(codes.shape[0]))
+        if level == tree.depth:
+            n = int(jax.device_get(jnp.sum(overlap)))
+            keep = jnp.nonzero(overlap, size=n)[0]
+            return q_idx[keep], codes[keep]
+        child_codes, child_idx = lookup_children(
+            jnp.asarray(tree.levels[level + 1].codes), codes)
+        mask = overlap[:, None] & (child_idx >= 0)
+        flat_mask = mask.reshape(-1)
+        n = int(jax.device_get(jnp.sum(flat_mask)))
+        if n == 0:
+            return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.uint32))
+        n = min(n, max_frontier)
+        keep = jnp.nonzero(flat_mask, size=n)[0]
+        q_idx = jnp.repeat(q_idx, 8)[keep]
+        codes = child_codes.reshape(-1)[keep]
+    raise AssertionError
+
+
+def ball_query_psphere(tree: Octree, queries: jax.Array, radius: float,
+                       k: int, chunk: int = 8, early_exit: bool = True
+                       ) -> Tuple[jax.Array, jax.Array, Counters]:
+    """P-Sphere: each query center traverses the point octree.
+
+    ``chunk`` = leaf visits processed per query per round; after each round
+    full queries retire (the RoboCore early exit).  ``early_exit=False``
+    reproduces the RTNN baseline that keeps traversing (paper: 6x more nodes).
+    """
+    t0 = time.perf_counter()
+    c = Counters(num_queries=queries.shape[0])
+    queries = jnp.asarray(queries, jnp.float32)
+    M = queries.shape[0]
+    leaf_codes = jnp.asarray(tree.levels[tree.depth].codes)
+    q_idx, codes = _traverse_to_leaves(tree, queries, radius, c)
+    # Undo the double count of leaf entries (counted again per chunk below).
+    c.nodes_traversed -= int(q_idx.shape[0])
+    c.nodes_per_level.pop()
+    out_idx = jnp.full((M, k), -1, jnp.int32)
+    counts = jnp.zeros((M,), jnp.int32)
+    if q_idx.shape[0] == 0:
+        c.wall_time_s = time.perf_counter() - t0
+        return out_idx, counts, c
+
+    leaf_cap = int(np.max(tree.leaf_point_count))
+    # Pad gather sources so dynamic_slice never clamps the start index.
+    pts = jnp.concatenate([jnp.asarray(tree.points_sorted),
+                           jnp.full((leaf_cap, 3), jnp.inf, jnp.float32)])
+    pidx = jnp.concatenate([jnp.asarray(tree.point_index),
+                            jnp.full((leaf_cap,), -1, jnp.int32)])
+    starts_all = jnp.asarray(tree.leaf_point_start)
+    counts_all = jnp.asarray(tree.leaf_point_count)
+    leaf_pos = jnp.searchsorted(leaf_codes, codes).astype(jnp.int32)
+
+    # Order each query's leaf visits CLOSEST-FIRST (the DFS a RoboCore-style
+    # traversal performs): early exit then triggers after the few nearest
+    # leaves instead of an arbitrary prefix.  Sort key = (query, distance
+    # from query to leaf center).
+    from repro.core.octree import node_centers_from_codes
+    leaf_c, _ = node_centers_from_codes(codes, jnp.asarray(tree.scene_lo),
+                                        tree.cell_size(tree.depth))
+    d2leaf = jnp.sum(jnp.square(leaf_c - queries[q_idx]), -1)
+    order = jnp.lexsort((d2leaf, q_idx))
+    q_idx, leaf_pos = q_idx[order], leaf_pos[order]
+    seg_start = jnp.searchsorted(q_idx, q_idx, side="left")
+    rank = jnp.arange(q_idx.shape[0]) - seg_start
+    max_rank = int(jax.device_get(jnp.max(rank))) if q_idx.shape[0] else 0
+
+    r2 = radius * radius
+    gather = jax.vmap(lambda s: jax.lax.dynamic_slice(pts, (s, 0),
+                                                      (leaf_cap, 3)))
+    gather_i = jax.vmap(lambda s: jax.lax.dynamic_slice(pidx, (s,),
+                                                        (leaf_cap,)))
+    for round_i in range(0, max_rank + 1, chunk):
+        live = (rank >= round_i) & (rank < round_i + chunk)
+        if early_exit:
+            live = live & (counts[q_idx] < k)
+        n = int(jax.device_get(jnp.sum(live)))
+        if n == 0:
+            continue
+        keep = jnp.nonzero(live, size=n)[0]
+        qv, lv = q_idx[keep], leaf_pos[keep]
+        c.nodes_traversed += n
+        st, cnt = starts_all[lv], counts_all[lv]
+        cand = gather(st)                       # (n, leaf_cap, 3)
+        cand_idx = gather_i(st)                 # (n, leaf_cap)
+        valid = jnp.arange(leaf_cap)[None, :] < cnt[:, None]
+        d2 = jnp.sum(jnp.square(cand - queries[qv][:, None, :]), -1)
+        hit = (d2 <= r2) & valid
+        c.leaf_tests += int(jax.device_get(jnp.sum(valid)))
+        qf = jnp.repeat(qv, leaf_cap)
+        out_idx, counts = _merge_candidates(
+            out_idx, counts, qf, cand_idx.reshape(-1), hit.reshape(-1))
+    counts = jnp.minimum(counts, k)
+    c.wall_time_s = time.perf_counter() - t0
+    return out_idx, counts, c
+
+
+def ball_query_pray(points: jax.Array, queries: jax.Array, radius: float,
+                    k: int, depth: int = 6
+                    ) -> Tuple[jax.Array, jax.Array, Counters]:
+    """P-Ray: every cloud point traverses a small octree over query centers.
+
+    No early exit is possible (a point cannot know whether its queries are
+    full), which is exactly why the paper finds it inferior on RoboCore.
+    """
+    t0 = time.perf_counter()
+    points = jnp.asarray(points, jnp.float32)
+    queries_np = np.asarray(queries, np.float32)
+    qtree = build_octree(queries_np, depth=depth)
+    c = Counters(num_queries=int(points.shape[0]))  # rays = points
+    M, N = queries_np.shape[0], points.shape[0]
+    q_leafcap = int(np.max(qtree.leaf_point_count))
+
+    p_idx, codes = _traverse_to_leaves(qtree, points, radius, c)
+    out_idx = jnp.full((M, k), -1, jnp.int32)
+    counts = jnp.zeros((M,), jnp.int32)
+    if p_idx.shape[0] == 0:
+        c.wall_time_s = time.perf_counter() - t0
+        return out_idx, counts, c
+
+    leaf_codes = jnp.asarray(qtree.levels[qtree.depth].codes)
+    leaf_pos = jnp.searchsorted(leaf_codes, codes).astype(jnp.int32)
+    starts = jnp.asarray(qtree.leaf_point_start)[leaf_pos]
+    cnts = jnp.asarray(qtree.leaf_point_count)[leaf_pos]
+    qpts = jnp.concatenate([jnp.asarray(qtree.points_sorted),
+                            jnp.full((q_leafcap, 3), jnp.inf, jnp.float32)])
+    qmap = jnp.concatenate([jnp.asarray(qtree.point_index),
+                            jnp.full((q_leafcap,), -1, jnp.int32)])
+    gather = jax.vmap(lambda s: jax.lax.dynamic_slice(qpts, (s, 0),
+                                                      (q_leafcap, 3)))
+    gather_i = jax.vmap(lambda s: jax.lax.dynamic_slice(qmap, (s,),
+                                                        (q_leafcap,)))
+    cand_q = gather(starts)                      # (E, cap, 3) query centers
+    cand_qi = gather_i(starts)                   # (E, cap) original q index
+    valid = jnp.arange(q_leafcap)[None, :] < cnts[:, None]
+    d2 = jnp.sum(jnp.square(cand_q - points[p_idx][:, None, :]), -1)
+    hit = (d2 <= radius * radius) & valid
+    c.leaf_tests += int(jax.device_get(jnp.sum(valid)))
+    pf = jnp.repeat(p_idx, q_leafcap).astype(jnp.int32)
+    out_idx, counts = _merge_candidates(
+        out_idx, counts, cand_qi.reshape(-1), pf, hit.reshape(-1))
+    counts = jnp.minimum(counts, k)
+    c.wall_time_s = time.perf_counter() - t0
+    return out_idx, counts, c

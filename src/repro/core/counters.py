@@ -1,0 +1,72 @@
+"""Work model for the collision engine.
+
+The paper evaluates RoboCore in a cycle-level simulator; on CPU we cannot
+measure TPU cycles, so every engine variant reports *architecture-neutral work
+counters* next to wall clock: axis tests executed (what a conditional-return
+machine runs) vs decoded (what predication still pays for), sphere tests,
+nodes traversed per level, exit-code histogram, modeled bytes moved
+(fused VMEM-resident kernel vs unfused HBM-materialized stages), and the
+Mochi-style shader-handoff overhead.
+
+Bytes model (f32):
+  OBB record 60 B, AABB 24 B, staged intermediates (t,R,absR,halves) 108 B,
+  margins 15*4 B, result 4 B.
+  unfused test  = 84 (boxes) + 2*108 (terms round trip) + 2*60 (margins) + 4
+                = 424 B
+  fused test    = 84 + 8 (result+exit code)              = 92 B
+  shader handoff (Mochi) = 128 B per reported hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+BYTES_UNFUSED_TEST = 424
+BYTES_FUSED_TEST = 92
+BYTES_SHADER_HANDOFF = 128
+NUM_EXIT_CODES = 18
+
+
+@dataclasses.dataclass
+class Counters:
+    """Aggregate work counters for one engine invocation."""
+
+    num_queries: int = 0
+    nodes_traversed: int = 0            # (query, node) pairs tested
+    nodes_per_level: List[int] = dataclasses.field(default_factory=list)
+    leaf_tests: int = 0                 # tests against terminal (leaf/full) nodes
+    axis_tests_executed: int = 0        # conditional-return work model
+    axis_tests_decoded: int = 0         # predication / no-exit work model
+    sphere_tests: int = 0
+    exit_histogram: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(NUM_EXIT_CODES, np.int64))
+    shader_invocations: int = 0
+    bytes_moved: int = 0
+    frontier_overflow: int = 0          # entries dropped at capacity (should be 0)
+    wall_time_s: float = 0.0
+
+    def merge_exit_codes(self, codes: np.ndarray, valid: np.ndarray) -> None:
+        hist = np.bincount(codes[valid].astype(np.int64),
+                           minlength=NUM_EXIT_CODES)
+        self.exit_histogram[:len(hist)] += hist
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["exit_histogram"] = self.exit_histogram.tolist()
+        return d
+
+    def early_exit_fraction(self, half: int = 7) -> float:
+        """Fraction of tests that terminate within ``half`` axis tests.
+
+        Paper §I: "around 60% of collision queries can be terminated early
+        after less than half of the total tests".
+        """
+        total = int(self.exit_histogram.sum())
+        if total == 0:
+            return 0.0
+        # sphere exits (codes 0,1) + axis exits with index < half
+        early = int(self.exit_histogram[0] + self.exit_histogram[1]
+                    + self.exit_histogram[2:2 + half].sum())
+        return early / total

@@ -1,0 +1,188 @@
+"""Linear Morton octree over point clouds (TPU-friendly: arrays, no pointers).
+
+The paper stores the environment in an octree whose nodes hold occupancy and
+"only further subdivide when partially occupied" (§II-B).  We reproduce that
+with a *linear* octree: for every level ``l`` we keep a sorted array of the
+Morton codes of occupied nodes plus a ``full`` flag (all descendants occupied
+=> terminal solid box).  Child lookup is a binary search — no stacks, no
+pointers, so the traversal in :mod:`repro.core.wavefront` is pure array code.
+
+Build runs once per scene on the host (numpy); traversal consumes the arrays
+as jax constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import AABBs
+
+MAX_DEPTH = 10  # 30 bits of Morton code
+
+
+def _part1by2(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32) & 0x3FF
+    x = (x | (x << 16)) & np.uint32(0x030000FF)
+    x = (x | (x << 8)) & np.uint32(0x0300F00F)
+    x = (x | (x << 4)) & np.uint32(0x030C30C3)
+    x = (x | (x << 2)) & np.uint32(0x09249249)
+    return x
+
+
+def morton_encode(ix: np.ndarray, iy: np.ndarray, iz: np.ndarray) -> np.ndarray:
+    return (_part1by2(ix) | (_part1by2(iy) << 1) | (_part1by2(iz) << 2)
+            ).astype(np.uint32)
+
+
+def _compact1by2(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32) & np.uint32(0x09249249)
+    x = (x | (x >> 2)) & np.uint32(0x030C30C3)
+    x = (x | (x >> 4)) & np.uint32(0x0300F00F)
+    x = (x | (x >> 8)) & np.uint32(0x030000FF)
+    x = (x | (x >> 16)) & np.uint32(0x000003FF)
+    return x
+
+
+def morton_decode(code: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    return (_compact1by2(code), _compact1by2(code >> 1), _compact1by2(code >> 2))
+
+
+# jnp versions (used inside jitted traversal for node AABB reconstruction).
+
+def _jnp_compact1by2(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32) & jnp.uint32(0x09249249)
+    x = (x | (x >> 2)) & jnp.uint32(0x030C30C3)
+    x = (x | (x >> 4)) & jnp.uint32(0x0300F00F)
+    x = (x | (x >> 8)) & jnp.uint32(0x030000FF)
+    x = (x | (x >> 16)) & jnp.uint32(0x000003FF)
+    return x
+
+
+def jnp_morton_decode(code: jax.Array) -> jax.Array:
+    """(...,) uint32 codes -> (..., 3) int32 cell coords."""
+    return jnp.stack([
+        _jnp_compact1by2(code), _jnp_compact1by2(code >> 1),
+        _jnp_compact1by2(code >> 2)], axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class OctreeLevel:
+    codes: np.ndarray      # (n_l,) uint32, sorted occupied node codes
+    full: np.ndarray       # (n_l,) bool, all descendants occupied
+
+
+@dataclasses.dataclass(frozen=True)
+class Octree:
+    """Linear octree over a cubic scene volume."""
+
+    scene_lo: np.ndarray         # (3,)
+    scene_size: float            # cube edge length
+    depth: int                   # leaf level
+    levels: List[OctreeLevel]    # levels[0] = root level (1 cell), … [depth]
+    # Point storage (for ball query): points sorted by leaf Morton code.
+    points_sorted: np.ndarray    # (P, 3)
+    point_index: np.ndarray      # (P,) int32 original index of points_sorted[i]
+    leaf_point_start: np.ndarray  # (n_leaf,) int32 range start into points_sorted
+    leaf_point_count: np.ndarray  # (n_leaf,) int32
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.levels[self.depth].codes)
+
+    def cell_size(self, level: int) -> float:
+        return self.scene_size / (1 << level)
+
+    def node_aabbs(self, level: int) -> AABBs:
+        """Materialize all occupied nodes of a level as AABBs."""
+        codes = self.levels[level].codes
+        xyz = np.stack(morton_decode(codes), -1).astype(np.float32)
+        cs = self.cell_size(level)
+        center = self.scene_lo[None, :] + (xyz + 0.5) * cs
+        half = np.full_like(center, cs / 2.0)
+        return AABBs(center=jnp.asarray(center), half=jnp.asarray(half))
+
+    def leaf_aabbs(self) -> AABBs:
+        return self.node_aabbs(self.depth)
+
+
+def node_centers_from_codes(codes: jax.Array, scene_lo: jax.Array,
+                            cell_size: float) -> Tuple[jax.Array, jax.Array]:
+    """Codes (K,) at a level -> (centers (K,3), halves (K,3)). jit-safe."""
+    xyz = jnp_morton_decode(codes).astype(jnp.float32)
+    center = scene_lo[None, :] + (xyz + 0.5) * cell_size
+    half = jnp.full_like(center, cell_size / 2.0)
+    return center, half
+
+
+def build_octree(points: np.ndarray, depth: int = 6,
+                 scene_lo: np.ndarray | None = None,
+                 scene_size: float | None = None) -> Octree:
+    """Build a linear octree from a point cloud (host-side, once per scene)."""
+    points = np.asarray(points, np.float32)
+    assert 1 <= depth <= MAX_DEPTH
+    if scene_lo is None or scene_size is None:
+        lo = points.min(0)
+        hi = points.max(0)
+        pad = 1e-3 * float(np.max(hi - lo) + 1e-6)
+        scene_lo = lo - pad
+        scene_size = float(np.max(hi - lo) + 2 * pad)
+    scene_lo = np.asarray(scene_lo, np.float32)
+
+    res = 1 << depth
+    rel = (points - scene_lo[None, :]) / scene_size
+    cells = np.clip((rel * res).astype(np.int64), 0, res - 1).astype(np.uint32)
+    pt_codes = morton_encode(cells[:, 0], cells[:, 1], cells[:, 2])
+
+    order = np.argsort(pt_codes, kind="stable")
+    pt_codes_sorted = pt_codes[order]
+    points_sorted = points[order]
+
+    leaf_codes, leaf_start, leaf_count = np.unique(
+        pt_codes_sorted, return_index=True, return_counts=True)
+    leaf_codes = leaf_codes.astype(np.uint32)
+
+    # Bottom-up levels with full flags.  A leaf is full by definition; an
+    # internal node is full iff all 8 children exist and are full.
+    levels: List[OctreeLevel] = [None] * (depth + 1)  # type: ignore
+    levels[depth] = OctreeLevel(codes=leaf_codes,
+                                full=np.ones(len(leaf_codes), bool))
+    child_codes = leaf_codes
+    child_full = levels[depth].full
+    for l in range(depth - 1, -1, -1):
+        parent_of_child = child_codes >> np.uint32(3)
+        codes_l, inv = np.unique(parent_of_child, return_inverse=True)
+        n_children = np.zeros(len(codes_l), np.int32)
+        np.add.at(n_children, inv, 1)
+        n_full = np.zeros(len(codes_l), np.int32)
+        np.add.at(n_full, inv, child_full.astype(np.int32))
+        full_l = (n_children == 8) & (n_full == 8)
+        levels[l] = OctreeLevel(codes=codes_l.astype(np.uint32), full=full_l)
+        child_codes, child_full = codes_l.astype(np.uint32), full_l
+
+    return Octree(scene_lo=scene_lo, scene_size=float(scene_size), depth=depth,
+                  levels=levels, points_sorted=points_sorted,
+                  point_index=order.astype(np.int32),
+                  leaf_point_start=leaf_start.astype(np.int32),
+                  leaf_point_count=leaf_count.astype(np.int32))
+
+
+def lookup_children(level_codes: jax.Array, parent_codes: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Occupancy lookup for the 8 children of each parent code.
+
+    Args:
+      level_codes: (n_{l+1},) sorted occupied codes at the child level.
+      parent_codes: (K,) parent codes (level l).
+    Returns:
+      (child_codes (K, 8) uint32, child_idx (K, 8) int32 with -1 = empty).
+    """
+    cand = (parent_codes[:, None].astype(jnp.uint32) << jnp.uint32(3)
+            ) | jnp.arange(8, dtype=jnp.uint32)[None, :]
+    pos = jnp.searchsorted(level_codes, cand.reshape(-1)).reshape(cand.shape)
+    pos_c = jnp.clip(pos, 0, level_codes.shape[0] - 1)
+    found = level_codes[pos_c] == cand
+    return cand, jnp.where(found, pos_c, -1).astype(jnp.int32)

@@ -1,0 +1,213 @@
+"""Separating-Axis Collision Test (SACT) between OBBs and AABBs.
+
+Implements the staged test of RoboGPU Fig. 6:
+
+  stage 0  bounding-sphere test      -> early NO-collision cull
+  stage 1  inscribing-sphere test    -> early COLLISION confirm
+  (preprocessing: t = relative translation, R = OBB rotation, AbsR)
+  stages 2..7   6 box-normal axes    -> early NO-collision per axis
+  stages 8..16  9 edge x edge axes   -> early NO-collision per axis
+  stage 17 no separating axis        -> COLLISION
+
+On a TPU there is no per-lane early exit: every variant below evaluates
+vectorized over (pairs,) lanes.  The *work model* (``exit_code`` /
+``axis_tests``) records what a conditional-return machine (the paper's
+RoboCore) would have executed; actual time savings are realized one level up,
+in :mod:`repro.core.wavefront`, by compacting decided pairs out of the batch
+between stages — the batch-granularity analogue of conditional returns.
+
+Axis formulas follow Ericson, *Real-Time Collision Detection* §4.4.1, with
+box A = AABB (identity axes) and box B = OBB.  ``R[i, j]`` = component ``i``
+of OBB axis ``j`` in world space, i.e. exactly the OBB rotation matrix whose
+columns are its local axes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import AABBs, OBBs, point_aabb_sq_distance
+
+_EPS = 1e-6
+
+# Exit-code layout (kept stable; benchmarks and tests rely on it).
+EXIT_BSPHERE = 0          # bounding-sphere cull           -> no collision
+EXIT_ISPHERE = 1          # inscribing-sphere confirm      -> collision
+EXIT_AXIS0 = 2            # separating axis k found        -> no collision
+# codes 2..7   = box-normal axes 0..5
+# codes 8..16  = edge x edge axes 0..8
+EXIT_FULL = 17            # all 15 axes overlap            -> collision
+NUM_AXES = 15
+NUM_BOX_NORMAL = 6
+NUM_EDGE = 9
+
+
+class PairTerms(NamedTuple):
+    """Precomputed per-pair quantities shared by all axis tests."""
+
+    t: jax.Array       # (..., 3)  OBB centre in AABB frame
+    R: jax.Array       # (..., 3, 3)
+    absR: jax.Array    # (..., 3, 3)  |R| + eps
+    a_half: jax.Array  # (..., 3)  AABB half extents
+    b_half: jax.Array  # (..., 3)  OBB half extents
+
+
+def make_pair_terms(obb_center, obb_half, obb_rot, aabb_center, aabb_half
+                    ) -> PairTerms:
+    """Preprocessing stage.  All args broadcast against each other."""
+    t = obb_center - aabb_center
+    absR = jnp.abs(obb_rot) + _EPS
+    return PairTerms(t=t, R=obb_rot, absR=absR, a_half=aabb_half,
+                     b_half=obb_half)
+
+
+def box_normal_margins(p: PairTerms) -> jax.Array:
+    """Margins for the 6 box-normal axes -> (..., 6).
+
+    margin = |t . L| - (r_a + r_b); positive => separating axis.
+    Axes 0..2 are the AABB axes, 3..5 the OBB axes.
+    """
+    # L = A_i (AABB axes): |t[i]| vs a_half[i] + sum_j b_half[j] * absR[i, j]
+    ra_a = p.a_half
+    rb_a = jnp.einsum("...j,...ij->...i", p.b_half, p.absR)
+    m_a = jnp.abs(p.t) - (ra_a + rb_a)                       # (..., 3)
+    # L = B_j (OBB axes): |t . R[:, j]| vs sum_i a_half[i]*absR[i, j] + b_half[j]
+    t_in_b = jnp.einsum("...i,...ij->...j", p.t, p.R)
+    ra_b = jnp.einsum("...i,...ij->...j", p.a_half, p.absR)
+    m_b = jnp.abs(t_in_b) - (ra_b + p.b_half)                # (..., 3)
+    return jnp.concatenate([m_a, m_b], axis=-1)
+
+
+def edge_margins(p: PairTerms) -> jax.Array:
+    """Margins for the 9 edge x edge axes A_i x B_j -> (..., 9).
+
+    Axis order: (i, j) row-major, i.e. axis k = A_{k//3} x B_{k%3}.
+    """
+    margins = []
+    for i in range(3):
+        i1, i2 = (i + 1) % 3, (i + 2) % 3
+        for j in range(3):
+            j1, j2 = (j + 1) % 3, (j + 2) % 3
+            ra = (p.a_half[..., i1] * p.absR[..., i2, j]
+                  + p.a_half[..., i2] * p.absR[..., i1, j])
+            rb = (p.b_half[..., j1] * p.absR[..., i, j2]
+                  + p.b_half[..., j2] * p.absR[..., i, j1])
+            lhs = jnp.abs(p.t[..., i2] * p.R[..., i1, j]
+                          - p.t[..., i1] * p.R[..., i2, j])
+            margins.append(lhs - (ra + rb))
+    return jnp.stack(margins, axis=-1)
+
+
+def all_axis_margins(p: PairTerms) -> jax.Array:
+    """All 15 axis margins, stage order -> (..., 15)."""
+    return jnp.concatenate([box_normal_margins(p), edge_margins(p)], axis=-1)
+
+
+def sphere_tests(obb_center, obb_half, aabb_center, aabb_half
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Bounding / inscribing sphere pre-tests (RoboGPU Fig. 6 stages 0-1).
+
+    Returns (bsphere_miss, isphere_hit):
+      bsphere_miss: the OBB's bounding sphere misses the AABB -> no collision.
+      isphere_hit:  the OBB's inscribed sphere overlaps the AABB -> collision.
+    """
+    d2 = point_aabb_sq_distance(obb_center, aabb_center, aabb_half)
+    r_out = jnp.linalg.norm(obb_half, axis=-1)
+    r_in = jnp.min(obb_half, axis=-1)
+    bsphere_miss = d2 > jnp.square(r_out)
+    isphere_hit = d2 < jnp.square(r_in)
+    return bsphere_miss, isphere_hit
+
+
+class SactResult(NamedTuple):
+    collide: jax.Array      # (...,) bool
+    exit_code: jax.Array    # (...,) int32, see EXIT_* above
+    axis_tests: jax.Array   # (...,) int32 axis tests a CR machine would run
+    sphere_tests: jax.Array  # (...,) int32 sphere tests executed (0 or 2)
+
+
+def _staged_result(bsphere_miss, isphere_hit, margins, use_spheres: bool
+                   ) -> SactResult:
+    sep = margins > 0.0                                      # (..., 15)
+    any_sep = jnp.any(sep, axis=-1)
+    # First separating axis index (15 if none).
+    first_sep = jnp.argmax(sep, axis=-1)
+    first_sep = jnp.where(any_sep, first_sep, NUM_AXES)
+    collide_sat = ~any_sep
+    if use_spheres:
+        collide = jnp.where(bsphere_miss, False,
+                            jnp.where(isphere_hit, True, collide_sat))
+        exit_code = jnp.where(
+            bsphere_miss, EXIT_BSPHERE,
+            jnp.where(isphere_hit, EXIT_ISPHERE,
+                      jnp.where(any_sep, EXIT_AXIS0 + first_sep, EXIT_FULL)))
+        axis_tests = jnp.where(
+            bsphere_miss | isphere_hit, 0,
+            jnp.minimum(first_sep + 1, NUM_AXES))
+        n_sphere = jnp.full(axis_tests.shape, 2, jnp.int32)
+    else:
+        collide = collide_sat
+        exit_code = jnp.where(any_sep, EXIT_AXIS0 + first_sep, EXIT_FULL)
+        axis_tests = jnp.minimum(first_sep + 1, NUM_AXES)
+        n_sphere = jnp.zeros(axis_tests.shape, jnp.int32)
+    return SactResult(collide=collide,
+                      exit_code=exit_code.astype(jnp.int32),
+                      axis_tests=axis_tests.astype(jnp.int32),
+                      sphere_tests=n_sphere)
+
+
+def sact(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
+         use_spheres: bool = False) -> SactResult:
+    """Elementwise staged SACT over broadcastable box batches."""
+    p = make_pair_terms(obb_center, obb_half, obb_rot, aabb_center, aabb_half)
+    margins = all_axis_margins(p)
+    if use_spheres:
+        bs, is_ = sphere_tests(obb_center, obb_half, aabb_center, aabb_half)
+    else:
+        shape = margins.shape[:-1]
+        bs = jnp.zeros(shape, bool)
+        is_ = jnp.zeros(shape, bool)
+    return _staged_result(bs, is_, margins, use_spheres)
+
+
+def sact_pairwise(obbs: OBBs, aabbs: AABBs, use_spheres: bool = False
+                  ) -> SactResult:
+    """Dense all-pairs staged SACT: (M,) OBBs x (N,) AABBs -> (M, N) results."""
+    return sact(
+        obbs.center[:, None, :], obbs.half[:, None, :], obbs.rot[:, None, :, :],
+        aabbs.center[None, :, :], aabbs.half[None, :, :],
+        use_spheres=use_spheres)
+
+
+def sact_collide_only(obb_center, obb_half, obb_rot, aabb_center, aabb_half
+                      ) -> jax.Array:
+    """Cheapest full test: just the boolean, no work model (naive baseline)."""
+    p = make_pair_terms(obb_center, obb_half, obb_rot, aabb_center, aabb_half)
+    return ~jnp.any(all_axis_margins(p) > 0.0, axis=-1)
+
+
+def sact_pairwise_blocked(obbs: OBBs, aabbs: AABBs, block: int = 256,
+                          use_spheres: bool = False) -> SactResult:
+    """All-pairs SACT processed in OBB blocks to bound peak memory.
+
+    Pads M up to a multiple of ``block``; callers slice the first M rows.
+    """
+    M = obbs.n
+    pad = (-M) % block
+    def pad0(x):
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    centers = pad0(obbs.center).reshape((-1, block, 3))
+    halves = pad0(obbs.half).reshape((-1, block, 3))
+    rots = pad0(obbs.rot).reshape((-1, block, 3, 3))
+
+    def body(args):
+        c, h, r = args
+        return sact(c[:, None, :], h[:, None, :], r[:, None, :, :],
+                    aabbs.center[None, :, :], aabbs.half[None, :, :],
+                    use_spheres=use_spheres)
+
+    res = jax.lax.map(body, (centers, halves, rots))
+    res = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:])[:M], res)
+    return res

@@ -1,0 +1,241 @@
+"""Batched level-synchronous octree collision traversal with compaction.
+
+This is the TPU-native analogue of RoboCore's traversal controller +
+conditional returns (DESIGN.md §2).  A *frontier* is an array of live
+(query, node) pairs at one octree level.  Each level step:
+
+  1. stage A of the SACT on every live pair (sphere pre-tests if enabled,
+     then the 6 box-normal axes)  — cheap, decides most pairs;
+  2. stage B (9 edge x edge axes) on the pairs stage A left undecided;
+  3. pairs overlapping a *terminal* node (a leaf, or an internal node whose
+     subtree is fully occupied) confirm a collision for their query;
+  4. surviving pairs expand to their occupied children;
+  5. the next frontier is **compacted**: culled pairs, decided queries'
+     pairs, and empty children are dropped.  The frontier arrays are resized
+     host-side to the next power-of-two bucket, so live work — not the
+     worst case — determines the compute cost of the next level.  This
+     host-in-the-loop resizing is the batch-granularity realization of the
+     paper's early exit: on RoboCore a decided query retires from the warp
+     buffer; here it retires from the wavefront.
+
+Engine variants (paper Fig. 11 arms) are selected by ``EngineConfig.mode``;
+see DESIGN.md §2 for the mapping table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sact as sact_mod
+from repro.core.counters import (BYTES_FUSED_TEST, BYTES_SHADER_HANDOFF,
+                                 BYTES_UNFUSED_TEST, Counters)
+from repro.core.geometry import OBBs
+from repro.core.octree import (Octree, lookup_children,
+                               node_centers_from_codes)
+from repro.core.sact import (EXIT_FULL, NUM_AXES, SactResult)
+
+MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront",
+         "wavefront_fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    mode: str = "wavefront"
+    use_spheres: bool = False      # MPAccel bounding/inscribing sphere pre-tests
+    max_frontier: int = 1 << 20    # hard cap on live pairs per level
+    min_bucket: int = 1024         # smallest frontier allocation
+    query_block: int = 128         # naive-mode OBB block size
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+    @property
+    def early_exit(self) -> bool:
+        return self.mode in ("predicated", "wavefront", "wavefront_fused")
+
+    @property
+    def stage_split(self) -> bool:
+        return self.mode in ("wavefront", "wavefront_fused")
+
+    @property
+    def fused(self) -> bool:
+        return self.mode == "wavefront_fused"
+
+
+def _bucket(n: int, cfg: EngineConfig) -> int:
+    b = cfg.min_bucket
+    while b < n:
+        b <<= 1
+    return min(b, cfg.max_frontier)
+
+
+@functools.partial(jax.jit, static_argnames=("use_spheres", "stage_split"))
+def _test_pairs(obb_c, obb_h, obb_r, node_c, node_h, valid,
+                use_spheres: bool, stage_split: bool) -> SactResult:
+    """Staged SACT on a frontier of pairs.
+
+    With ``stage_split`` the edge axes are evaluated behind a
+    ``lax.select``-style mask (their cost is counted separately by the work
+    model); the wall-clock stage split happens at the frontier level via
+    bucket resizing, which is where static-shape hardware can actually save.
+    """
+    res = sact_mod.sact(obb_c, obb_h, obb_r, node_c, node_h,
+                        use_spheres=use_spheres)
+    del stage_split
+    return jax.tree.map(lambda x: jnp.where(valid, x, 0) if x.dtype != bool
+                        else x & valid, res)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out",))
+def _compact(mask: jax.Array, n_out: int, *arrays):
+    """Pack entries where mask is True to the front of fresh (n_out,) arrays."""
+    idx = jnp.nonzero(mask, size=n_out, fill_value=mask.shape[0])[0]
+    in_range = idx < mask.shape[0]
+    idx_c = jnp.minimum(idx, mask.shape[0] - 1)
+    out = tuple(jnp.where(in_range.reshape((-1,) + (1,) * (a.ndim - 1)),
+                          a[idx_c], 0) for a in arrays)
+    return (in_range,) + out
+
+
+class CollisionEngine:
+    """Octree collision queries for a fixed scene, in a selectable mode."""
+
+    def __init__(self, octree: Octree, config: EngineConfig = EngineConfig()):
+        self.octree = octree
+        self.cfg = config
+        self._scene_lo = jnp.asarray(octree.scene_lo)
+        self._level_codes = [jnp.asarray(l.codes) for l in octree.levels]
+        self._level_full = [jnp.asarray(l.full) for l in octree.levels]
+
+    # ------------------------------------------------------------------
+    def query(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
+        t0 = time.perf_counter()
+        if self.cfg.mode == "naive":
+            out = self._query_naive(obbs)
+        else:
+            out = self._query_tree(obbs)
+        collide, counters = out
+        counters.wall_time_s = time.perf_counter() - t0
+        counters.num_queries = obbs.n
+        return collide, counters
+
+    # ------------------------------------------------------------------
+    def _query_naive(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
+        """CUDA-baseline arm: dense all-pairs vs all leaf AABBs, all axes."""
+        leaves = self.octree.leaf_aabbs()
+        c = Counters()
+        M = obbs.n
+        res = sact_mod.sact_pairwise_blocked(
+            obbs, leaves, block=self.cfg.query_block, use_spheres=False)
+        collide = np.asarray(jax.device_get(jnp.any(res.collide, axis=-1)))
+        n_tests = M * leaves.n
+        c.nodes_traversed = n_tests
+        c.leaf_tests = n_tests
+        c.axis_tests_executed = n_tests * NUM_AXES
+        c.axis_tests_decoded = n_tests * NUM_AXES
+        c.bytes_moved = n_tests * BYTES_UNFUSED_TEST
+        codes = np.asarray(jax.device_get(res.exit_code)).reshape(-1)
+        c.merge_exit_codes(codes, np.ones_like(codes, bool))
+        return collide, c
+
+    # ------------------------------------------------------------------
+    def _query_tree(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
+        cfg = self.cfg
+        oct_ = self.octree
+        M = obbs.n
+        c = Counters()
+        decided = np.zeros(M, bool)           # queries confirmed colliding
+        collide = np.zeros(M, bool)
+
+        if len(oct_.levels[0].codes) == 0:
+            return collide, c
+
+        # Frontier at level 0: every query x the root cell.
+        q_idx = jnp.arange(M, dtype=jnp.int32)
+        codes = jnp.zeros((M,), jnp.uint32)
+        n_live = M
+        bucket = _bucket(M, cfg)
+        q_idx = jnp.pad(q_idx, (0, bucket - M))
+        codes = jnp.pad(codes, (0, bucket - M))
+        valid = jnp.arange(bucket) < n_live
+
+        for level in range(0, oct_.depth + 1):
+            if n_live == 0:
+                break
+            cell = oct_.cell_size(level)
+            node_c, node_h = node_centers_from_codes(codes, self._scene_lo,
+                                                     cell)
+            res = _test_pairs(obbs.center[q_idx], obbs.half[q_idx],
+                              obbs.rot[q_idx], node_c, node_h, valid,
+                              use_spheres=cfg.use_spheres,
+                              stage_split=cfg.stage_split)
+            # Terminal nodes: leaves, or full internal subtrees.
+            if level == oct_.depth:
+                is_term = jnp.ones_like(valid)
+            else:
+                pos = jnp.searchsorted(self._level_codes[level], codes)
+                pos = jnp.clip(pos, 0, self._level_codes[level].shape[0] - 1)
+                is_term = self._level_full[level][pos]
+            overlap = res.collide & valid
+            term_hit = overlap & is_term
+
+            # ---- work accounting -------------------------------------
+            valid_np = np.asarray(jax.device_get(valid))
+            n_valid = int(valid_np.sum())
+            c.nodes_traversed += n_valid
+            c.nodes_per_level.append(n_valid)
+            n_term = int(jax.device_get(jnp.sum(valid & is_term)))
+            c.leaf_tests += n_term
+            exec_tests = int(jax.device_get(
+                jnp.sum(jnp.where(valid, res.axis_tests, 0))))
+            c.axis_tests_executed += exec_tests
+            c.axis_tests_decoded += n_valid * NUM_AXES
+            c.sphere_tests += int(jax.device_get(
+                jnp.sum(jnp.where(valid, res.sphere_tests, 0))))
+            per_test_bytes = (BYTES_FUSED_TEST if cfg.fused
+                              else BYTES_UNFUSED_TEST)
+            c.bytes_moved += n_valid * per_test_bytes
+            if cfg.mode == "rta_like":
+                n_hits = int(jax.device_get(jnp.sum(overlap)))
+                c.shader_invocations += n_hits
+                c.bytes_moved += n_hits * BYTES_SHADER_HANDOFF
+            codes_np = np.asarray(jax.device_get(res.exit_code))
+            c.merge_exit_codes(codes_np, np.asarray(jax.device_get(
+                valid & is_term)))
+
+            # ---- collision confirmation ------------------------------
+            hit_q = np.asarray(jax.device_get(
+                jnp.zeros(M, bool).at[q_idx].max(term_hit)))
+            collide |= hit_q
+            if cfg.early_exit:
+                decided |= hit_q
+
+            if level == oct_.depth:
+                break
+
+            # ---- expansion -------------------------------------------
+            expand = overlap & ~is_term
+            if cfg.early_exit:
+                expand = expand & ~jnp.asarray(decided)[q_idx]
+            child_codes, child_idx = lookup_children(
+                self._level_codes[level + 1], codes)
+            child_mask = expand[:, None] & (child_idx >= 0)         # (K, 8)
+            flat_mask = child_mask.reshape(-1)
+            flat_codes = child_codes.reshape(-1)
+            flat_q = jnp.repeat(q_idx, 8)
+            n_live = int(jax.device_get(jnp.sum(flat_mask)))
+            if n_live == 0:
+                break
+            if n_live > cfg.max_frontier:
+                c.frontier_overflow += n_live - cfg.max_frontier
+                n_live = cfg.max_frontier
+            bucket = _bucket(n_live, cfg)
+            valid, q_idx, codes = _compact(flat_mask, bucket, flat_q,
+                                           flat_codes)
+        return collide, c

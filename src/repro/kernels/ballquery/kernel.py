@@ -1,0 +1,75 @@
+"""Tiled fixed-radius neighbor search with per-tile early stop (Pallas).
+
+RoboGPU §IV: ball query on RoboCore wins because (a) the custom intersection
+program runs inside the accelerator instead of bouncing to shader cores, and
+(b) traversal stops once a query's neighbor group is full.  This kernel is
+the dense-tile analogue: the grid walks point blocks sequentially for each
+query block, neighbor lists accumulate in a VMEM-resident output block, and a
+tile whose queries are ALL full skips its distance stage entirely
+(`lax.cond` — the tile-granular conditional return).
+
+Matches `ball_query_ref` exactly (first-k by ascending point index) because
+point blocks are visited in ascending order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def ballquery_kernel(q_ref, p_ref, cnt_ref, idx_ref, *, radius: float,
+                     k: int, bn: int):
+    j = pl.program_id(1)
+    bm = q_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    cnt = cnt_ref[...]
+
+    def tile(cnt):
+        # d2[a, b] = |q_a - p_b|^2, component-unrolled (3-vectors).
+        d2 = jnp.zeros((bm, bn), jnp.float32)
+        for c in range(3):
+            d = q_ref[:, c][:, None] - p_ref[:, c][None, :]
+            d2 = d2 + d * d
+        hit = d2 <= radius * radius
+        pos = cnt[:, None] + jnp.cumsum(hit.astype(jnp.int32), axis=1) - 1
+        sel = hit & (pos < k)
+        col = (j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1))
+        onehot = sel[:, :, None] & (pos[:, :, None]
+                                    == jax.lax.broadcasted_iota(
+                                        jnp.int32, (bm, bn, k), 2))
+        upd = jnp.max(jnp.where(onehot, col[:, :, None], -1), axis=1)
+        idx_ref[...] = jnp.where(upd >= 0, upd, idx_ref[...])
+        return cnt + jnp.sum(sel.astype(jnp.int32), axis=1)
+
+    # Tile-level conditional return: skip if every query here is full.
+    cnt_ref[...] = jax.lax.cond(jnp.all(cnt >= k), lambda c: c, tile, cnt)
+
+
+def make_ballquery_call(m_pad: int, n_pad: int, bm: int, bn: int,
+                        radius: float, k: int, interpret: bool):
+    kernel = functools.partial(ballquery_kernel, radius=radius, k=k, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(m_pad // bm, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((bm, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((m_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )

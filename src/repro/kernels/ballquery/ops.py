@@ -1,0 +1,30 @@
+"""JIT wrapper for the tiled ball-query kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ballquery.kernel import make_ballquery_call
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "k", "bm", "bn",
+                                             "interpret"))
+def ball_query_tiled(queries: jax.Array, points: jax.Array, radius: float,
+                     k: int, bm: int = 64, bn: int = 128,
+                     interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Dense tiled ball query: (idx (M,k) int32 [-1 padded], count (M,)).
+
+    Point padding sits at 1e9 so it never hits; query padding likewise.
+    """
+    M, N = queries.shape[0], points.shape[0]
+    qp = jnp.pad(queries.astype(jnp.float32), (((0, (-M) % bm), (0, 0))),
+                 constant_values=1e9)
+    pp = jnp.pad(points.astype(jnp.float32), (((0, (-N) % bn), (0, 0))),
+                 constant_values=-1e9)
+    call = make_ballquery_call(qp.shape[0], pp.shape[0], bm, bn,
+                               float(radius), int(k), interpret)
+    cnt, idx = call(qp, pp)
+    return idx[:M], jnp.minimum(cnt[:M], k)

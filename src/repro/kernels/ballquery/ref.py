@@ -1,0 +1,2 @@
+"""Oracle for the tiled ball-query kernel: the core brute-force reference."""
+from repro.core.ballquery import ball_query_ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Blockwise online-softmax attention (forward) Pallas kernel.
+
+The LM-side embodiment of the paper's fusion discipline (DESIGN.md §2): the
+(Tq, Tk) score matrix never exists in HBM — q/k/v tiles stream through VMEM
+and the softmax is computed online with running (max, denom) scratch.
+Supports GQA (kv head = q head // group) via the BlockSpec index map and
+causal masking with whole-tile skipping (the tile-level conditional return:
+fully-masked key tiles are never computed).
+
+Forward only: training uses the jnp reference path (XLA fuses the backward
+well enough on the dry-run meshes); this kernel targets serving/prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 causal: bool, scale: float, bq: int, bk: int, kv_len: int):
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+    iq = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _reset():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def tile():
+        q = q_ref[0, 0] * scale                  # (bq, d)
+        k = k_ref[0, 0]                          # (bk, d)
+        v = v_ref[0, 0]
+        s = q @ k.T                              # (bq, bk)
+        kj = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kj < kv_len                       # key padding
+        if causal:
+            qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (qi >= kj)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    if causal:
+        # Tile-level conditional return: skip fully-masked key tiles.
+        @pl.when(jk * bk <= iq * bq + bq - 1)
+        def _():
+            tile()
+    else:
+        tile()
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def make_flash_call(B: int, Hq: int, Hkv: int, Tq: int, Tk: int, d: int,
+                    bq: int, bk: int, causal: bool, scale: float,
+                    interpret: bool, dtype, kv_len: int | None = None):
+    group = Hq // Hkv
+    kernel = functools.partial(flash_kernel, causal=causal, scale=scale,
+                               bq=bq, bk=bk,
+                               kv_len=Tk if kv_len is None else kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, Tq // bq, Tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tq, d), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )

@@ -1,0 +1,34 @@
+"""JIT wrapper for the flash-attention kernel (GQA + causal + padding)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import make_flash_call
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """Attention over (B, H, T, d) tensors; k/v may have fewer heads (GQA).
+
+    Returns (B, Hq, Tq, d).  Sequence dims are padded to block multiples;
+    padded keys are masked inside the kernel.
+    """
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    scale = 1.0 / (d ** 0.5)
+    bq_ = min(bq, max(8, Tq))
+    bk_ = min(bk, max(8, Tk))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, (-Tq) % bq_), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, (-Tk) % bk_), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, (-Tk) % bk_), (0, 0)))
+    call = make_flash_call(B, Hq, Hkv, qp.shape[2], kp.shape[2], d, bq_, bk_,
+                           causal, scale, interpret, q.dtype, kv_len=Tk)
+    out = call(qp, kp, vp)
+    return out[:, :, :Tq]

@@ -1,0 +1,21 @@
+"""Pure-jnp attention oracle (GQA + causal)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kf = jnp.repeat(k, group, axis=1)
+    vf = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kf) / (d ** 0.5)
+    if causal:
+        qi = jnp.arange(Tq)[:, None]
+        kj = jnp.arange(Tk)[None, :]
+        s = jnp.where(qi >= kj, s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf)

@@ -1,0 +1,1 @@
+from repro.kernels.fps.ops import fps_pallas  # noqa: F401

@@ -1,0 +1,50 @@
+"""Furthest-point-sampling distance-update Pallas kernel.
+
+One FPS iteration is: ``dist = min(dist, |x - p_sel|^2)`` followed by a
+global argmax.  This kernel fuses the distance update with a per-block
+max/argmax reduction so the (N, 3) cloud is read exactly once per iteration
+(the jnp version reads it for the update and again for the argmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fps_update_kernel(pts_ref, dist_ref, sel_ref, ndist_ref, bmax_ref,
+                      barg_ref):
+    j = pl.program_id(0)
+    bn = pts_ref.shape[0]
+    d2 = jnp.zeros((bn,), jnp.float32)
+    for c in range(3):
+        d = pts_ref[:, c] - sel_ref[0, c]
+        d2 = d2 + d * d
+    nd = jnp.minimum(dist_ref[...], d2)
+    ndist_ref[...] = nd
+    arg = jnp.argmax(nd).astype(jnp.int32)
+    bmax_ref[0] = nd[arg]
+    barg_ref[0] = arg + j * bn
+
+
+def make_fps_call(n_pad: int, bn: int, interpret: bool):
+    return pl.pallas_call(
+        fps_update_kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, 3), lambda j: (j, 0)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+            pl.BlockSpec((1, 3), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad // bn,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad // bn,), jnp.int32),
+        ],
+        interpret=interpret,
+    )

@@ -1,0 +1,35 @@
+"""JIT wrapper: full FPS loop driving the fused update kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fps.kernel import make_fps_call
+
+
+@functools.partial(jax.jit, static_argnames=("m", "bn", "interpret"))
+def fps_pallas(points: jax.Array, m: int, first: int = 0, bn: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """Furthest point sampling via the fused Pallas update: (m,) indices."""
+    N = points.shape[0]
+    pad = (-N) % bn
+    pts = jnp.pad(points.astype(jnp.float32), ((0, pad), (0, 0)),
+                  constant_values=1e9)
+    n_pad = pts.shape[0]
+    call = make_fps_call(n_pad, bn, interpret)
+    # padded entries: keep dist at -inf so they are never selected
+    dist0 = jnp.where(jnp.arange(n_pad) < N, jnp.inf, -jnp.inf
+                      ).astype(jnp.float32)
+    idx0 = jnp.zeros((m,), jnp.int32).at[0].set(first)
+
+    def body(i, carry):
+        dist, idx = carry
+        sel = jax.lax.dynamic_slice(pts, (idx[i - 1], 0), (1, 3))
+        ndist, bmax, barg = call(pts, dist, sel)
+        nxt = barg[jnp.argmax(bmax)]
+        return ndist, idx.at[i].set(nxt)
+
+    _, idx = jax.lax.fori_loop(1, m, body, (dist0, idx0))
+    return idx

@@ -1,0 +1,2 @@
+"""Oracle for the FPS kernel: the core jnp implementation."""
+from repro.core.fps import farthest_point_sampling as fps_ref  # noqa: F401

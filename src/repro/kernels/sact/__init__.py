@@ -1,0 +1,1 @@
+from repro.kernels.sact.ops import sact_fused  # noqa: F401

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused SACT kernel: reuses the core staged test."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core import sact as sact_mod
+
+
+def sact_ref(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
+             use_spheres: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Dense (M, N) staged SACT: (collide bool, exit_code int32)."""
+    res = sact_mod.sact(
+        obb_center[:, None, :], obb_half[:, None, :], obb_rot[:, None, :, :],
+        aabb_center[None, :, :], aabb_half[None, :, :],
+        use_spheres=use_spheres)
+    return res.collide, res.exit_code

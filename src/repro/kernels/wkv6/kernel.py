@@ -1,0 +1,89 @@
+"""RWKV-6 (Finch) chunked recurrence Pallas kernel.
+
+Per head with key/value dim D, data-dependent per-channel decay w_t ∈ (0,1):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T S_{t-1} + (r_t · (u ⊙ k_t)) v_t^T
+
+The kernel processes chunks of L steps: the running state S lives in a VMEM
+scratch that persists across the sequential chunk grid dimension (reset when
+a new batch·head row begins), the intra-chunk term is an (L, L) masked
+matmul with pairwise decay factors, and the inter-chunk term is one (L, D) x
+(D, D) matmul.  Decays are handled in log space; every exponent is ≤ 0 by
+construction so nothing overflows.  This fusion (state never leaves VMEM) is
+the same discipline as the paper's collision OP units — see DESIGN.md §2.
+
+Inputs per block: r, k, v, logw (1, L, D); u (1, D).  Outputs: o (1, L, D)
+and the final state (1, D, D) for decode handoff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sout_ref, s_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0]            # (L, D)
+    k = k_ref[0]
+    v = v_ref[0]
+    lw = lw_ref[0]          # log decay, <= 0
+    u = u_ref[0]            # (D,)
+    S = s_ref[...]          # (D, D) f32
+    L, D = r.shape
+
+    lc = jnp.cumsum(lw, axis=0)                       # (L, D) inclusive
+    lc_prev = lc - lw                                 # exclusive cumsum
+
+    # Inter-chunk: o_t += (r_t ⊙ exp(lc_prev_t)) @ S
+    inter = (r * jnp.exp(lc_prev)) @ S                # (L, D)
+
+    # Intra-chunk: A[t, s] = Σ_d r[t,d] k[s,d] exp(lc_prev[t,d] - lc[s,d]),
+    # strictly causal (s < t); every exponent ≤ 0 for s ≤ t-1.
+    e = jnp.exp(jnp.minimum(lc_prev[:, None, :] - lc[None, :, :], 0.0))
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * e, axis=-1)        # (L, L)
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_i = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    A = jnp.where(t_i > s_i, A, 0.0)
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)                   # (L,)
+    o = inter + A @ v + bonus[:, None] * v
+
+    # State update: S' = diag(exp(lc_L)) S + Σ_s (k_s ⊙ exp(lc_L - lc_s)) v_s^T
+    lc_last = lc[-1]                                               # (D,)
+    kd = k * jnp.exp(jnp.minimum(lc_last[None, :] - lc, 0.0))      # (L, D)
+    S_new = jnp.exp(lc_last)[:, None] * S + kd.T @ v
+    s_ref[...] = S_new
+    o_ref[0] = o.astype(o_ref.dtype)
+    sout_ref[0] = S_new
+
+
+def make_wkv6_call(bh: int, T: int, L: int, D: int, interpret: bool,
+                   dtype=jnp.float32):
+    return pl.pallas_call(
+        wkv6_kernel,
+        grid=(bh, T // L),
+        in_specs=[
+            pl.BlockSpec((1, L, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, L, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, L, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, L, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, D), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, D, D), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, T, D), dtype),
+            jax.ShapeDtypeStruct((bh, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )

@@ -1,0 +1,52 @@
+"""JIT wrapper for the WKV6 chunked kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import make_wkv6_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, chunk: int = 32, interpret: bool = True
+         ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6 over (BH, T, D) inputs -> (o (BH,T,D), state (BH,D,D)).
+
+    ``logw`` is log-decay (≤ 0); ``u`` is the per-channel bonus (D,) or
+    (BH, D).  T is padded to a chunk multiple with zero k (no state effect)
+    and logw = 0 (decay 1).
+    """
+    BH, T, D = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    if u.ndim == 1:
+        u = jnp.broadcast_to(u[None, :], (1, D))
+    else:
+        u = u[:1]  # kernel broadcasts one bonus row; per-head via vmap'd call
+    call = make_wkv6_call(BH, T + pad, chunk, D, interpret, dtype=r.dtype)
+    o, s = call(r.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), logw.astype(jnp.float32),
+                u.astype(jnp.float32))
+    return o[:, :T], s
+
+
+def wkv6_heads(r, k, v, logw, u, chunk: int = 32, interpret: bool = True):
+    """Per-head bonus version: r..logw (B, H, T, D), u (H, D)."""
+    B, H, T, D = r.shape
+    fold = lambda x: x.reshape(B * H, T, D)
+    outs = []
+    states = []
+    # Group by head so each call sees a single bonus row.
+    for h in range(H):
+        o, s = wkv6(fold(r[:, h:h + 1]), fold(k[:, h:h + 1]),
+                    fold(v[:, h:h + 1]), fold(logw[:, h:h + 1]), u[h],
+                    chunk=chunk, interpret=interpret)
+        outs.append(o.reshape(B, 1, T, D))
+        states.append(s.reshape(B, 1, D, D))
+    return jnp.concatenate(outs, 1), jnp.concatenate(states, 1)

@@ -1,0 +1,35 @@
+"""Pure-jnp sequential oracle for WKV6."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+             u: jax.Array, state: jax.Array | None = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Step-by-step recurrence over (BH, T, D): the ground truth.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  o_t = r_t S_{t-1} + (r·(u⊙k)) v_t
+    """
+    BH, T, D = r.shape
+    w = jnp.exp(logw.astype(jnp.float32))
+    if u.ndim == 1:
+        u = jnp.broadcast_to(u[None, :], (BH, D))
+    S0 = (jnp.zeros((BH, D, D), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (BH, D) each
+        out = jnp.einsum("bd,bde->be", rt, S)
+        bonus = jnp.sum(rt * u * kt, -1)          # (BH,)
+        out = out + bonus[:, None] * vt
+        S = wt[:, :, None] * S + kt[:, :, None] * vt[:, None, :]
+        return S, out
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+               for x in (r, k, v, w))
+    S, o = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), S

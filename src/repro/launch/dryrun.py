@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# NOTE: the two lines above MUST run before any jax-importing module:
+# jax locks the device count at first init.  Everything else imports below.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real SPMD step function (train_step /
+prefill_step / serve_step) against ShapeDtypeStruct inputs (no allocation),
+compiles it for the production mesh, prints memory_analysis / cost_analysis,
+and records the roofline-relevant numbers to
+benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun               # all cells
+  ... --arch glm4_9b --shape train_4k --mesh single          # one cell
+  ... --force                                                # recompute
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (ARCH_REGISTRY, SHAPES, get_config,
+                                shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.parallel import sharding as shd
+from repro.roofline import analysis as ra
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _opt_config(cfg) -> opt_mod.OptConfig:
+    big = cfg.num_params > 20e9
+    return opt_mod.OptConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def _apply_overrides(cfg, overrides: dict):
+    if not overrides:
+        return cfg
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            typed[k] = v in ("1", "true", "True") if isinstance(v, str) \
+                else bool(v)
+        elif isinstance(cur, int):
+            typed[k] = int(v)
+        elif isinstance(cur, float):
+            typed[k] = float(v)
+        else:
+            typed[k] = v
+    return cfg.replace(**typed)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Lower + compile one cell; returns (compiled, cost, chips, kind)."""
+    from repro.roofline.jaxpr_cost import jaxpr_cost as jcost
+    cfg = _apply_overrides(get_config(arch), overrides or {})
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    aparams = api.abstract_params(cfg)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step, pspecs, ospecs, bspecs = train_loop.make_sharded_train_step(
+                cfg, mesh, _opt_config(cfg), shape,
+                num_microbatches=cfg.train_microbatches)
+            aopt = jax.eval_shape(
+                lambda p: opt_mod.init_opt_state(p, _opt_config(cfg)),
+                aparams)
+            abatch = api.batch_spec(cfg, shape)
+            traced = step.trace(aparams, aopt, abatch)
+        elif shape.kind == "prefill":
+            fn, pspecs, bspecs = train_loop.make_sharded_prefill(cfg, mesh,
+                                                                 shape)
+            abatch = api.batch_spec(cfg, shape)
+            traced = fn.trace(aparams, abatch)
+        else:  # decode
+            fn, pspecs, cspecs = train_loop.make_sharded_decode(cfg, mesh,
+                                                                shape)
+            acaches = api.abstract_caches(cfg, shape)
+            dspec = api.decode_input_spec(cfg, shape)
+            traced = fn.trace(aparams, dspec["token"], dspec["pos"],
+                              acaches)
+        cost = jcost(traced.jaxpr)
+        compiled = traced.lower().compile()
+    return compiled, cost, chips, shape.kind
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, force: bool,
+             out_dir: str, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag
+                                                      else "")
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": reason}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        compiled, cost, chips, kind = lower_cell(arch, shape_name,
+                                                 mesh_name == "multi",
+                                                 overrides)
+        mem = compiled.memory_analysis()
+        print(f"[{cell_id}] memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        print(f"[{cell_id}] cost_analysis(once-per-loop) "
+              f"flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}; "
+              f"jaxpr loop-aware flops={cost.flops:.3e} "
+              f"bytes={cost.bytes:.3e}")
+        terms = ra.analyze_compiled(compiled, chips, jaxpr_cost=cost)
+        mf = ra.model_flops(cfg, shape, backward=(kind == "train"))
+        rec = {
+            "cell": cell_id, "status": "ok", "arch": arch,
+            "shape": shape_name, "mesh": mesh_name, "kind": kind,
+            "chips": chips, "compile_s": time.time() - t0,
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / terms.total_flops
+                                   if terms.total_flops else 0.0),
+            **terms.as_dict(),
+        }
+    except Exception as e:  # sharding bug, OOM at compile, etc.
+        traceback.print_exc()
+        rec = {"cell": cell_id, "status": "error", "error": repr(e)[:2000],
+               "compile_s": time.time() - t0}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec.get("dominant", rec.get("error", rec.get("reason", "")))
+    print(f"[{cell_id}] {rec['status']} ({rec.get('compile_s', 0):.1f}s) "
+          f"-> {status}", flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (hillclimb variants)")
+    ap.add_argument("--tag", default="", help="suffix for variant cells")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+
+    n_dev = len(jax.devices())
+    assert n_dev == 512, f"expected 512 host devices, got {n_dev}"
+
+    archs = [args.arch] if args.arch else list(ARCH_REGISTRY)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name, args.force, args.out,
+                               overrides=overrides, tag=args.tag)
+                failures += rec["status"] == "error"
+    print(f"dry-run complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""Family-dispatching model API used by the trainer, server and dry-run.
+
+Everything is functional: ``init_params`` builds the pytree, ``make_*_fn``
+return pure functions suitable for jit/pjit.  ``abstract_params`` /
+``abstract_caches`` use jax.eval_shape so the dry-run never allocates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.models.common import dtype_of, softmax_cross_entropy
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec(key, cfg)
+    return tfm.init_lm(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill batches
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStructs for one global batch of this (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    spec = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "train":
+        spec["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), cdt)
+    if cfg.family == "encdec":
+        spec["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt)
+    return spec
+
+
+def make_loss_fn(cfg: ModelConfig, use_specs: Optional[Dict] = None
+                 ) -> Callable:
+    def loss_fn(params: Dict, batch: Dict):
+        if cfg.family == "encdec":
+            logits, _ = encdec_mod.encdec_forward(
+                params, batch["frames"], batch["tokens"], cfg,
+                use_specs=use_specs)
+            loss = softmax_cross_entropy(logits, batch["labels"])
+            return loss, {"xent": loss}
+        prefix = batch.get("patch_embeds")
+        logits, aux, _ = tfm.lm_forward(params, batch["tokens"], cfg,
+                                        prefix_embeds=prefix,
+                                        use_specs=use_specs)
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1]:]
+        loss = softmax_cross_entropy(logits, batch["labels"])
+        total = loss + AUX_LOSS_WEIGHT * aux
+        return total, {"xent": loss, "moe_aux": aux}
+    return loss_fn
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: Optional[int] = None,
+                    use_specs: Optional[Dict] = None) -> Callable:
+    """``max_len``: KV-cache capacity to reserve for subsequent decode steps
+    (defaults to prompt length + 128)."""
+    def prefill_fn(params: Dict, batch: Dict):
+        if cfg.family == "encdec":
+            logits, caches = encdec_mod.encdec_forward(
+                params, batch["frames"], batch["tokens"], cfg,
+                collect_cache=True, use_specs=use_specs)
+            return logits[:, -1], _pad_caches(caches, cfg, max_len)
+        prefix = batch.get("patch_embeds")
+        logits, _, caches = tfm.lm_forward(params, batch["tokens"], cfg,
+                                           prefix_embeds=prefix,
+                                           collect_cache=True,
+                                           use_specs=use_specs)
+        return logits[:, -1], _pad_caches(caches, cfg, max_len)
+    return prefill_fn
+
+
+def _pad_caches(caches, cfg: ModelConfig, max_len: Optional[int]):
+    """Grow self-attention KV rings so decode appends have room.
+
+    Prefill emits capacity-S caches; decode writes slot ``pos % capacity``
+    (windowed) or ``pos`` (global), so global caches must be end-padded to
+    the serving horizon.
+    """
+    if cfg.block_type == "rwkv":
+        return caches
+
+    def grow(kv):
+        S = kv["k"].shape[2]               # (L, B, S, K, hd)
+        # Windowed caches must be exactly window-sized (ring slot = p % w).
+        target = (cfg.sliding_window if cfg.sliding_window
+                  else (max_len or (S + 128)))
+        pad = max(0, target - S)
+        padder = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                       (0, 0)))
+        return {"k": padder(kv["k"]), "v": padder(kv["v"])}
+
+    out = dict(caches)
+    out["kv"] = grow(caches["kv"])
+    return out
+
+
+def make_decode_fn(cfg: ModelConfig, use_specs: Optional[Dict] = None
+                   ) -> Callable:
+    def decode_fn(params: Dict, token: jax.Array, pos: jax.Array, caches):
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_decode_step(params, token, pos, caches,
+                                                 cfg, use_specs=use_specs)
+        return tfm.lm_decode_step(params, token, pos, caches, cfg,
+                                  use_specs=use_specs)
+    return decode_fn
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeSpec):
+    """Decode-cache ShapeDtypeStructs for an (arch, decode-shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return jax.eval_shape(functools.partial(
+            encdec_mod.init_encdec_caches, cfg, B, S, S))
+    return jax.eval_shape(functools.partial(
+        tfm.init_decode_caches, cfg, B, S))
+
+
+def decode_input_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    B = shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

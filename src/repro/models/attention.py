@@ -1,0 +1,236 @@
+"""GQA attention: train/prefill (chunked online-softmax) + cached decode.
+
+Three implementations share the same math:
+  * dense      — materializes (S, S) scores; smoke-test scale only.
+  * chunked    — two-level lax.scan flash equivalent in pure jnp; this is
+                 what the dry-run lowers (bounded VMEM/HBM working set at
+                 32k+ sequence lengths).
+  * pallas     — repro.kernels.flash_attention (forward-only; serving).
+``attention_decode_partial`` exposes the (numerator, denom, max) triple used
+by the seq-sharded KV decode path (parallel/decode_attention.py) to merge
+partial softmaxes across the `model` mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, K, hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, K, hd), 0, dtype),
+        "wo": dense_init(ks[3], (H, hd, d), 0, dtype) / (2 * cfg.num_layers) ** 0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+def compute_qkv(params: Dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """x (B,S,d) -> q (B,S,H,hd), k,v (B,S,K,hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.use_rope:
+        # rope over seq axis: move head axis first
+        q = apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta
+                       ).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta
+                       ).swapaxes(1, 2)
+    return q, k, v
+
+
+def project_out(params: Dict, ctx: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def dense_attention(q, k, v, cfg: ModelConfig, causal: bool = True,
+                    q_offset: int = 0) -> jax.Array:
+    """(B,S,H,hd) x (B,T,K,hd) -> (B,S,H,hd).  Small-S path."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    qr = q.reshape(B, S, K, g, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qr, k) / (hd ** 0.5)
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    msk = _mask(qpos, kpos, causal, cfg.sliding_window)
+    s = jnp.where(msk[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return ctx.reshape(B, S, H, hd)
+
+
+def chunked_attention(q, k, v, cfg: ModelConfig, causal: bool = True,
+                      q_chunk: int = 512, k_chunk: int = 1024) -> jax.Array:
+    """Flash-style two-level scan; never materializes (S,T) scores."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+    assert S % q_chunk == 0 and T % k_chunk == 0, (S, q_chunk, T, k_chunk)
+    nq, nk = S // q_chunk, T // k_chunk
+    qr = q.reshape(B, nq, q_chunk, K, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, nk, k_chunk, K, hd).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, k_chunk, K, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / (hd ** 0.5)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc                       # qc (B,K,g,q_chunk,hd)
+        m0 = jnp.full((B, K, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, g, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((B, K, g, q_chunk, hd), jnp.float32)
+
+        def k_step(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            s = jnp.einsum("bkgqh,bkth->bkgqt", qc, kc).astype(jnp.float32)
+            s = s * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = ki * k_chunk + jnp.arange(k_chunk)[None, :]
+            msk = _mask(qpos, kpos, causal, cfg.sliding_window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bkth->bkgqh", p.astype(qc.dtype), vc)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, acc0),
+            (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # out (nq, B, K, g, q_chunk, hd) -> (B, S, H, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return out
+
+
+def _pick_chunk(n: int, target: int, floor: int = 64) -> int:
+    """Largest power-of-two divisor of n that is <= target (>= floor)."""
+    c = target
+    while c >= floor:
+        if n % c == 0:
+            return c
+        c //= 2
+    return 0
+
+
+def attention_ctx(q, k, v, cfg: ModelConfig, causal: bool = True
+                  ) -> jax.Array:
+    """Implementation dispatch.
+
+    flash (custom-VJP, O(S) residuals) whenever chunk sizes divide the
+    sequence — the production path for train_4k/prefill_32k; dense for
+    smoke-test shapes; chunked (no custom VJP) as the inference fallback.
+    """
+    S, T = q.shape[1], k.shape[1]
+    qc, kc = _pick_chunk(S, 512), _pick_chunk(T, 1024)
+    if cfg.attn_impl != "dense" and S * T > 1 << 22 and qc and kc:
+        from repro.models.flash_jnp import flash_attention_train
+        return flash_attention_train(q, k, v, causal=causal,
+                                     window=cfg.sliding_window,
+                                     q_chunk=qc, k_chunk=kc)
+    if S * T <= 1 << 22:
+        return dense_attention(q, k, v, cfg, causal)
+    return chunked_attention(q, k, v, cfg, causal,
+                             q_chunk=qc or 512, k_chunk=kc or 1024)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype
+               ) -> Dict:
+    """Per-layer KV cache; ring buffer when cfg.sliding_window > 0."""
+    L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    K, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, L, K, hd), dtype),
+        "v": jnp.zeros((batch, L, K, hd), dtype),
+    }
+
+
+def cache_update(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, cfg: ModelConfig) -> Dict:
+    """Insert one step (B,1,K,hd) at absolute position pos (RoPE already
+    applied at absolute positions, so ring order does not matter)."""
+    L = cache["k"].shape[1]
+    slot = pos % L if cfg.sliding_window else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                     (0, slot, 0, 0))
+    return {"k": k, "v": v}
+
+
+def decode_partial(q, kc, vc, valid) -> Tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """Partial attention for one decode step over a cache shard.
+
+    q (B,1,H,hd), kc/vc (B,L,K,hd), valid (B,L) bool.
+    Returns (acc (B,H,hd) f32, denom (B,H) f32, m (B,H) f32) — mergeable
+    across shards by LSE combination.
+    """
+    B, _, H, hd = q.shape
+    K = kc.shape[2]
+    g = H // K
+    qr = q.reshape(B, K, g, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qr, kc).astype(jnp.float32)
+    s = s / (hd ** 0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, -1)
+    p = jnp.exp(s - m[..., None])
+    denom = jnp.sum(p, -1)
+    acc = jnp.einsum("bkgt,btkh->bkgh", p.astype(vc.dtype), vc
+                     ).astype(jnp.float32)
+    return (acc.reshape(B, H, hd), denom.reshape(B, H), m.reshape(B, H))
+
+
+def decode_attention(q, cache: Dict, pos: jax.Array, cfg: ModelConfig
+                     ) -> jax.Array:
+    """Unsharded single-step decode attention: (B,1,H,hd)."""
+    L = cache["k"].shape[1]
+    idx = jnp.arange(L)
+    if cfg.sliding_window:
+        n_valid = jnp.minimum(pos + 1, L)
+        valid = idx[None, :] < n_valid
+    else:
+        valid = idx[None, :] <= pos
+    acc, denom, _ = decode_partial(q, cache["k"], cache["v"], valid)
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)

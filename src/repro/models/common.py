@@ -1,0 +1,153 @@
+"""Shared model building blocks: norms, init, RoPE, dtype policy.
+
+Parameters are plain nested dicts of jax arrays (pytrees) so the sharding
+engine (parallel/sharding.py) can attach PartitionSpecs by path pattern.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    std = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(key, cfg: ModelConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """Rotary embedding; x (..., S, hd), positions (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], -1).reshape(x.shape)
+    return y.astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                 # nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          z_loss: float = 0.0) -> jax.Array:
+    """Stable token-mean xent; logits (..., V) f32-upcast, labels (...).
+
+    The label pick is an iota-compare masked reduction rather than
+    take_along_axis: a gather over the vocab dim would make GSPMD
+    all-gather the (B, S, V) logits when V is model-sharded; the masked
+    reduce partitions cleanly (partial sum + all-reduce).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+              == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+def shard_hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op without a mesh.
+
+    ``spec`` entries are axis names / tuples / None; axes absent from the
+    ambient mesh are dropped so the same model code runs in single-device
+    tests and under the production meshes.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    names = set(getattr(mesh, "axis_names", ()) or ())
+    if not names:
+        return x
+    sizes = dict(getattr(mesh, "shape", {}))
+
+    def keep(a, dim):
+        if a is None:
+            return None
+        axes = (a,) if isinstance(a, str) else tuple(a)
+        kept = tuple(x_ for x_ in axes if x_ in names)
+        if not kept:
+            return None
+        total = 1
+        for x_ in kept:
+            total *= sizes.get(x_, 1)
+        if dim % total != 0:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    from jax.sharding import PartitionSpec as P
+    clean = [keep(a, x.shape[i]) for i, a in enumerate(spec)]
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+BATCH_AXES = ("pod", "data")
+
+
+def shard_hint_spec(x: jax.Array, spec) -> jax.Array:
+    """with_sharding_constraint from an explicit PartitionSpec (degrades to a
+    no-op without an ambient mesh; drops axes that don't divide; the string
+    "skip" sentinel means no hint at all)."""
+    if spec is None or (isinstance(spec, str) and spec == "skip"):
+        return x
+    return shard_hint(x, *tuple(spec) + (None,) * (x.ndim - len(spec)))

@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: callers provide
+precomputed frame embeddings (B, S_enc, d_model).  Encoder = bidirectional
+attention blocks; decoder = causal self-attention + cross-attention + MLP.
+Decode caches: per-layer self-KV ring + cross-KV computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.common import (BATCH_AXES, apply_norm, dtype_of,
+                                 embed_init, init_norm, shard_hint,
+                                 shard_hint_spec)
+
+
+def _use(layer_params, use_specs, key):
+    if use_specs is None:
+        return layer_params
+    return jax.tree.map(shard_hint_spec, layer_params, use_specs[key])
+
+
+def init_enc_block(key, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": init_norm(ks[0], cfg, dtype),
+        "attn": attn.init_attention(ks[1], cfg, dtype),
+        "ln2": init_norm(ks[2], cfg, dtype),
+        "ffn": ffn_mod.init_mlp(ks[3], cfg, dtype),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": init_norm(ks[0], cfg, dtype),
+        "self_attn": attn.init_attention(ks[1], cfg, dtype),
+        "ln_x": init_norm(ks[2], cfg, dtype),
+        "cross_attn": attn.init_attention(ks[3], cfg, dtype),
+        "ln2": init_norm(ks[4], cfg, dtype),
+        "ffn": ffn_mod.init_mlp(ks[5], cfg, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg, dtype)
+                               )(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg, dtype)
+                               )(dec_keys),
+        "ln_enc": init_norm(ks[3], cfg, dtype),
+        "ln_f": init_norm(ks[3], cfg, dtype),
+        "lm_head": embed_init(ks[4], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ModelConfig,
+           use_specs: Dict | None = None) -> jax.Array:
+    """Stub-frontend encoder: frames (B, S_enc, d) -> states (B, S_enc, d)."""
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x = shard_hint(x, BATCH_AXES, None, None)
+
+    def body(h, p):
+        h = shard_hint(h, BATCH_AXES, None, None)   # pin loop-state sharding
+        p = _use(p, use_specs, "enc_blocks")
+        hn = apply_norm(p["ln1"], h, cfg)
+        q, k, v = attn.compute_qkv(p["attn"], hn, cfg, positions)
+        h = h + attn.project_out(p["attn"],
+                                 attn.attention_ctx(q, k, v, cfg,
+                                                    causal=False))
+        hn = apply_norm(p["ln2"], h, cfg)
+        return h + ffn_mod.apply_mlp(p["ffn"], hn, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return apply_norm(params["ln_enc"], x, cfg)
+
+
+def _dec_block_seq(p, h, enc, cfg, positions, enc_positions, collect):
+    h = shard_hint(h, BATCH_AXES, None, None)       # pin loop-state sharding
+    hn = apply_norm(p["ln1"], h, cfg)
+    q, k, v = attn.compute_qkv(p["self_attn"], hn, cfg, positions)
+    h = h + attn.project_out(p["self_attn"],
+                             attn.attention_ctx(q, k, v, cfg, causal=True))
+    hn = apply_norm(p["ln_x"], h, cfg)
+    qx, _, _ = attn.compute_qkv(p["cross_attn"], hn, cfg, positions)
+    _, kx, vx = attn.compute_qkv(p["cross_attn"], enc, cfg, enc_positions)
+    h = h + attn.project_out(p["cross_attn"],
+                             attn.attention_ctx(qx, kx, vx, cfg,
+                                                causal=False))
+    hn = apply_norm(p["ln2"], h, cfg)
+    h = h + ffn_mod.apply_mlp(p["ffn"], hn, cfg)
+    cache = None
+    if collect:
+        cache = {"kv": {"k": k, "v": v}, "xk": kx, "xv": vx}
+    return h, cache
+
+
+def encdec_forward(params: Dict, frames: jax.Array, tokens: jax.Array,
+                   cfg: ModelConfig, collect_cache: bool = False,
+                   use_specs: Dict | None = None):
+    """Full teacher-forced forward: returns (logits, caches|None)."""
+    enc = encode(params, frames, cfg, use_specs)
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    enc_positions = jnp.arange(enc.shape[1])
+
+    def body(h, p):
+        p = _use(p, use_specs, "dec_blocks")
+        h, cache = _dec_block_seq(p, h, enc, cfg, positions, enc_positions,
+                                  collect_cache)
+        return h, cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = shard_hint(logits, BATCH_AXES, None, "model")
+    return logits, caches
+
+
+def encdec_decode_step(params: Dict, token: jax.Array, pos: jax.Array,
+                       caches: Dict, cfg: ModelConfig,
+                       use_specs: Dict | None = None):
+    """One decoder token with self-KV ring + fixed cross-KV caches."""
+    x = params["embed"][token[:, None]].astype(dtype_of(cfg.compute_dtype))
+
+    def body(h, layer):
+        p, cache = layer
+        p = _use(p, use_specs, "dec_blocks")
+        hn = apply_norm(p["ln1"], h, cfg)
+        positions = pos[None]
+        q, k, v = attn.compute_qkv(p["self_attn"], hn, cfg, positions)
+        kv = attn.cache_update(cache["kv"], k, v, pos, cfg)
+        h = h + attn.project_out(p["self_attn"],
+                                 attn.decode_attention(q, kv, pos, cfg))
+        hn = apply_norm(p["ln_x"], h, cfg)
+        qx, _, _ = attn.compute_qkv(p["cross_attn"], hn, cfg, positions)
+        Lx = cache["xk"].shape[1]
+        valid = jnp.ones((h.shape[0], Lx), bool)
+        acc, den, _ = attn.decode_partial(qx, cache["xk"], cache["xv"],
+                                          valid)
+        ctx = (acc / jnp.maximum(den, 1e-30)[..., None])[:, None]
+        h = h + attn.project_out(p["cross_attn"], ctx.astype(h.dtype))
+        hn = apply_norm(p["ln2"], h, cfg)
+        h = h + ffn_mod.apply_mlp(p["ffn"], hn, cfg)
+        return h, dict(cache, kv=kv)
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits[:, 0], new_caches
+
+
+def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       enc_len: int):
+    dtype = dtype_of(cfg.compute_dtype)
+    L = cfg.num_layers
+    K, hd = cfg.num_kv_heads, cfg.hd
+    one = {
+        "kv": attn.init_cache(cfg, batch, max_len, dtype),
+        "xk": jnp.zeros((batch, enc_len, K, hd), dtype),
+        "xv": jnp.zeros((batch, enc_len, K, hd), dtype),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), one)

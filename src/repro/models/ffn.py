@@ -1,0 +1,152 @@
+"""Feed-forward layers: dense MLP variants + capacity-factor MoE.
+
+MoE dispatch is the standard scatter-to-buffers formulation: tokens route to
+their top-k experts, each expert owns a (capacity, d) buffer, overflow drops
+(capacity factor configurable).  Under the production mesh the expert axis is
+sharded over `model` (EP) so the dispatch reshard lowers to an all-to-all —
+see parallel/sharding.py.  arctic-480b adds a parallel dense residual branch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    if cfg.mlp_act == "swiglu":
+        return {"w_gate": dense_init(ks[0], (d, f), 0, dtype),
+                "w_up": dense_init(ks[1], (d, f), 0, dtype),
+                "w_down": dense_init(ks[2], (f, d), 0, dtype) * out_scale}
+    return {"w_in": dense_init(ks[0], (d, f), 0, dtype),
+            "w_out": dense_init(ks[1], (f, d), 0, dtype) * out_scale}
+
+
+def apply_mlp(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+        h = h * jnp.einsum("...d,df->...f", x, params["w_up"])
+        return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    act = activation(cfg.mlp_act)
+    h = act(jnp.einsum("...d,df->...f", x, params["w_in"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    p = {"router": dense_init(ks[0], (d, E), 0, jnp.float32)}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = dense_init(ks[1], (E, d, f), 1, dtype)
+        p["w_up"] = dense_init(ks[2], (E, d, f), 1, dtype)
+        p["w_down"] = dense_init(ks[3], (E, f, d), 1, dtype) * out_scale
+    else:
+        p["w_in"] = dense_init(ks[1], (E, d, f), 1, dtype)
+        p["w_out"] = dense_init(ks[2], (E, f, d), 1, dtype) * out_scale
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[4], cfg, dtype)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    cap = int(math.ceil(cfg.moe_capacity_factor * num_tokens
+                        * cfg.experts_per_token / cfg.num_experts))
+    return max(8, min(cap, num_tokens))
+
+
+def apply_moe(params: Dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar).
+
+    Per-group dispatch (group = batch element, Switch-Transformer style):
+    the expert-position cumsum runs *within* each group so it never crosses
+    data shards; buffers are (B, E, C, d) with B over `data` and E over
+    `model`, and the token->buffer reshard lowers to an all-to-all.
+
+    Decode (S == 1): per-element groups waste E·C buffer rows per token
+    (useful-FLOPs ratio ~0 for arctic top-2/128).  With
+    cfg.moe_batch_group_decode the whole batch becomes ONE group so the
+    capacity is shared across tokens — the (T, E) cumsum at decode scale is
+    trivial.
+    """
+    if x.shape[1] == 1 and x.shape[0] > 1 and cfg.moe_batch_group_decode:
+        B = x.shape[0]
+        y, aux = apply_moe(params, x.reshape(1, B, -1),
+                           cfg.replace(moe_batch_group_decode=False))
+        return y.reshape(B, 1, -1), aux
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = moe_capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])                     # (B, S, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch-style).
+    me = jnp.mean(probs, (0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), (0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # Buffer position of each (token, slot): one-hot cumsum per group.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)     # (B, S, k, E)
+    flatoh = onehot.reshape(B, S * k, E)
+    pos_in_e = jnp.cumsum(flatoh, 1) - flatoh                 # (B, S*k, E)
+    pos = jnp.sum(pos_in_e * flatoh, -1).reshape(B, S, k)
+    keep = pos < C
+    dest = jnp.where(keep, gate_idx * C + pos, E * C)         # (B, S, k)
+
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    src = jnp.broadcast_to(x[:, :, None, :], (B, S, k, d)
+                           ).reshape(B, S * k, d)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+    buf = buf.at[bidx, dest.reshape(B, S * k)].set(src, mode="drop")
+    buf = buf[:, :E * C].reshape(B, E, C, d)
+
+    # Expert computation (E sharded over `model` under the mesh).
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", buf, params["w_up"])
+        out = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    else:
+        act = activation(cfg.mlp_act)
+        h = act(jnp.einsum("becd,edf->becf", buf, params["w_in"]))
+        out = jnp.einsum("becf,efd->becd", h, params["w_out"])
+
+    flat_out = jnp.concatenate(
+        [out.reshape(B, E * C, d), jnp.zeros((B, 1, d), out.dtype)], 1)
+    gathered = jnp.take_along_axis(
+        flat_out, dest.reshape(B, S * k)[..., None], axis=1
+    ).reshape(B, S, k, d)
+    y = jnp.sum(gathered * gate_vals[..., None].astype(x.dtype), 2)
+    if cfg.dense_residual:
+        y = y + apply_mlp(params["dense"], x, cfg)
+    return y, aux
+
+
+def init_ffn(key, cfg: ModelConfig, dtype) -> Dict:
+    if cfg.num_experts:
+        return init_moe(key, cfg, dtype)
+    return init_mlp(key, cfg, dtype)
+
+
+def apply_ffn(params: Dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.num_experts:
+        return apply_moe(params, x, cfg)
+    return apply_mlp(params, x, cfg), jnp.zeros((), jnp.float32)

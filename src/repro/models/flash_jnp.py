@@ -1,0 +1,158 @@
+"""Memory-optimal training attention: chunked online-softmax with a
+custom VJP (FlashAttention recomputation), in pure jnp.
+
+Residuals are only (q, k, v, o, lse): O(B·S·H·hd).  The backward pass
+recomputes P = exp(S - lse) blockwise, so neither forward nor backward ever
+materializes an (S, S) score tensor in HBM — this is what makes the 32k
+train/prefill cells fit 16 GiB/chip (see EXPERIMENTS.md §Perf for the
+before/after).  GQA layout: q (B,K,g,S,hd), k/v (B,K,S,hd).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blk_mask(qi, ki, q_chunk, k_chunk, causal, window):
+    qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+    kpos = ki * k_chunk + jnp.arange(k_chunk)[None, :]
+    m = jnp.ones((q_chunk, k_chunk), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window:
+        m &= (qpos - kpos) < window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_mha(q, k, v, causal: bool, window: int, q_chunk: int,
+              k_chunk: int):
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, q_chunk, k_chunk)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_chunk, k_chunk):
+    B, K, g, S, hd = q.shape
+    T = k.shape[2]
+    nq, nk = S // q_chunk, T // k_chunk
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(B, K, g, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    kr = k.reshape(B, K, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vr = v.reshape(B, K, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        m0 = jnp.full((B, K, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, g, q_chunk, hd), jnp.float32)
+
+        def k_step(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            s = jnp.einsum("bkgqh,bkth->bkgqt", qc, kc
+                           ).astype(jnp.float32) * scale
+            s = jnp.where(_blk_mask(qi, ki, q_chunk, k_chunk, causal,
+                                    window)[None, None, None], s, NEG_INF)
+            mn = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - mn[..., None])
+            alpha = jnp.exp(m - mn)
+            l = l * alpha + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bkth->bkgqh", p.astype(vc.dtype), vc)
+            return (mn, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kr, vr))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, (o, lse)
+
+    _, (o, lse) = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    o = o.transpose(1, 2, 3, 0, 4, 5).reshape(B, K, g, S, hd)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(B, K, g, S)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, k_chunk):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, q_chunk, k_chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, q_chunk, k_chunk, res, do):
+    q, k, v, o, lse = res
+    B, K, g, S, hd = q.shape
+    T = k.shape[2]
+    nq, nk = S // q_chunk, T // k_chunk
+    scale = 1.0 / (hd ** 0.5)
+    # delta = rowsum(do * o)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+
+    qr = q.reshape(B, K, g, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    dor = do.reshape(B, K, g, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    lr = lse.reshape(B, K, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    dr = delta.reshape(B, K, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    kr = k.reshape(B, K, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vr = v.reshape(B, K, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(carry, xs):
+        dk_acc, dv_acc = carry                        # (nk,B,K,ck,hd) f32
+        qi, qc, doc, lc, dc = xs
+
+        def k_step(dq_acc, ki_kc):
+            ki, kc, vc, dk_a, dv_a = ki_kc
+            s = jnp.einsum("bkgqh,bkth->bkgqt", qc, kc
+                           ).astype(jnp.float32) * scale
+            msk = _blk_mask(qi, ki, q_chunk, k_chunk, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lc[..., None])            # (B,K,g,qc,kc)
+            dp = jnp.einsum("bkgqh,bkth->bkgqt", doc.astype(jnp.float32),
+                            vc.astype(jnp.float32))
+            ds = p * (dp - dc[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqt,bkth->bkgqh", ds,
+                                         kc.astype(jnp.float32))
+            dk_a = dk_a + jnp.einsum("bkgqt,bkgqh->bkth", ds,
+                                     qc.astype(jnp.float32))
+            dv_a = dv_a + jnp.einsum(
+                "bkgqt,bkgqh->bkth", p,
+                doc.astype(jnp.float32))
+            return dq_acc, (dk_a, dv_a)
+
+        dq0 = jnp.zeros((B, K, g, q_chunk, hd), jnp.float32)
+        dq, (dk_new, dv_new) = jax.lax.scan(
+            k_step, dq0, (jnp.arange(nk), kr, vr, dk_acc, dv_acc))
+        return (dk_new, dv_new), dq
+
+    dk0 = jnp.zeros((nk, B, K, k_chunk, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, B, K, k_chunk, hd), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(q_step, (dk0, dv0),
+                                (jnp.arange(nq), qr, dor, lr, dr))
+    dq = dq.transpose(1, 2, 3, 0, 4, 5).reshape(B, K, g, S, hd
+                                                ).astype(q.dtype)
+    dk = dk.transpose(1, 2, 0, 3, 4).reshape(B, K, T, hd).astype(k.dtype)
+    dv = dv.transpose(1, 2, 0, 3, 4).reshape(B, K, T, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_train(q, k, v, causal: bool = True, window: int = 0,
+                          q_chunk: int = 512, k_chunk: int = 1024
+                          ) -> jax.Array:
+    """(B,S,H,hd) x (B,T,K,hd) GQA API matching attention.dense_attention."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+    assert S % q_chunk == 0 and T % k_chunk == 0
+    qr = q.reshape(B, S, K, g, hd).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+    o = flash_mha(qr, kr, vr, causal, window, q_chunk, k_chunk)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)

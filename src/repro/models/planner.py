@@ -1,0 +1,83 @@
+"""MpiNet-lite: neural motion planner = PointNet++ encoder + MLP policy.
+
+Predicts the next joint-space delta given (point-cloud feature, current
+config, goal config); rolled out autoregressively and *always* validated by
+the explicit collision gate (core/pipeline.py) — the paper's safety argument
+(§II-B): neural planners must be paired with explicit collision detection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import NUM_LINKS
+from repro.models.common import dense_init
+from repro.models.pointnet import init_pointnet, pointnet_encode
+
+
+def init_planner(key, feat_dim: int = 256, hidden: int = 512,
+                 widen: int = 1, dtype=jnp.float32) -> Dict:
+    """widen > 1 scales the MLP for the ~100M-param driver run."""
+    ks = jax.random.split(key, 5)
+    h = hidden * widen
+    d_in = feat_dim + 2 * NUM_LINKS
+    return {
+        "pointnet": init_pointnet(ks[0], feat_dim, dtype),
+        "fc1": {"w": dense_init(ks[1], (d_in, h), 0, dtype),
+                "b": jnp.zeros((h,), dtype)},
+        "fc2": {"w": dense_init(ks[2], (h, h), 0, dtype),
+                "b": jnp.zeros((h,), dtype)},
+        "fc3": {"w": dense_init(ks[3], (h, h), 0, dtype),
+                "b": jnp.zeros((h,), dtype)},
+        "out": {"w": dense_init(ks[4], (h, NUM_LINKS), 0, dtype) * 0.1,
+                "b": jnp.zeros((NUM_LINKS,), dtype)},
+    }
+
+
+def planner_apply(params: Dict, cloud_feat: jax.Array, q: jax.Array,
+                  goal: jax.Array) -> jax.Array:
+    """(B,F), (B,7), (B,7) -> predicted delta-q (B,7)."""
+    x = jnp.concatenate([cloud_feat, q, goal], -1)
+    for name in ("fc1", "fc2", "fc3"):
+        x = jax.nn.relu(jnp.einsum("bi,io->bo", x, params[name]["w"])
+                        + params[name]["b"])
+    return jnp.tanh(jnp.einsum("bi,io->bo", x, params["out"]["w"])
+                    + params["out"]["b"]) * 0.4
+
+
+def encode_cloud(params: Dict, cloud: jax.Array, sampling: str = "fps",
+                 key: Optional[jax.Array] = None) -> jax.Array:
+    return pointnet_encode(params["pointnet"], cloud, sampling, key)
+
+
+def planner_loss(params: Dict, batch: Dict, sampling: str = "fps",
+                 key: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Behaviour cloning: match expert delta on (cloud, q, goal) tuples."""
+    feat = encode_cloud(params, batch["cloud"], sampling, key)
+    pred = planner_apply(params, feat, batch["q"], batch["goal"])
+    mse = jnp.mean(jnp.square(pred - batch["expert_delta"]))
+    return mse, {"mse": mse}
+
+
+def rollout(params: Dict, cloud: jax.Array, q0: jax.Array, goal: jax.Array,
+            num_steps: int, sampling: str = "fps",
+            key: Optional[jax.Array] = None) -> jax.Array:
+    """Autoregressive plan: returns waypoints (B, num_steps+1, 7).
+
+    The cloud feature is encoded once per plan (static scene assumption,
+    same as MpiNet).
+    """
+    feat = encode_cloud(params, cloud, sampling, key)
+
+    def step(q, _):
+        dq = planner_apply(params, feat, q, goal)
+        # snap toward goal when close (MpiNet-style termination smoothing)
+        dist = jnp.linalg.norm(goal - q, axis=-1, keepdims=True)
+        dq = jnp.where(dist < 0.4, goal - q, dq)
+        return q + dq, q + dq
+
+    _, traj = jax.lax.scan(step, q0, None, length=num_steps)
+    traj = jnp.moveaxis(traj, 0, 1)                    # (B, T, 7)
+    return jnp.concatenate([q0[:, None], traj], 1)

@@ -1,0 +1,96 @@
+"""PointNet++ set-abstraction backbone (MpiNet's point-cloud encoder).
+
+Sampling uses FPS or random selection (the paper's Fig. 9 tradeoff) and
+grouping uses ball query — the two kernels RoboGPU accelerates (§IV).  The
+implementations are the differentiable jnp paths; the octree/kernel variants
+in core/ and kernels/ are drop-in for serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ballquery import ball_query_ref
+from repro.core.fps import farthest_point_sampling, random_sampling
+from repro.models.common import dense_init
+
+
+def init_sa_layer(key, c_in: int, c_out: int, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    h = c_out
+    return {
+        "w1": dense_init(ks[0], (c_in + 3, h), 0, dtype),
+        "b1": jnp.zeros((h,), dtype),
+        "w2": dense_init(ks[1], (h, c_out), 0, dtype),
+        "b2": jnp.zeros((c_out,), dtype),
+    }
+
+
+def set_abstraction(params: Dict, xyz: jax.Array, feats: Optional[jax.Array],
+                    n_centers: int, radius: float, k: int,
+                    sampling: str = "fps",
+                    key: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(B,N,3), (B,N,C)|None -> (centers (B,M,3), feats (B,M,C'))."""
+    B, N, _ = xyz.shape
+
+    def sample_one(pts, k_):
+        if sampling == "fps":
+            return farthest_point_sampling(pts, n_centers)
+        return random_sampling(k_, N, n_centers)
+
+    keys = (jax.random.split(key, B) if key is not None
+            else jnp.zeros((B, 2), jnp.uint32))
+    cidx = jax.vmap(sample_one)(xyz, keys)                    # (B, M)
+    centers = jnp.take_along_axis(xyz, cidx[..., None], 1)    # (B, M, 3)
+
+    def group_one(pts, ctr):
+        idx, cnt = ball_query_ref(pts, ctr, radius, k)        # (M,k),(M,)
+        safe = jnp.maximum(idx, 0)
+        valid = idx >= 0
+        return safe, valid
+
+    nidx, nvalid = jax.vmap(group_one)(xyz, centers)          # (B,M,k)
+    ngb_xyz = jax.vmap(lambda p, i: p[i])(xyz, nidx)          # (B,M,k,3)
+    rel = ngb_xyz - centers[:, :, None, :]
+    if feats is not None:
+        ngb_f = jax.vmap(lambda f, i: f[i])(feats, nidx)      # (B,M,k,C)
+        g = jnp.concatenate([rel, ngb_f], -1)
+    else:
+        g = rel
+    h = jax.nn.relu(jnp.einsum("bmkc,ch->bmkh", g, params["w1"])
+                    + params["b1"])
+    h = jax.nn.relu(jnp.einsum("bmkh,ho->bmko", h, params["w2"])
+                    + params["b2"])
+    h = jnp.where(nvalid[..., None], h, -jnp.inf)
+    pooled = jnp.max(h, axis=2)
+    pooled = jnp.where(jnp.isfinite(pooled), pooled, 0.0)     # empty balls
+    return centers, pooled
+
+
+def init_pointnet(key, c_out: int = 256, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "sa1": init_sa_layer(ks[0], 0, 64, dtype),
+        "sa2": init_sa_layer(ks[1], 64, 128, dtype),
+        "sa3": init_sa_layer(ks[2], 128, c_out, dtype),
+    }
+
+
+def pointnet_encode(params: Dict, xyz: jax.Array, sampling: str = "fps",
+                    key: Optional[jax.Array] = None,
+                    n1: int = 256, n2: int = 64, n3: int = 16,
+                    r1: float = 0.1, r2: float = 0.25, r3: float = 0.6
+                    ) -> jax.Array:
+    """(B, N, 3) point cloud -> (B, C) global feature."""
+    ks = jax.random.split(key, 3) if key is not None else [None] * 3
+    c1, f1 = set_abstraction(params["sa1"], xyz, None, n1, r1, 16,
+                             sampling, ks[0])
+    c2, f2 = set_abstraction(params["sa2"], c1, f1, n2, r2, 16,
+                             sampling, ks[1])
+    c3, f3 = set_abstraction(params["sa3"], c2, f2, n3, r3, 8,
+                             sampling, ks[2])
+    return jnp.max(f3, axis=1)

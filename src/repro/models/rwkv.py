@@ -1,0 +1,135 @@
+"""RWKV-6 (Finch) blocks: data-dependent-decay time mix + channel mix.
+
+Time-mix uses the WKV6 recurrence (kernels/wkv6 chunked Pallas kernel or the
+jnp scan reference — selectable); decode carries O(1) state per layer:
+(wkv state (B,H,D,D), token-shift state (B,d) x2).  The decay is
+data-dependent: logw_t = -exp(w0 + x_t W_d), per channel, matching Finch's
+"data-dependent decay" headline feature (low-rank refinements dropped for
+clarity; documented deviation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rmsnorm
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    H = cfg.num_heads if cfg.num_heads > 0 else d // 64
+    D = d // H
+    f = cfg.d_ff
+    ks = jax.random.split(key, 10)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "tm_norm": {"scale": jnp.ones((d,), dtype)},
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], (d, d), 0, dtype),
+        "wk": dense_init(ks[1], (d, d), 0, dtype),
+        "wv": dense_init(ks[2], (d, d), 0, dtype),
+        "wd": dense_init(ks[3], (d, d), 0, dtype) * 0.1,
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "u": dense_init(ks[4], (H, D), 0, jnp.float32),
+        "wo": dense_init(ks[5], (d, d), 0, dtype) * out_scale,
+        "ln_x": {"scale": jnp.ones((d,), dtype)},
+        "cm_norm": {"scale": jnp.ones((d,), dtype)},
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+        "ck": dense_init(ks[6], (d, f), 0, dtype),
+        "cv": dense_init(ks[7], (f, d), 0, dtype) * out_scale,
+        "cr": dense_init(ks[8], (d, d), 0, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Shifted sequence: y_t = x_{t-1}; first step uses `prev` (or zeros)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], 1)
+
+
+def _time_mix_inputs(params, x, shifted, cfg):
+    d = x.shape[-1]
+    H = cfg.num_heads if cfg.num_heads > 0 else d // 64
+    D = d // H
+    mix = lambda m: x * params[m] + shifted * (1.0 - params[m])
+    r = jnp.einsum("bsd,de->bse", mix("mix_r"), params["wr"])
+    k = jnp.einsum("bsd,de->bse", mix("mix_k"), params["wk"])
+    v = jnp.einsum("bsd,de->bse", mix("mix_v"), params["wv"])
+    logw = -jnp.exp(params["w0"]
+                    + jnp.einsum("bsd,de->bse", mix("mix_w"),
+                                 params["wd"]).astype(jnp.float32))
+    B, S = x.shape[:2]
+    shp = lambda a: a.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    return shp(r), shp(k), shp(v), shp(logw), H, D
+
+
+def rwkv_time_mix(params: Dict, x: jax.Array, cfg: ModelConfig,
+                  state: Dict | None = None, use_kernel: bool = False
+                  ) -> Tuple[jax.Array, Dict]:
+    """Sequence form. x (B,S,d) -> (y (B,S,d), state for decode handoff)."""
+    from repro.kernels.wkv6.ref import wkv6_ref
+    B, S, d = x.shape
+    xn = rmsnorm(x, params["tm_norm"]["scale"])
+    prev = None if state is None else state["tm_shift"]
+    shifted = _token_shift(xn, prev)
+    r, k, v, logw, H, D = _time_mix_inputs(params, xn, shifted, cfg)
+    fold = lambda a: a.reshape(B * H, S, D)
+    u = params["u"]                                        # (H, D)
+    uexp = jnp.repeat(u[None], B, 0).reshape(B * H, D)
+    s0 = None if state is None else state["wkv"].reshape(B * H, D, D)
+    if use_kernel:
+        from repro.kernels.wkv6.ops import wkv6_heads
+        o, s = wkv6_heads(r.reshape(B, H, S, D), k.reshape(B, H, S, D),
+                          v.reshape(B, H, S, D), logw.reshape(B, H, S, D),
+                          u)
+        o = o.reshape(B * H, S, D)
+        s = s.reshape(B * H, D, D)
+    else:
+        o, s = wkv6_ref(fold(r), fold(k), fold(v), fold(logw), uexp, s0)
+    y = o.reshape(B, H, S, D).transpose(0, 2, 1, 3).reshape(B, S, d)
+    y = rmsnorm(y, params["ln_x"]["scale"])
+    y = jnp.einsum("bsd,de->bse", y, params["wo"])
+    new_state = {"wkv": s.reshape(B, H, D, D), "tm_shift": xn[:, -1]}
+    return y, new_state
+
+
+def rwkv_channel_mix(params: Dict, x: jax.Array, cfg: ModelConfig,
+                     state: Dict | None = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    xn = rmsnorm(x, params["cm_norm"]["scale"])
+    prev = None if state is None else state["cm_shift"]
+    shifted = _token_shift(xn, prev)
+    mixed = xn * params["cmix_k"] + shifted * (1.0 - params["cmix_k"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", mixed,
+                                           params["ck"])))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mixed, params["cr"]))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, params["cv"]), xn[:, -1]
+
+
+def rwkv_block(params: Dict, x: jax.Array, cfg: ModelConfig,
+               state: Dict | None = None, use_kernel: bool = False
+               ) -> Tuple[jax.Array, Dict]:
+    tm, tm_state = rwkv_time_mix(params, x, cfg, state, use_kernel)
+    x = x + tm
+    cm, cm_shift = rwkv_channel_mix(params, x, cfg, state)
+    x = x + cm
+    new_state = dict(tm_state, cm_shift=cm_shift)
+    return x, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d = cfg.d_model
+    H = cfg.num_heads if cfg.num_heads > 0 else d // 64
+    D = d // H
+    return {"wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+            "tm_shift": jnp.zeros((batch, d), dtype),
+            "cm_shift": jnp.zeros((batch, d), dtype)}

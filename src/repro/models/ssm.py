@@ -1,0 +1,85 @@
+"""Selective state-space (Mamba-style) branch for the hymba hybrid layers.
+
+Minimal selective SSM: per-channel input-dependent dt/B/C, diagonal A.
+  h_t = exp(dt_t * A) ⊙ h_{t-1} + dt_t * (x_t ⊗ B_t)
+  y_t = h_t · C_t + D ⊙ x_t
+Sequence form uses lax.scan (what the dry-run lowers); ``ssm_step`` is the
+O(1)-state decode form used by long_500k serving.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    n = cfg.ssm_state
+    di = cfg.ssm_expand * d // 2          # inner width (keep params modest)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, di), 0, dtype),
+        "w_z": dense_init(ks[1], (d, di), 0, dtype),
+        "w_bc": dense_init(ks[2], (di, 2 * n), 0, dtype),
+        "w_dt": dense_init(ks[3], (di, 1), 0, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(n), n)[None, :]
+                         * jnp.ones((di, 1))).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[5], (di, d), 0, dtype) / (2 * cfg.num_layers) ** 0.5,
+    }
+
+
+def _gates(params, x):
+    xi = jnp.einsum("...d,de->...e", x, params["w_in"])        # (..., di)
+    z = jax.nn.silu(jnp.einsum("...d,de->...e", x, params["w_z"]))
+    bc = jnp.einsum("...e,en->...n", xi, params["w_bc"])
+    n = bc.shape[-1] // 2
+    B, C = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(jnp.einsum("...e,eo->...o", xi, params["w_dt"]))
+    return xi, z, B, C, dt
+
+
+def ssm_scan(params: Dict, x: jax.Array, cfg: ModelConfig,
+             state: jax.Array | None = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (y (B,S,d), final state (B,di,n))."""
+    Bb, S, d = x.shape
+    xi, z, Bm, Cm, dt = _gates(params, x)
+    di = xi.shape[-1]
+    n = Bm.shape[-1]
+    A = -jnp.exp(params["a_log"])                              # (di, n)
+    h0 = (jnp.zeros((Bb, di, n), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(h, ins):
+        xt, Bt, Ct, dtt = ins                                  # (Bb, ·)
+        decay = jnp.exp(dtt[:, None, None] * A[None])          # (Bb, di, n)
+        h = decay * h + (dtt[:, None] * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, Ct)
+        return h, y
+
+    ins = tuple(jnp.moveaxis(a, 1, 0) for a in
+                (xi.astype(jnp.float32), Bm.astype(jnp.float32),
+                 Cm.astype(jnp.float32), dt[..., 0].astype(jnp.float32)))
+    h, ys = jax.lax.scan(step, h0, ins)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                 # (Bb,S,di)
+    y = (y + params["d_skip"] * xi) * z
+    return jnp.einsum("...e,ed->...d", y, params["w_out"]), h
+
+
+def ssm_step(params: Dict, x: jax.Array, state: jax.Array,
+             cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """One decode step: x (B,1,d), state (B,di,n) -> (y (B,1,d), state)."""
+    xi, z, Bm, Cm, dt = _gates(params, x[:, 0])
+    A = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt[..., None].astype(jnp.float32) * A[None])
+    h = decay * state + (dt * xi).astype(jnp.float32)[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("ben,bn->be", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = (y + params["d_skip"] * xi) * z
+    return jnp.einsum("be,ed->bd", y, params["w_out"])[:, None], h

@@ -1,0 +1,256 @@
+"""Decoder-only LM assembly: scan-over-layers, remat, train/prefill/decode.
+
+One homogeneous block stack per architecture; the block body dispatches on
+``cfg.block_type``:
+  attn    — pre-norm GQA attention + FFN (dense or MoE)
+  hybrid  — hymba: parallel attention + SSM branches, mean-fused
+  rwkv    — RWKV-6 time mix + channel mix (attention-free)
+
+Layer parameters are stacked (leading L axis) and applied with ``lax.scan``
+so the lowered HLO stays O(1) in depth — essential for compiling 96-layer
+models for 512 devices on this container, and the right structure on real
+TPUs too.  ``cfg.remat`` wraps the scan body in jax.checkpoint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (BATCH_AXES, apply_norm, dtype_of,
+                                 embed_init, init_norm, shard_hint,
+                                 shard_hint_spec)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype) -> Dict:
+    if cfg.block_type == "rwkv":
+        return rwkv_mod.init_rwkv_block(key, cfg, dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(ks[0], cfg, dtype),
+        "attn": attn.init_attention(ks[1], cfg, dtype),
+        "ln2": init_norm(ks[2], cfg, dtype),
+        "ffn": ffn_mod.init_ffn(ks[3], cfg, dtype),
+    }
+    if cfg.block_type == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(jax.random.fold_in(key, 7), cfg, dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(ks[1], (cfg.vocab_size, cfg.d_model), dtype),
+        "blocks": blocks,
+        "ln_f": init_norm(ks[2], cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block apply (sequence form: train & prefill)
+# ---------------------------------------------------------------------------
+
+def block_seq(p: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+              collect_cache: bool, rwkv_kernel: bool = False):
+    """One block over a full sequence.  Returns (x, aux, cache_or_None).
+
+    Megatron-style sequence parallelism (cfg.seq_parallel): the residual
+    stream and norms live sequence-sharded over `model`; explicit
+    gather/scatter hints bracket the attention/FFN regions so the sharding
+    never propagates into the flash scans (letting GSPMD derive it there
+    multiplied collective traffic ~15x — EXPERIMENTS §Perf P1 v3).
+    """
+    sp = cfg.seq_parallel
+
+    def to_full(t):      # all-gather the sequence dim for attention/FFN
+        return shard_hint(t, BATCH_AXES, None, None) if sp else t
+
+    def to_sp(t):        # reduce-scatter branch output back to SP layout
+        return shard_hint(t, BATCH_AXES, "model", None) if sp else t
+
+    if cfg.block_type == "rwkv":
+        x, state = rwkv_mod.rwkv_block(p, to_full(x), cfg, None, rwkv_kernel)
+        return x, jnp.zeros((), jnp.float32), (state if collect_cache
+                                               else None)
+    h = to_full(apply_norm(p["ln1"], x, cfg))
+    q, k, v = attn.compute_qkv(p["attn"], h, cfg, positions)
+    ctx = attn.attention_ctx(q, k, v, cfg, causal=True)
+    branch = attn.project_out(p["attn"], ctx)
+    cache = None
+    if cfg.block_type == "hybrid":
+        ssm_out, ssm_state = ssm_mod.ssm_scan(p["ssm"], h, cfg)
+        branch = 0.5 * (branch + ssm_out)
+        if collect_cache:
+            cache = {"kv": _cache_from_prefill(k, v, cfg),
+                     "ssm": ssm_state}
+    elif collect_cache:
+        cache = {"kv": _cache_from_prefill(k, v, cfg)}
+    x = x + to_sp(branch)
+    h2 = to_full(apply_norm(p["ln2"], x, cfg))
+    y, aux = ffn_mod.apply_ffn(p["ffn"], h2, cfg)
+    return x + to_sp(y), aux, cache
+
+
+def _cache_from_prefill(k: jax.Array, v: jax.Array, cfg: ModelConfig) -> Dict:
+    """(B,S,K,hd) prefill keys/values -> decode cache layout.
+
+    Sliding-window caches are rolled so that absolute position p sits at ring
+    slot p % window, matching cache_update's slot rule for later steps.
+    """
+    S = k.shape[1]
+    w = cfg.sliding_window
+    if w and S > w:
+        k = jnp.roll(k[:, -w:], S % w, axis=1)
+        v = jnp.roll(v[:, -w:], S % w, axis=1)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Block apply (single-step decode)
+# ---------------------------------------------------------------------------
+
+def block_decode(p: Dict, x: jax.Array, cfg: ModelConfig, pos: jax.Array,
+                 cache: Dict):
+    """One block, one token. x (B,1,d). Returns (x, new_cache)."""
+    if cfg.block_type == "rwkv":
+        x, state = rwkv_mod.rwkv_block(p, x, cfg, cache)
+        return x, state
+    h = apply_norm(p["ln1"], x, cfg)
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = attn.compute_qkv(p["attn"], h, cfg, positions)
+    kv = attn.cache_update(cache["kv"], k, v, pos, cfg)
+    ctx = attn.decode_attention(q, kv, pos, cfg)
+    branch = attn.project_out(p["attn"], ctx)
+    new_cache = {"kv": kv}
+    if cfg.block_type == "hybrid":
+        ssm_out, ssm_state = ssm_mod.ssm_step(p["ssm"], h, cache["ssm"], cfg)
+        branch = 0.5 * (branch + ssm_out)
+        new_cache["ssm"] = ssm_state
+    x = x + branch
+    h2 = apply_norm(p["ln2"], x, cfg)
+    y, _ = ffn_mod.apply_ffn(p["ffn"], h2, cfg)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, prefix_embeds, use_specs=None):
+    emb = params["embed"]
+    if use_specs is not None:
+        emb = shard_hint_spec(emb, use_specs["embed"])
+    x = emb[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], 1)
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def _unembed(params, x, cfg, use_specs=None):
+    if cfg.tie_embeddings:
+        head = params["embed"].T
+    else:
+        head = params["lm_head"]
+        if use_specs is not None:
+            head = shard_hint_spec(head, use_specs["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def lm_forward(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+               prefix_embeds: Optional[jax.Array] = None,
+               collect_cache: bool = False, rwkv_kernel: bool = False,
+               use_specs: Optional[Dict] = None):
+    """Full-sequence forward.  Returns (logits, aux, caches|None).
+
+    ``use_specs``: optional pytree of use-site PartitionSpecs
+    (parallel/sharding.use_pspecs) — ZeRO-3 weight-gather hints applied
+    per layer inside the scan.
+    """
+    x = _embed(params, tokens, cfg, prefix_embeds, use_specs)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    sp = "model" if cfg.seq_parallel else None
+    x = shard_hint(x, BATCH_AXES, sp, None)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        # Pin the scan-carry sharding: without the hint GSPMD can lose the
+        # batch sharding across the loop-state tuple and replicate the
+        # whole layer subgraph (observed: 45 GB/chip of B-replicated
+        # buffers on glm4 train_4k).
+        h = shard_hint(h, BATCH_AXES, sp, None)
+        if use_specs is not None:
+            layer_params = jax.tree.map(shard_hint_spec, layer_params,
+                                        use_specs["blocks"],
+                                        is_leaf=lambda t: t is None)
+        h, a, cache = block_seq(layer_params, h, cfg, positions,
+                                collect_cache, rwkv_kernel)
+        h = shard_hint(h, BATCH_AXES, sp, None)
+        return (h, aux + a), cache
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params["blocks"])
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = _unembed(params, x, cfg, use_specs)
+    logits = shard_hint(logits, BATCH_AXES, None, "model")
+    return logits, aux, caches
+
+
+def lm_decode_step(params: Dict, token: jax.Array, pos: jax.Array,
+                   caches, cfg: ModelConfig,
+                   use_specs: Optional[Dict] = None):
+    """token (B,) int32, pos scalar int32 -> (logits (B,V), new caches)."""
+    x = _embed(params, token[:, None], cfg, None, use_specs)
+
+    def body(h, layer):
+        layer_params, layer_cache = layer
+        if use_specs is not None:
+            layer_params = jax.tree.map(shard_hint_spec, layer_params,
+                                        use_specs["blocks"],
+                                        is_leaf=lambda t: t is None)
+        h, new_cache = block_decode(layer_params, h, cfg, pos, layer_cache)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = _unembed(params, x, cfg, use_specs)
+    return logits[:, 0], new_caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked (L-leading) decode caches for lax.scan consumption."""
+    dtype = dtype_of(cfg.compute_dtype)
+    L = cfg.num_layers
+
+    def one():
+        if cfg.block_type == "rwkv":
+            return rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+        c = {"kv": attn.init_cache(cfg, batch, max_len, dtype)}
+        if cfg.block_type == "hybrid":
+            di = cfg.ssm_expand * cfg.d_model // 2
+            c["ssm"] = jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)
+        return c
+
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), one())

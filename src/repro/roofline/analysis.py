@@ -1,0 +1,252 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs   / (chips * 197e12)
+  memory     = HLO_bytes   / (chips * 819e9)
+  collective = Σ collective operand bytes / (chips * 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and sum operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (dtype width x element count of each shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_\[\]{}, ]+?)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$")
+_CALL_REF_RE = re.compile(
+    r"(to_apply|calls|body|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """HLO module text -> {computation name: [instruction lines]}."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry_alias = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMP_HEAD_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if raw.startswith("ENTRY"):
+                entry_alias = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    if entry_alias is not None:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _line_collective_bytes(line: str) -> Tuple[Optional[str], int]:
+    m = _COLL_RE.search(line)
+    if not m or "=" not in line:
+        return None, 0
+    if "-done(" in line:
+        return None, 0
+    rhs = line.split("=", 1)[1]
+    op_idx = rhs.find(m.group(1))
+    prefix = rhs[:op_idx] if op_idx > 0 else rhs
+    nbytes = _shape_bytes(prefix)
+    if nbytes == 0:
+        sm = _SHAPE_RE.search(rhs)
+        nbytes = _shape_bytes(sm.group(0)) if sm else 0
+    return m.group(1).lower(), nbytes
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-shard collective bytes from optimized HLO, loop-aware.
+
+    Sums the result-shape bytes of every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute instruction; a
+    collective inside a `while` body is multiplied by the loop trip count
+    (largest integer constant in the loop condition — scan-lowered loops
+    compare an induction variable against the length).  -start/-done async
+    pairs count once.
+    """
+    comps = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str, seen=None) -> int:
+        """Largest integer constant reachable from the loop condition."""
+        seen = seen or set()
+        if cond_name in seen:
+            return 1
+        seen.add(cond_name)
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+            for _, ref in _CALL_REF_RE.findall(line):
+                best = max(best, trip_count(ref, seen))
+        return best
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}
+        out: Dict[str, float] = {}
+        for line in comps.get(name, []):
+            kind, nbytes = _line_collective_bytes(line)
+            if kind:
+                out[kind] = out.get(kind, 0) + nbytes
+            refs = dict()
+            for key, ref in _CALL_REF_RE.findall(line):
+                refs[key] = ref
+            if "body" in refs:                      # while loop
+                k = trip_count(refs.get("condition", ""))
+                for kk, vv in walk(refs["body"]).items():
+                    out[kk] = out.get(kk, 0) + vv * k
+            else:
+                for key, ref in refs.items():
+                    if key in ("to_apply", "calls"):
+                        for kk, vv in walk(ref).items():
+                            out[kk] = out.get(kk, 0) + vv
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                branch_costs = [walk(b.strip().lstrip("%"))
+                                for b in bm.group(1).split(",")]
+                if branch_costs:
+                    biggest = max(branch_costs,
+                                  key=lambda d: sum(d.values()))
+                    for kk, vv in biggest.items():
+                        out[kk] = out.get(kk, 0) + vv
+        memo[name] = out
+        return out
+
+    return {k: int(v) for k, v in walk("__entry__").items()}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All quantities are PER-CHIP: XLA's cost_analysis on an SPMD module
+    reports the per-device program (verified against a hand-counted local
+    dot), and the collective parser sums per-shard operand bytes.  The
+    assignment's `HLO_FLOPs / (chips * peak)` with global HLO_FLOPs is the
+    same number: global = per_chip * chips."""
+
+    flops: float                  # per-chip HLO FLOPs
+    hbm_bytes: float              # per-chip HBM bytes (fusion-aware model)
+    collective_bytes: float       # per-chip collective bytes moved
+    chips: int
+    peak_mem_per_chip: float = 0.0
+    hbm_bytes_unfused: float = 0.0  # per-chip unfused upper bound
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / hw.ICI_BW
+
+    @property
+    def total_flops(self) -> float:
+        return self.flops * self.chips
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops, "hbm_bytes_per_chip": self.hbm_bytes,
+            "hbm_bytes_unfused_per_chip": self.hbm_bytes_unfused,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "chips": self.chips, "total_flops": self.total_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "peak_mem_per_chip": self.peak_mem_per_chip,
+        }
+
+
+def analyze_compiled(compiled, chips: int,
+                     jaxpr_cost=None) -> RooflineTerms:
+    """Extract roofline terms from a jax compiled artifact.
+
+    ``jaxpr_cost``: optional roofline.jaxpr_cost.Cost with loop-aware global
+    FLOPs/bytes (XLA's cost_analysis counts while bodies once; see
+    jaxpr_cost.py).  When provided, per-chip = cost / chips; otherwise fall
+    back to cost_analysis (valid for loop-free programs).
+    """
+    unfused = 0.0
+    if jaxpr_cost is not None:
+        flops = jaxpr_cost.flops / chips
+        hbm = jaxpr_cost.bytes_major / chips
+        unfused = jaxpr_cost.bytes / chips
+    else:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        flops = float(ca.get("flops", 0.0))
+        hbm = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = parse_collective_bytes(text)
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        peak += float(getattr(mem, attr, 0.0) or 0.0)
+    return RooflineTerms(flops=flops, hbm_bytes=hbm,
+                         collective_bytes=float(sum(coll.values())),
+                         chips=chips, peak_mem_per_chip=peak,
+                         hbm_bytes_unfused=unfused)
+
+
+def model_flops(cfg, shape, backward: bool) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference) headline FLOPs."""
+    n = cfg.num_active_params
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if backward else 2.0
+    return mult * n * tokens

@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants used by the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link (~per-chip injection)
+HBM_BYTES = 16 * (1 << 30)        # 16 GiB per chip

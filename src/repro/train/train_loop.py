@@ -1,0 +1,152 @@
+"""Train/serve step factories with sharding, microbatching, and remat.
+
+``make_sharded_train_step`` returns a jit-compiled SPMD step with explicit
+in/out shardings from parallel/sharding.py — the object the multi-pod
+dry-run lowers and the launcher executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import api
+from repro.parallel import sharding as shd
+from repro.train import optimizer as opt_mod
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.OptConfig,
+                    num_microbatches: int = 1,
+                    use_specs=None) -> Callable:
+    """Pure train step: (params, opt_state, batch) -> (params, opt_state,
+    metrics).  Gradient accumulation over leading batch splits when
+    num_microbatches > 1."""
+    loss_fn = api.make_loss_fn(cfg, use_specs=use_specs)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def reshape(x):
+                B = x.shape[0]
+                assert B % num_microbatches == 0
+                return x.reshape((num_microbatches, B // num_microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_body(carry, mb):
+                acc, loss_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), ms = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+            loss = loss_sum / num_microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        new_params, new_opt, om = opt_mod.adamw_update(params, grads,
+                                                       opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_sharded_train_step(cfg: ModelConfig, mesh: Mesh,
+                            opt_cfg: opt_mod.OptConfig,
+                            shape: ShapeSpec,
+                            num_microbatches: int = 1):
+    """jit-wrapped SPMD train step + all sharding trees.
+
+    Returns (jitted_step, param_specs, opt_specs, batch_specs).
+    """
+    aparams = api.abstract_params(cfg)
+    uspecs = (shd.use_pspecs(cfg, aparams, mesh) if cfg.use_weight_hints
+              else None)
+    step = make_train_step(cfg, opt_cfg, num_microbatches, use_specs=uspecs)
+    pspecs = shd.param_pspecs(cfg, aparams, mesh)
+    ospecs = opt_mod.opt_state_pspecs(pspecs, P())
+    bspec_tree = api.batch_spec(cfg, shape)
+    bspecs = shd.batch_pspecs(cfg, bspec_tree, mesh)
+    metric_specs = None  # replicated
+    jstep = jax.jit(
+        step,
+        in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                      shd.named(mesh, bspecs)),
+        out_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                       metric_specs),
+        donate_argnums=(0, 1),
+    )
+    return jstep, pspecs, ospecs, bspecs
+
+
+def make_sharded_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    """Prefill step for the inference-prefill dry-run cells."""
+    aparams = api.abstract_params(cfg)
+    uspecs = (shd.use_pspecs(cfg, aparams, mesh) if cfg.use_weight_hints
+              else None)
+    prefill = api.make_prefill_fn(cfg, max_len=shape.seq_len,
+                                  use_specs=uspecs)
+    pspecs = shd.param_pspecs(cfg, aparams, mesh)
+    bspec_tree = api.batch_spec(cfg, shape)
+    bspecs = shd.batch_pspecs(cfg, bspec_tree, mesh)
+
+    def fn(params, batch):
+        logits, caches = prefill(params, batch)
+        return logits, caches
+
+    jfn = jax.jit(fn, in_shardings=(shd.named(mesh, pspecs),
+                                    shd.named(mesh, bspecs)),
+                  out_shardings=None)
+    return jfn, pspecs, bspecs
+
+
+def make_sharded_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    """One-token serve_step with a seq_len KV cache (decode dry-run cells).
+
+    cfg.serve_param_fsdp=False stores parameters replicated over the FSDP
+    axes (TP kept) — the serving tradeoff for small models where per-step
+    weight gathers/partial-contraction all-reduces dominate decode.
+
+    Weight-gather use hints are deliberately NOT applied at decode: for
+    giant-MoE decode they force gathering the expert weights per token
+    (measured 10x collective regression on arctic decode_32k — §Perf);
+    small models get their win from serve_param_fsdp=False instead.
+    """
+    aparams = api.abstract_params(cfg)
+    decode = api.make_decode_fn(cfg, use_specs=None)
+    pspecs = shd.param_pspecs(cfg, aparams, mesh)
+    if not cfg.serve_param_fsdp:
+        pspecs = jax.tree.map(
+            lambda s: shd._strip_fsdp(s, drop_leading=False), pspecs)
+    if not cfg.serve_tp:
+        pspecs = jax.tree.map(lambda s: P(*(None,) * len(tuple(s))), pspecs)
+    acaches = api.abstract_caches(cfg, shape)
+    cspecs = shd.cache_pspecs(cfg, acaches, mesh)
+    F = shd.fsdp_axes(mesh)
+    b_ax = shd._div(shape.global_batch, mesh, F)
+    v_ax = shd._div(cfg.vocab_size, mesh, "model")
+
+    def fn(params, token, pos, caches):
+        logits, new_caches = decode(params, token, pos, caches)
+        return logits, new_caches
+
+    jfn = jax.jit(
+        fn,
+        in_shardings=(shd.named(mesh, pspecs),
+                      NamedSharding(mesh, P(b_ax)),
+                      NamedSharding(mesh, P()),
+                      shd.named(mesh, cspecs)),
+        out_shardings=(NamedSharding(mesh, P(b_ax, v_ax)),
+                       shd.named(mesh, cspecs)),
+        donate_argnums=(3,),
+    )
+    return jfn, pspecs, cspecs

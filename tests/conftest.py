@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Keep CPU thread usage sane on the 1-core container.
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false "
+                      "intra_op_parallelism_threads=1")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,111 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU.
+
+Asserts output shapes, finiteness (no NaNs), and that one SGD step reduces
+loss on a repeated batch.  Also exercises prefill->decode consistency for
+one representative arch per family.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_REGISTRY, get_smoke_config
+from repro.models import api
+
+
+def _dummy_batch(cfg, B=2, S=32, key=0):
+    rng = np.random.RandomState(key)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S))),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S))),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)
+                       ).astype(np.float32))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_REGISTRY)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _dummy_batch(cfg)
+    loss_fn = api.make_loss_fn(cfg)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gnorm = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                     grads))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, arch
+    # one SGD step reduces loss on the same batch
+    lr = 0.05
+    params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = jax.jit(loss_fn)(params2, batch)
+    assert float(loss2) < float(loss), (arch, float(loss), float(loss2))
+
+
+@pytest.mark.parametrize("arch", ["glm4_9b", "hymba_1_5b", "rwkv6_1_6b",
+                                  "granite_moe_1b_a400m", "whisper_medium",
+                                  "pixtral_12b"])
+def test_prefill_decode_consistency(arch):
+    """Greedy decode logits must match the teacher-forced forward."""
+    cfg = get_smoke_config(arch)
+    if cfg.num_experts:
+        # Capacity-factor MoE drops tokens under load; decode (1 token/group)
+        # never drops, so run the equivalence check in the no-drop regime.
+        cfg = cfg.replace(moe_capacity_factor=8.0)
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    batch = _dummy_batch(cfg, B, S, key=1)
+    prefill_fn = jax.jit(api.make_prefill_fn(cfg))
+    decode_fn = jax.jit(api.make_decode_fn(cfg))
+    last_logits, caches = prefill_fn(params, batch)
+
+    # Full forward over S+1 tokens: compare position S logits with one
+    # decode step applied after prefilling S tokens.
+    next_tok = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    step_logits, _ = decode_fn(params, next_tok,
+                               jnp.asarray(S + (cfg.num_patches
+                                                if cfg.family == "vlm"
+                                                else 0), jnp.int32), caches)
+
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], next_tok[:, None]], 1)
+    if cfg.family == "encdec":
+        full_logits, _ = __import__(
+            "repro.models.encdec", fromlist=["encdec_forward"]
+        ).encdec_forward(params, batch["frames"], ext["tokens"], cfg)
+    else:
+        from repro.models import transformer as tfm
+        full_logits, _, _ = tfm.lm_forward(
+            params, ext["tokens"], cfg,
+            prefix_embeds=ext.get("patch_embeds"))
+        if cfg.family == "vlm":
+            full_logits = full_logits[:, cfg.num_patches:]
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full_logits[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_param_count_sanity():
+    """Full configs land near their nameplate sizes."""
+    from repro.configs.base import get_config
+    expect = {"nemotron_4_340b": (300e9, 400e9),
+              "qwen1_5_110b": (95e9, 130e9),
+              "starcoder2_7b": (6e9, 9e9),
+              "glm4_9b": (8e9, 12e9),
+              "arctic_480b": (430e9, 530e9),
+              "pixtral_12b": (10e9, 15e9),
+              # our rwkv block is simplified (no low-rank decay towers),
+              # so it lands a bit under the 1.6B nameplate
+              "rwkv6_1_6b": (1.0e9, 2.2e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).num_params
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,105 @@
+"""Octree build invariants + engine-variant equivalence to the naive arm."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.geometry import random_obbs
+from repro.core.octree import build_octree, morton_decode, morton_encode
+from repro.core.wavefront import MODES, CollisionEngine, EngineConfig
+from repro.data.robotics import make_scene, scene_trajectories
+
+
+def test_morton_roundtrip():
+    rs = np.random.RandomState(0)
+    xyz = rs.randint(0, 1 << 10, (1000, 3)).astype(np.uint32)
+    codes = morton_encode(xyz[:, 0], xyz[:, 1], xyz[:, 2])
+    x, y, z = morton_decode(codes)
+    assert (x == xyz[:, 0]).all() and (y == xyz[:, 1]).all() \
+        and (z == xyz[:, 2]).all()
+
+
+def test_octree_levels_consistent():
+    rs = np.random.RandomState(1)
+    pts = rs.uniform(-1, 1, (5000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=5)
+    # every point falls inside some leaf AABB
+    leaves = tree.leaf_aabbs()
+    lo = np.asarray(leaves.center) - np.asarray(leaves.half)
+    hi = np.asarray(leaves.center) + np.asarray(leaves.half)
+    eps = 1e-5
+    for p in pts[::97]:
+        inside = ((p >= lo - eps) & (p <= hi + eps)).all(-1).any()
+        assert inside
+    # parent of every occupied node exists at the previous level
+    for l in range(1, tree.depth + 1):
+        parents = set((tree.levels[l].codes >> np.uint32(3)).tolist())
+        assert parents <= set(tree.levels[l - 1].codes.tolist())
+    # point ranges partition the cloud
+    assert tree.leaf_point_count.sum() == len(pts)
+
+
+def test_full_flags():
+    # a solid dense block of points -> interior nodes become full
+    g = np.stack(np.meshgrid(*[np.linspace(0.01, 0.99, 64)] * 3,
+                             indexing="ij"), -1).reshape(-1, 3)
+    tree = build_octree(g.astype(np.float32), depth=4,
+                        scene_lo=np.zeros(3, np.float32), scene_size=1.0)
+    # at depth 4 every cell holds points -> every level is fully occupied
+    assert tree.levels[0].full.all()
+    assert all(l.full.all() for l in tree.levels)
+
+
+@pytest.mark.parametrize("mode", [m for m in MODES if m != "naive"])
+def test_engine_matches_naive(mode):
+    rs = np.random.RandomState(2)
+    pts = rs.uniform(-1, 1, (8000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(3), 40)
+    ref, _ = CollisionEngine(tree, EngineConfig(mode="naive")).query(obbs)
+    got, c = CollisionEngine(tree, EngineConfig(mode=mode)).query(obbs)
+    assert (got == ref).all()
+    assert c.frontier_overflow == 0
+
+
+def test_engine_spheres_ablation_matches():
+    rs = np.random.RandomState(4)
+    pts = rs.uniform(-1, 1, (6000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(5), 30)
+    a, ca = CollisionEngine(tree, EngineConfig(
+        mode="wavefront", use_spheres=False)).query(obbs)
+    b, cb = CollisionEngine(tree, EngineConfig(
+        mode="wavefront", use_spheres=True)).query(obbs)
+    assert (a == b).all()
+    assert cb.sphere_tests > 0
+    assert cb.axis_tests_executed <= ca.axis_tests_executed
+
+
+def test_work_model_orderings():
+    """Tree < naive in tests; early-exit executes fewer axis tests."""
+    rs = np.random.RandomState(6)
+    pts = rs.uniform(-1, 1, (8000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(7), 32)
+    _, c_naive = CollisionEngine(tree, EngineConfig(mode="naive")).query(obbs)
+    _, c_tta = CollisionEngine(tree, EngineConfig(
+        mode="staged_noexit")).query(obbs)
+    _, c_wf = CollisionEngine(tree, EngineConfig(mode="wavefront")).query(obbs)
+    assert c_tta.nodes_traversed < c_naive.nodes_traversed
+    assert c_wf.axis_tests_executed <= c_tta.axis_tests_executed
+    assert c_wf.axis_tests_executed < c_wf.axis_tests_decoded
+    # fused bytes model < unfused
+    _, c_fu = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_fused")).query(obbs)
+    assert c_fu.bytes_moved < c_wf.bytes_moved
+
+
+def test_scene_traversal_on_synthetic_cubby():
+    scene = make_scene("cubby", num_points=30000)
+    tree = build_octree(scene.points, depth=5)
+    obbs = scene_trajectories(scene, num_trajectories=3, waypoints=10)
+    ref, _ = CollisionEngine(tree, EngineConfig(mode="naive")).query(obbs)
+    got, c = CollisionEngine(tree, EngineConfig(mode="wavefront")).query(obbs)
+    assert (got == ref).all()
+    assert 0 < int(ref.sum()) < obbs.n           # some but not all collide
