@@ -1,15 +1,33 @@
 """Shared benchmark plumbing: scene setup, engine timing, CSV emission."""
 from __future__ import annotations
 
-import sys
+import json
+import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List, Tuple
 
 import numpy as np
 
+#: Every emit() is also recorded here so the runner can persist the full
+#: suite as CSV/JSON artifacts (CI perf trajectory; see run.py --out).
+RESULTS: List[Tuple[str, float, str]] = []
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_results(out_dir: str) -> None:
+    """Persist recorded rows as results.csv + results.json under out_dir."""
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "results.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for name, us, derived in RESULTS:
+            f.write(f"{name},{us:.1f},{derived}\n")
+    with open(os.path.join(out_dir, "results.json"), "w") as f:
+        json.dump([{"name": n, "us_per_call": us, "derived": d}
+                   for n, us, d in RESULTS], f, indent=2)
 
 
 def time_call(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:

@@ -16,20 +16,28 @@ import os
 import sys
 import time
 
+# Support plain-script invocation (python benchmarks/run.py) next to
+# module invocation (python -m benchmarks.run): put the repo root and src/
+# on sys.path before the package imports below.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (emit, time_call, work_model_cycles,
-                               work_model_energy_pj)
+                               work_model_energy_pj, write_results)
 from repro.core.ballquery import (ball_query_pray, ball_query_psphere,
                                   ball_query_ref)
-from repro.core.counters import Counters
 from repro.core.fps import (farthest_point_sampling, random_sampling,
                             sampling_spread)
+from repro.core.geometry import OBBs
 from repro.core.octree import build_octree
-from repro.core.wavefront import MODES, CollisionEngine, EngineConfig
+from repro.core.wavefront import CollisionEngine, EngineConfig
 from repro.data.robotics import (ENVIRONMENTS, make_mpaccel_scenario,
                                  make_scene, scene_trajectories)
 
@@ -37,6 +45,10 @@ SCALE = {"points": 65536, "trajs": 6, "wps": 30, "depth": 6,
          "mpaccel_scenarios": 4, "mpaccel_points": 16384}
 FULL_SCALE = {"points": 524288, "trajs": 25, "wps": 60, "depth": 7,
               "mpaccel_scenarios": 10, "mpaccel_points": 65536}
+# CI artifact job: tiny scene, 1 repeat, subset of benches (see --smoke).
+SMOKE_SCALE = {"points": 4096, "trajs": 2, "wps": 6, "depth": 4,
+               "mpaccel_scenarios": 1, "mpaccel_points": 2048}
+SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched")
 
 _scene_cache = {}
 
@@ -63,7 +75,7 @@ def fig11_collision_speedup(S):
         base_cycles = None
         ref = None
         for mode in ("naive", "rta_like", "staged_noexit", "predicated",
-                     "wavefront", "wavefront_fused"):
+                     "wavefront_host", "wavefront", "wavefront_fused"):
             eng = CollisionEngine(tree, EngineConfig(mode=mode))
             col, c = eng.query(obbs)
             col2, c2 = eng.query(obbs)       # timed second run (post-jit)
@@ -85,6 +97,11 @@ def fig11_collision_speedup(S):
              f"vs_mochi={rows[(env, 'rta_like')][1]/full:.1f}x;"
              f"vs_cuda={rows[(env, 'naive')][1]/full:.1f}x;"
              f"vs_tta={rows[(env, 'staged_noexit')][1]/full:.1f}x")
+        # wall clock: device-resident while_loop vs host-in-the-loop resize
+        host_wall = rows[(env, "wavefront_host")][0].wall_time_s
+        dev_wall = rows[(env, "wavefront")][0].wall_time_s
+        emit(f"fig11/{env}/engine=device_wavefront", dev_wall * 1e6,
+             f"wall_speedup_vs_host={host_wall/max(dev_wall, 1e-9):.1f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -339,6 +356,36 @@ def fig19_mcl(S):
 
 
 # ---------------------------------------------------------------------------
+# Batched throughput — whole trajectory batch in ONE compiled device call
+# vs the host-loop engine iterating trajectory by trajectory
+# ---------------------------------------------------------------------------
+
+def batched_throughput(S):
+    _, tree, obbs = get_scene("cubby", S["points"], S["depth"], S["trajs"],
+                              S["wps"])
+    # (trajs, wps*7) batch: one lane per trajectory, early exit per lane.
+    B = S["trajs"]
+    M = obbs.n // B
+    batch = OBBs(center=obbs.center.reshape(B, M, 3),
+                 half=obbs.half.reshape(B, M, 3),
+                 rot=obbs.rot.reshape(B, M, 3, 3))
+    host = CollisionEngine(tree, EngineConfig(mode="wavefront_host"))
+    dev = CollisionEngine(tree, EngineConfig(mode="wavefront"))
+    col_h, _ = host.query_batched(batch)          # warm + reference
+    col_d, _ = dev.query_batched(batch)           # compile
+    assert (col_d == col_h).all(), "batched verdict mismatch"
+    _, c_h = host.query_batched(batch)            # timed post-warmup runs
+    _, c_d = dev.query_batched(batch)
+    n = B * M
+    emit("batched/engine=wavefront_host", c_h.wall_time_s * 1e6,
+         f"queries={n};qps={n/max(c_h.wall_time_s, 1e-9):.0f}")
+    emit("batched/engine=device_wavefront", c_d.wall_time_s * 1e6,
+         f"queries={n};qps={n/max(c_d.wall_time_s, 1e-9):.0f};"
+         f"speedup_vs_host={c_h.wall_time_s/max(c_d.wall_time_s, 1e-9):.1f}x;"
+         f"collisions={int(col_d.sum())}")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (reads the dry-run artifacts; §Roofline source of truth)
 # ---------------------------------------------------------------------------
 
@@ -378,6 +425,7 @@ BENCHES = {
     "fig17": fig17_radius_sweep,
     "fig18": fig18_pipeline,
     "fig19": fig19_mcl,
+    "batched": batched_throughput,
     "roofline": roofline_table,
 }
 
@@ -388,10 +436,22 @@ def main() -> None:
                     help="comma-separated bench names")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale inputs (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny scene, 1 repeat, writes artifacts")
+    ap.add_argument("--out", default=None,
+                    help="directory for results.csv/results.json artifacts")
     args = ap.parse_args()
-    S = FULL_SCALE if args.full else SCALE
-    names = args.only.split(",") if args.only else list(BENCHES)
+    if args.smoke:
+        S = SMOKE_SCALE
+        names = args.only.split(",") if args.only else list(SMOKE_BENCHES)
+        if args.out is None:
+            args.out = os.path.join(os.path.dirname(__file__), "results",
+                                    "smoke")
+    else:
+        S = FULL_SCALE if args.full else SCALE
+        names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
+    errors = 0
     for name in names:
         t0 = time.time()
         try:
@@ -400,7 +460,15 @@ def main() -> None:
             import traceback
             traceback.print_exc()
             emit(f"{name}/ERROR", 0.0, repr(e)[:120])
+            errors += 1
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.out:
+        write_results(args.out)
+        print(f"# artifacts written to {args.out}", flush=True)
+    if args.smoke and errors:
+        # CI gate: a smoke run with crashed benches must fail the job, not
+        # just leave ERROR rows in the artifact.
+        raise SystemExit(f"{errors} benchmark(s) failed")
 
 
 if __name__ == "__main__":

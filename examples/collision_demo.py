@@ -37,7 +37,7 @@ def main():
     print("-" * len(header))
     ref = None
     for mode in ("naive", "rta_like", "staged_noexit", "predicated",
-                 "wavefront", "wavefront_fused"):
+                 "wavefront_host", "wavefront", "wavefront_fused"):
         eng = CollisionEngine(tree, EngineConfig(mode=mode,
                                                  use_spheres=args.spheres))
         col, _ = eng.query(obbs)          # warmup/compile

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ShapeSpec, get_smoke_config
 from repro.data.pipeline import batch_iterator
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.models import api
 from repro.parallel import sharding as shd
 from repro.train import ft
@@ -37,7 +37,7 @@ def main():
     mesh = make_host_mesh()
     step, pspecs, ospecs, bspecs = train_loop.make_sharded_train_step(
         cfg, mesh, opt_cfg, shape)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = jax.device_put(api.init_params(cfg, jax.random.PRNGKey(0)),
                                 shd.named(mesh, pspecs))
         opt_state = opt_mod.init_opt_state(params, opt_cfg)

@@ -1,2 +1,4 @@
 from repro.configs.base import (ARCH_REGISTRY, ModelConfig, get_config,
-                                get_smoke_config)  # noqa: F401
+                                get_smoke_config)
+
+__all__ = ["ARCH_REGISTRY", "ModelConfig", "get_config", "get_smoke_config"]

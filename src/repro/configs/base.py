@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 FAMILIES = ("dense", "moe", "hybrid", "ssm", "encdec", "vlm")
 

@@ -57,6 +57,24 @@ class Counters:
         d["exit_histogram"] = self.exit_histogram.tolist()
         return d
 
+    def merge(self, other: "Counters") -> None:
+        """Accumulate another invocation's work into this one (batched
+        front-end; wall clock is owned by the caller and left untouched)."""
+        self.num_queries += other.num_queries
+        self.nodes_traversed += other.nodes_traversed
+        self.leaf_tests += other.leaf_tests
+        self.axis_tests_executed += other.axis_tests_executed
+        self.axis_tests_decoded += other.axis_tests_decoded
+        self.sphere_tests += other.sphere_tests
+        self.shader_invocations += other.shader_invocations
+        self.bytes_moved += other.bytes_moved
+        self.frontier_overflow += other.frontier_overflow
+        self.exit_histogram += other.exit_histogram
+        a, b = self.nodes_per_level, other.nodes_per_level
+        self.nodes_per_level = [
+            (a[i] if i < len(a) else 0) + (b[i] if i < len(b) else 0)
+            for i in range(max(len(a), len(b)))]
+
     def early_exit_fraction(self, half: int = 7) -> float:
         """Fraction of tests that terminate within ``half`` axis tests.
 

@@ -9,7 +9,6 @@ implemented as a Pallas kernel in :mod:`repro.kernels.fps`.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ sets the paper collision-checks (Table III).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,6 +16,12 @@ TPU adaptation: the 2-D occupancy-grid DDA becomes
                      "RoboCore" arm, which pays a per-chunk relaunch cost).
 The switch heuristic is the paper's, verbatim: mean cells traversed in the
 previous iteration vs a threshold.
+
+When a 3-D scene octree is available, the filter can additionally gate
+particles through the batched wavefront engine: every particle's robot
+footprint OBB is collision-checked against the scene in ONE compiled call
+(``CollisionEngine.query_batched`` with a (P, 1) batch), and particles
+embedded in obstacles are suppressed before resampling.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.geometry import OBBs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +147,32 @@ def ray_cast_compacted(grid: OccupancyGrid, origins: jax.Array,
     return jnp.asarray(ranges), cells
 
 
+def particle_collision_mask(engine, particles: jax.Array,
+                            footprint_half=(0.25, 0.25, 0.4),
+                            z_center: float = 0.4) -> np.ndarray:
+    """Per-particle footprint collision against a 3-D scene octree.
+
+    ``particles`` is (P, 3) x, y, theta; each particle becomes one yawed
+    footprint OBB and the whole population is checked as a (P, 1) batch in a
+    single compiled call.  Returns (P,) bool (True = particle in collision).
+    """
+    P = particles.shape[0]
+    x, y, th = particles[:, 0], particles[:, 1], particles[:, 2]
+    z = jnp.zeros_like(x)
+    c, s = jnp.cos(th), jnp.sin(th)
+    one = jnp.ones_like(x)
+    rot = jnp.stack([
+        jnp.stack([c, -s, z], -1),
+        jnp.stack([s, c, z], -1),
+        jnp.stack([z, z, one], -1)], -2)                    # (P, 3, 3) yaw
+    center = jnp.stack([x, y, jnp.full_like(x, z_center)], -1)
+    half = jnp.broadcast_to(jnp.asarray(footprint_half, jnp.float32), (P, 3))
+    obbs = OBBs(center=center[:, None, :], half=half[:, None, :],
+                rot=rot[:, None, :, :])                     # (P, 1) batch
+    collide, _ = engine.query_batched(obbs)
+    return collide[:, 0]
+
+
 @dataclasses.dataclass
 class MCLState:
     particles: jax.Array   # (P, 3) x, y, theta
@@ -160,8 +194,15 @@ def init_particles(key, grid: OccupancyGrid, n: int) -> MCLState:
 def mcl_step(key, state: MCLState, grid: OccupancyGrid, observed: jax.Array,
              scan_angles: jax.Array, motion: jax.Array, engine: str,
              max_range: float = 6.0, sigma: float = 0.25,
+             collision_engine=None,
+             footprint_half=(0.25, 0.25, 0.4),
              ) -> Tuple[MCLState, dict]:
-    """One predict-update-resample iteration; returns new state + stats."""
+    """One predict-update-resample iteration; returns new state + stats.
+
+    With ``collision_engine`` (a device-mode ``CollisionEngine`` over the
+    3-D scene), particles whose footprint OBB intersects the scene are
+    suppressed before resampling — one batched wavefront call per iteration.
+    """
     P = state.particles.shape[0]
     A = scan_angles.shape[0]
     k1, k2 = jax.random.split(key)
@@ -181,6 +222,13 @@ def mcl_step(key, state: MCLState, grid: OccupancyGrid, observed: jax.Array,
     sim = ranges.reshape(P, A)
     err = jnp.mean(jnp.square(sim - observed[None, :]), -1)
     logw = -err / (2 * sigma * sigma)
+    n_colliding = 0
+    if collision_engine is not None:
+        colliding = jnp.asarray(particle_collision_mask(
+            collision_engine, parts, footprint_half=footprint_half))
+        n_colliding = int(jax.device_get(jnp.sum(colliding)))
+        if n_colliding < P:            # keep the filter alive if all collide
+            logw = jnp.where(colliding, -1e9, logw)
     w = jax.nn.softmax(logw)
     # Systematic resampling.
     cum = jnp.cumsum(w)
@@ -189,7 +237,8 @@ def mcl_step(key, state: MCLState, grid: OccupancyGrid, observed: jax.Array,
     new_parts = parts[jnp.clip(sel, 0, P - 1)]
     stats = {"cells": int(cells), "rays": int(P * A),
              "cells_per_ray": float(cells) / float(P * A),
-             "time_s": dt, "engine": engine}
+             "time_s": dt, "engine": engine,
+             "colliding_particles": n_colliding}
     return MCLState(particles=new_parts,
                     weights=jnp.full((P,), 1.0 / P)), stats
 

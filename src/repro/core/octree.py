@@ -9,6 +9,15 @@ pointers, so the traversal in :mod:`repro.core.wavefront` is pure array code.
 
 Build runs once per scene on the host (numpy); traversal consumes the arrays
 as jax constants.
+
+For the device-resident wavefront engine the ragged per-level Python lists
+are additionally materialized as *padded* rectangular device arrays
+(:class:`DeviceOctree`): one ``(depth+1, n_max)`` code matrix (tail-padded
+with ``PAD_CODE = 0xFFFFFFFF``, which sorts above every valid 30-bit Morton
+code, so ``searchsorted`` stays correct on the padded rows), a matching
+``full`` matrix (padded ``False``), per-level occupancy counts, and the
+per-level cell sizes.  This is what lets a single ``jax.lax.while_loop``
+index levels with a traced loop counter instead of Python-level unrolling.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import numpy as np
 from repro.core.geometry import AABBs
 
 MAX_DEPTH = 10  # 30 bits of Morton code
+PAD_CODE = np.uint32(0xFFFFFFFF)  # > any 30-bit Morton code; keeps rows sorted
 
 
 def _part1by2(x: np.ndarray) -> np.ndarray:
@@ -107,6 +117,85 @@ class Octree:
 
     def leaf_aabbs(self) -> AABBs:
         return self.node_aabbs(self.depth)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DeviceOctree:
+    """Padded, device-resident view of the octree levels.
+
+    All rows are tail-padded to the widest level so a traced level index can
+    gather them inside ``jax.lax.while_loop`` / ``vmap``.  ``codes`` rows stay
+    sorted because the pad value :data:`PAD_CODE` exceeds every valid code.
+    Arrays may carry a leading scene axis when built by
+    :func:`stack_device_octrees`.
+    """
+
+    codes: jax.Array       # (..., depth+1, n_max) uint32, PAD_CODE padded
+    full: jax.Array        # (..., depth+1, n_max) bool, False padded
+    counts: jax.Array      # (..., depth+1) int32 occupied nodes per level
+    cell_sizes: jax.Array  # (..., depth+1) float32
+    scene_lo: jax.Array    # (..., 3) float32
+    depth: int             # static leaf level (shared across stacked scenes)
+
+    def tree_flatten(self):
+        return ((self.codes, self.full, self.counts, self.cell_sizes,
+                 self.scene_lo), self.depth)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, depth=aux)
+
+
+def device_octree(tree: Octree) -> DeviceOctree:
+    """Pad the ragged level lists of ``tree`` into rectangular device arrays."""
+    n_max = max(len(l.codes) for l in tree.levels)
+    L = tree.depth + 1
+    codes = np.full((L, n_max), PAD_CODE, np.uint32)
+    full = np.zeros((L, n_max), bool)
+    counts = np.zeros((L,), np.int32)
+    for l, lvl in enumerate(tree.levels):
+        n = len(lvl.codes)
+        codes[l, :n] = lvl.codes
+        full[l, :n] = lvl.full
+        counts[l] = n
+    cells = np.asarray([tree.cell_size(l) for l in range(L)], np.float32)
+    return DeviceOctree(codes=jnp.asarray(codes), full=jnp.asarray(full),
+                        counts=jnp.asarray(counts),
+                        cell_sizes=jnp.asarray(cells),
+                        scene_lo=jnp.asarray(tree.scene_lo, jnp.float32),
+                        depth=tree.depth)
+
+
+def stack_device_octrees(trees: List[Octree]) -> DeviceOctree:
+    """Stack scenes into one DeviceOctree with a leading scene axis.
+
+    All trees must share a depth; levels are padded to the widest level of
+    the widest scene so the batch traverses in one compiled call.
+    """
+    assert trees, "need at least one octree"
+    depth = trees[0].depth
+    assert all(t.depth == depth for t in trees), "scene depths must match"
+    devs = [device_octree(t) for t in trees]
+    n_max = max(d.codes.shape[-1] for d in devs)
+
+    def pad(d: DeviceOctree) -> DeviceOctree:
+        extra = n_max - d.codes.shape[-1]
+        return DeviceOctree(
+            codes=jnp.pad(d.codes, ((0, 0), (0, extra)),
+                          constant_values=PAD_CODE),
+            full=jnp.pad(d.full, ((0, 0), (0, extra))),
+            counts=d.counts, cell_sizes=d.cell_sizes, scene_lo=d.scene_lo,
+            depth=depth)
+
+    devs = [pad(d) for d in devs]
+    return DeviceOctree(
+        codes=jnp.stack([d.codes for d in devs]),
+        full=jnp.stack([d.full for d in devs]),
+        counts=jnp.stack([d.counts for d in devs]),
+        cell_sizes=jnp.stack([d.cell_sizes for d in devs]),
+        scene_lo=jnp.stack([d.scene_lo for d in devs]),
+        depth=depth)
 
 
 def node_centers_from_codes(codes: jax.Array, scene_lo: jax.Array,

@@ -10,15 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.geometry import arm_link_obbs
-from repro.core.octree import Octree
-from repro.core.wavefront import CollisionEngine, EngineConfig
+from repro.core.geometry import NUM_LINKS, OBBs, arm_link_obbs
+from repro.core.wavefront import CollisionEngine
 
 
 @dataclasses.dataclass
@@ -30,16 +29,45 @@ class PipelineResult:
     counters: Optional[object] = None
 
 
+def _waypoint_batched(obbs: OBBs, num_wp: int) -> OBBs:
+    """Reshape flattened link OBBs into a (num_wp, NUM_LINKS) query batch."""
+    return OBBs(center=obbs.center.reshape(num_wp, NUM_LINKS, 3),
+                half=obbs.half.reshape(num_wp, NUM_LINKS, 3),
+                rot=obbs.rot.reshape(num_wp, NUM_LINKS, 3, 3))
+
+
 def check_trajectory(engine: CollisionEngine, waypoints: jax.Array,
                      base_pos=None):
     """FK every waypoint -> link OBBs -> octree collision query.
 
-    Returns (per-waypoint collision flags, counters).
+    Device-resident engines check the whole trajectory as one (T, 7)
+    query batch in a single compiled call (per-waypoint early exit);
+    host-loop engines keep the flat query.  Returns (per-waypoint collision
+    flags, counters).
     """
     obbs = arm_link_obbs(waypoints, base_pos=base_pos)
+    T = waypoints.shape[0]
+    if engine.cfg.device_resident:
+        collide, counters = engine.query_batched(_waypoint_batched(obbs, T))
+        return collide.any(axis=1), counters
     collide, counters = engine.query(obbs)
-    per_wp = collide.reshape(waypoints.shape[0], -1).any(axis=1)
+    per_wp = collide.reshape(T, -1).any(axis=1)
     return per_wp, counters
+
+
+def check_trajectories(engine: CollisionEngine, waypoints: jax.Array,
+                       base_pos=None):
+    """Collision-gate a whole batch of trajectories in one compiled call.
+
+    ``waypoints`` is (B, T, 7); returns ((B, T) per-waypoint flags,
+    counters).  This is the batched-throughput path of the collision gate:
+    B * T waypoint queries traverse the octree together, each retiring from
+    the wavefront as soon as its verdict is decided.
+    """
+    B, T = waypoints.shape[:2]
+    obbs = arm_link_obbs(waypoints, base_pos=base_pos)   # (B*T*7,) flattened
+    flags, counters = engine.query_batched(_waypoint_batched(obbs, B * T))
+    return flags.any(axis=1).reshape(B, T), counters
 
 
 def plan_with_collision_gate(planner_params, planner_fns, engine:

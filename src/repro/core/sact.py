@@ -172,6 +172,23 @@ def sact(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
     return _staged_result(bs, is_, margins, use_spheres)
 
 
+def sact_frontier(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
+                  valid, use_spheres: bool = False) -> SactResult:
+    """Staged SACT over a frontier of gathered pairs with a validity mask.
+
+    Shape-polymorphic over leading dims — the same code serves the host
+    engine's (K,) frontier, the device engine's fixed-capacity buffer inside
+    ``lax.while_loop``, and (B, K) batches under ``vmap``.  Invalid lanes are
+    zeroed (counters) / cleared (booleans) so padding never contributes work
+    or verdicts.
+    """
+    res = sact(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
+               use_spheres=use_spheres)
+    return jax.tree.map(
+        lambda x: x & valid if x.dtype == bool else jnp.where(valid, x, 0),
+        res)
+
+
 def sact_pairwise(obbs: OBBs, aabbs: AABBs, use_spheres: bool = False
                   ) -> SactResult:
     """Dense all-pairs staged SACT: (M,) OBBs x (N,) AABBs -> (M, N) results."""

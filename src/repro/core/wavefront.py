@@ -1,22 +1,51 @@
-"""Batched level-synchronous octree collision traversal with compaction.
+"""Batched octree collision traversal: device-resident wavefront engine.
 
-This is the TPU-native analogue of RoboCore's traversal controller +
-conditional returns (DESIGN.md §2).  A *frontier* is an array of live
-(query, node) pairs at one octree level.  Each level step:
+DESIGN — device-resident frontier
+=================================
+A *frontier* is an array of live (query, node) pairs at one octree level.
+The paper's central claim (RoboGPU §II, Fig. 11) is that collision queries
+need control flow *on the accelerator*: early exit and frontier retirement
+without a host round-trip.  The engine here realizes that as a single
+jit-compiled ``jax.lax.while_loop`` over levels:
 
-  1. stage A of the SACT on every live pair (sphere pre-tests if enabled,
-     then the 6 box-normal axes)  — cheap, decides most pairs;
-  2. stage B (9 edge x edge axes) on the pairs stage A left undecided;
-  3. pairs overlapping a *terminal* node (a leaf, or an internal node whose
-     subtree is fully occupied) confirm a collision for their query;
-  4. surviving pairs expand to their occupied children;
-  5. the next frontier is **compacted**: culled pairs, decided queries'
-     pairs, and empty children are dropped.  The frontier arrays are resized
-     host-side to the next power-of-two bucket, so live work — not the
-     worst case — determines the compute cost of the next level.  This
-     host-in-the-loop resizing is the batch-granularity realization of the
-     paper's early exit: on RoboCore a decided query retires from the warp
-     buffer; here it retires from the wavefront.
+  1. the frontier lives in a **fixed-capacity** buffer ``(capacity,)`` of
+     (query index, Morton code) pairs; ``n_live`` marks the packed prefix;
+  2. each iteration runs the staged SACT on every live pair, confirms
+     collisions against *terminal* nodes (leaves, or internal nodes whose
+     subtree is fully occupied), and expands survivors to their occupied
+     children (a searchsorted occupancy probe on the padded
+     :class:`~repro.core.octree.DeviceOctree` level arrays);
+  3. the next frontier is **stream-compacted** in place by
+     :mod:`repro.kernels.compact` (prefix-sum + scatter; Pallas kernel on
+     TPU, jnp scatter elsewhere): culled pairs, decided queries' pairs and
+     empty children retire from the wavefront — the batch-granularity
+     analogue of the paper's conditional returns — with **no host sync
+     between levels**.
+
+Capacity / overflow policy: ``capacity`` is static per compile.  Sizing it
+to the worst-case frontier bound (``min(8 * bound_prev, M * n_level)``)
+wastes orders of magnitude of compute on typical scenes, so the engine
+starts from a small power-of-two bucket and **escalates on overflow**: the
+loop counts pairs that would exceed capacity (dropped highest-index-first)
+in ``Counters.frontier_overflow``; if a completed call reports overflow,
+the query replays at 4x capacity until clean or the worst-case bound /
+``max_frontier`` is reached.  The traversal itself never syncs per level —
+escalation is a rare whole-query replay, and verdicts are exact whenever
+``frontier_overflow == 0`` (overflow at ``max_frontier`` under-approximates
+exactly like the legacy host engine's clamp).  Pinning
+``EngineConfig.frontier_capacity`` disables escalation for
+latency-deterministic deployments.
+
+Work counters accumulate *inside* the loop carry (scalars + an exit-code
+histogram + per-level node counts) and are fetched once after the call, so
+the device engine reports the same work model as the host engine.
+
+The legacy host-in-the-loop engine — frontier buffers resized to
+power-of-two buckets on the host between levels — is retained as
+``mode="wavefront_host"`` for A/B benchmarks and bitwise cross-checks.
+``query_batched`` vmaps the traversal over whole trajectory batches, and
+:func:`query_batched_scenes` additionally vmaps over stacked scenes, each in
+one compiled call.
 
 Engine variants (paper Fig. 11 arms) are selected by ``EngineConfig.mode``;
 see DESIGN.md §2 for the mapping table.
@@ -26,7 +55,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,14 +63,18 @@ import numpy as np
 
 from repro.core import sact as sact_mod
 from repro.core.counters import (BYTES_FUSED_TEST, BYTES_SHADER_HANDOFF,
-                                 BYTES_UNFUSED_TEST, Counters)
+                                 BYTES_UNFUSED_TEST, NUM_EXIT_CODES, Counters)
 from repro.core.geometry import OBBs
-from repro.core.octree import (Octree, lookup_children,
-                               node_centers_from_codes)
-from repro.core.sact import (EXIT_FULL, NUM_AXES, SactResult)
+from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree, device_octree,
+                               lookup_children, node_centers_from_codes,
+                               stack_device_octrees)
+from repro.core.sact import NUM_AXES, SactResult
+from repro.kernels.compact.ops import compact_pairs
 
-MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront",
-         "wavefront_fused")
+MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
+         "wavefront", "wavefront_fused")
+#: Modes whose traversal runs fully on-device inside one compiled call.
+DEVICE_MODES = ("wavefront", "wavefront_fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,21 +84,28 @@ class EngineConfig:
     max_frontier: int = 1 << 20    # hard cap on live pairs per level
     min_bucket: int = 1024         # smallest frontier allocation
     query_block: int = 128         # naive-mode OBB block size
+    frontier_capacity: Optional[int] = None  # device engine: static capacity
+    use_pallas_compact: Optional[bool] = None  # None = auto (TPU only)
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
 
     @property
     def early_exit(self) -> bool:
-        return self.mode in ("predicated", "wavefront", "wavefront_fused")
+        return self.mode in ("predicated", "wavefront_host", "wavefront",
+                             "wavefront_fused")
 
     @property
     def stage_split(self) -> bool:
-        return self.mode in ("wavefront", "wavefront_fused")
+        return self.mode in ("wavefront_host", "wavefront", "wavefront_fused")
 
     @property
     def fused(self) -> bool:
         return self.mode == "wavefront_fused"
+
+    @property
+    def device_resident(self) -> bool:
+        return self.mode in DEVICE_MODES
 
 
 def _bucket(n: int, cfg: EngineConfig) -> int:
@@ -75,21 +115,204 @@ def _bucket(n: int, cfg: EngineConfig) -> int:
     return min(b, cfg.max_frontier)
 
 
+def frontier_capacity_bound(level_counts: Sequence[int], num_queries: int,
+                            cfg: EngineConfig) -> int:
+    """Static worst-case frontier size for a query set against one tree.
+
+    Level l+1 can hold at most 8x the level-l frontier, and never more than
+    every query paired with every occupied node of that level.
+    """
+    if cfg.frontier_capacity is not None:
+        return max(cfg.frontier_capacity, num_queries)
+    bound = cap = num_queries                # level 0: one root cell
+    for n_l in level_counts[1:]:
+        bound = min(bound * 8, num_queries * n_l)
+        cap = max(cap, bound)
+    cap = min(cap, cfg.max_frontier)
+    return max(_bucket(cap, cfg), num_queries)
+
+
+def _initial_capacity(num_queries: int, cfg: EngineConfig) -> int:
+    """First-attempt frontier bucket for the escalate-on-overflow policy.
+
+    The level-0 frontier is exactly one pair per query, and with early exit
+    most scenes never outgrow that by much — so guess the bucket that holds
+    M and let overflow replays buy more only when traversal proves it needs
+    it.  Over-guessing costs every level of every query; under-guessing
+    costs one replay."""
+    if cfg.frontier_capacity is not None:
+        return max(cfg.frontier_capacity, num_queries)
+    guess = min(max(num_queries, cfg.min_bucket), cfg.max_frontier)
+    return max(_bucket(guess, cfg), num_queries)
+
+
+def _escalate(run, num_queries: int, worst: int, cfg: EngineConfig):
+    """Run ``run(capacity)`` -> (collide, stats), replaying at 4x capacity
+    while the completed call reports frontier overflow.  A pinned
+    ``frontier_capacity`` disables escalation (deterministic latency)."""
+    cap = _initial_capacity(num_queries, cfg)
+    while True:
+        collide, st = run(cap)
+        if cfg.frontier_capacity is not None or cap >= worst:
+            return collide, st
+        if int(jax.device_get(jnp.sum(st["overflow"]))) == 0:
+            return collide, st
+        cap = min(max(cap * 4, cfg.min_bucket), worst)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident traversal (one jit-compiled while_loop, no host syncs)
+# ---------------------------------------------------------------------------
+
+def _empty_stats():
+    return dict(
+        nodes=jnp.int32(0), leaf=jnp.int32(0), axis_exec=jnp.int32(0),
+        axis_dec=jnp.int32(0), sphere=jnp.int32(0), overflow=jnp.int32(0),
+        per_level=jnp.zeros((MAX_DEPTH + 1,), jnp.int32),
+        exit_hist=jnp.zeros((NUM_EXIT_CODES,), jnp.int32))
+
+
+def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
+              use_spheres: bool, use_pallas: bool):
+    """Full multi-level wavefront traversal for one query set / one scene.
+
+    Pure function of device arrays; composes under jit and vmap.  Returns
+    (collide (M,) bool, stats dict).
+    """
+    M = obb_c.shape[0]
+    depth = dev.depth
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+    eight = jnp.arange(8, dtype=jnp.uint32)
+
+    def level_row(arr, level):
+        return jax.lax.dynamic_index_in_dim(arr, level, keepdims=False)
+
+    def body(carry):
+        level, n_live, q_idx, codes, collide, st = carry
+        valid = lane < n_live
+        cell = level_row(dev.cell_sizes, level)
+        node_c, node_h = node_centers_from_codes(codes, dev.scene_lo, cell)
+        res = sact_mod.sact_frontier(
+            obb_c[q_idx], obb_h[q_idx], obb_r[q_idx], node_c, node_h, valid,
+            use_spheres=use_spheres)
+
+        # Terminal nodes: leaves, or internal nodes with a full subtree.
+        codes_l = level_row(dev.codes, level)
+        pos = jnp.clip(jnp.searchsorted(codes_l, codes), 0,
+                       codes_l.shape[0] - 1)
+        is_term = jnp.where(level == depth, True, level_row(dev.full, level)[pos])
+        overlap = res.collide & valid
+        term_hit = overlap & is_term
+        collide = collide.at[q_idx].max(term_hit)
+
+        # ---- work accounting (device-side; fetched once post-call) -------
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        term_valid = (valid & is_term).astype(jnp.int32)
+        st = dict(
+            nodes=st["nodes"] + n_valid,
+            leaf=st["leaf"] + jnp.sum(term_valid),
+            axis_exec=st["axis_exec"] + jnp.sum(res.axis_tests),
+            axis_dec=st["axis_dec"] + n_valid * NUM_AXES,
+            sphere=st["sphere"] + jnp.sum(res.sphere_tests),
+            overflow=st["overflow"],
+            per_level=st["per_level"].at[level].set(n_valid),
+            exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid))
+
+        # ---- expansion + on-device stream compaction ---------------------
+        child_codes_l = level_row(dev.codes, jnp.minimum(level + 1, depth))
+        cand = (codes[:, None] << jnp.uint32(3)) | eight[None, :]   # (cap, 8)
+        cpos = jnp.clip(
+            jnp.searchsorted(child_codes_l, cand.reshape(-1)), 0,
+            child_codes_l.shape[0] - 1).reshape(cand.shape)
+        found = child_codes_l[cpos] == cand
+        # Early exit: decided queries retire their whole wavefront share.
+        expand = overlap & ~is_term & ~collide[q_idx]
+        child_mask = (expand[:, None] & found).reshape(-1)          # (cap*8,)
+        n_new = jnp.sum(child_mask.astype(jnp.int32))
+        cnt, q_next, codes_next = compact_pairs(
+            child_mask, jnp.repeat(q_idx, 8), cand.reshape(-1), capacity,
+            use_pallas=use_pallas)
+        st["overflow"] = st["overflow"] + jnp.maximum(n_new - capacity, 0)
+        return level + 1, cnt, q_next, codes_next, collide, st
+
+    def cond(carry):
+        level, n_live = carry[0], carry[1]
+        return (level <= depth) & (n_live > 0)
+
+    q0 = jnp.where(lane < M, lane, 0)
+    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(M), jnp.int32(capacity)),
+              q0, jnp.zeros((capacity,), jnp.uint32),
+              jnp.zeros((M,), bool), _empty_stats())
+    _, _, _, _, collide, st = jax.lax.while_loop(cond, body, carry0)
+    return collide, st
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "use_spheres", "use_pallas"))
+def _traverse_single(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
+                     use_pallas):
+    return _traverse(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
+                     use_pallas)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "use_spheres", "use_pallas"))
+def _traverse_batched(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
+                      use_pallas):
+    """(B, M) query batches against one scene, one compiled call."""
+    return jax.vmap(
+        lambda c, h, r: _traverse(c, h, r, dev, capacity, use_spheres,
+                                  use_pallas))(obb_c, obb_h, obb_r)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "use_spheres", "use_pallas"))
+def _traverse_scenes(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
+                     use_pallas):
+    """(S, M) query sets against S stacked scenes, one compiled call."""
+    return jax.vmap(
+        lambda c, h, r, d: _traverse(c, h, r, d, capacity, use_spheres,
+                                     use_pallas))(obb_c, obb_h, obb_r, dev)
+
+
+def _stats_to_counters(st, fused: bool, rta_like: bool = False) -> Counters:
+    st = jax.device_get(st)
+    c = Counters()
+
+    def tot(x):
+        return int(np.sum(np.asarray(st[x], np.int64)))
+
+    c.nodes_traversed = tot("nodes")
+    c.leaf_tests = tot("leaf")
+    c.axis_tests_executed = tot("axis_exec")
+    c.axis_tests_decoded = tot("axis_dec")
+    c.sphere_tests = tot("sphere")
+    c.frontier_overflow = tot("overflow")
+    per = np.asarray(st["per_level"], np.int64)
+    if per.ndim > 1:                       # batched: sum lanes per level
+        per = per.reshape(-1, per.shape[-1]).sum(axis=0)
+    c.nodes_per_level = [int(n) for n in per if n > 0]
+    hist = np.asarray(st["exit_hist"], np.int64)
+    c.exit_histogram += hist.reshape(-1, hist.shape[-1]).sum(axis=0)
+    per_test = BYTES_FUSED_TEST if fused else BYTES_UNFUSED_TEST
+    c.bytes_moved = c.nodes_traversed * per_test
+    del rta_like
+    return c
+
+
 @functools.partial(jax.jit, static_argnames=("use_spheres", "stage_split"))
 def _test_pairs(obb_c, obb_h, obb_r, node_c, node_h, valid,
                 use_spheres: bool, stage_split: bool) -> SactResult:
-    """Staged SACT on a frontier of pairs.
+    """Staged SACT on a host-managed frontier of pairs.
 
     With ``stage_split`` the edge axes are evaluated behind a
     ``lax.select``-style mask (their cost is counted separately by the work
     model); the wall-clock stage split happens at the frontier level via
     bucket resizing, which is where static-shape hardware can actually save.
     """
-    res = sact_mod.sact(obb_c, obb_h, obb_r, node_c, node_h,
-                        use_spheres=use_spheres)
     del stage_split
-    return jax.tree.map(lambda x: jnp.where(valid, x, 0) if x.dtype != bool
-                        else x & valid, res)
+    return sact_mod.sact_frontier(obb_c, obb_h, obb_r, node_c, node_h, valid,
+                                  use_spheres=use_spheres)
 
 
 @functools.partial(jax.jit, static_argnames=("n_out",))
@@ -112,18 +335,79 @@ class CollisionEngine:
         self._scene_lo = jnp.asarray(octree.scene_lo)
         self._level_codes = [jnp.asarray(l.codes) for l in octree.levels]
         self._level_full = [jnp.asarray(l.full) for l in octree.levels]
+        self._dev: Optional[DeviceOctree] = None
+
+    @property
+    def device_tree(self) -> DeviceOctree:
+        """Padded level arrays for the device-resident engine (lazy)."""
+        if self._dev is None:
+            self._dev = device_octree(self.octree)
+        return self._dev
+
+    def _capacity(self, num_queries: int) -> int:
+        counts = [len(l.codes) for l in self.octree.levels]
+        return frontier_capacity_bound(counts, num_queries, self.cfg)
 
     # ------------------------------------------------------------------
     def query(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
         t0 = time.perf_counter()
         if self.cfg.mode == "naive":
             out = self._query_naive(obbs)
+        elif self.cfg.device_resident:
+            out = self._query_device(obbs)
         else:
             out = self._query_tree(obbs)
         collide, counters = out
         counters.wall_time_s = time.perf_counter() - t0
         counters.num_queries = obbs.n
         return collide, counters
+
+    # ------------------------------------------------------------------
+    def query_batched(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
+        """Batched front-end: OBB fields carry a leading batch axis.
+
+        ``obbs.center`` is (B, M, 3) (likewise half/rot); for device modes
+        the whole (B, M) trajectory batch traverses in ONE compiled call
+        (vmapped while_loop).  Host modes fall back to a per-set Python loop
+        so benchmarks can report the speedup.  Returns ((B, M) verdicts,
+        aggregate counters).
+        """
+        assert obbs.center.ndim == 3, "query_batched wants (B, M, 3) fields"
+        B, M = obbs.center.shape[:2]
+        t0 = time.perf_counter()
+        if self.cfg.device_resident:
+            collide, st = _escalate(
+                lambda cap: _traverse_batched(
+                    obbs.center, obbs.half, obbs.rot, self.device_tree,
+                    capacity=cap, use_spheres=self.cfg.use_spheres,
+                    use_pallas=self.cfg.use_pallas_compact),
+                M, self._capacity(M), self.cfg)
+            counters = _stats_to_counters(st, self.cfg.fused)
+            collide = np.asarray(jax.device_get(collide))
+        else:
+            counters = Counters()
+            rows = []
+            for b in range(B):
+                one = OBBs(center=obbs.center[b], half=obbs.half[b],
+                           rot=obbs.rot[b])
+                col, c = self.query(one)
+                rows.append(np.asarray(col))
+                counters.merge(c)
+            collide = np.stack(rows)
+        counters.wall_time_s = time.perf_counter() - t0
+        counters.num_queries = B * M
+        return collide, counters
+
+    # ------------------------------------------------------------------
+    def _query_device(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
+        collide, st = _escalate(
+            lambda cap: _traverse_single(
+                obbs.center, obbs.half, obbs.rot, self.device_tree,
+                capacity=cap, use_spheres=self.cfg.use_spheres,
+                use_pallas=self.cfg.use_pallas_compact),
+            obbs.n, self._capacity(obbs.n), self.cfg)
+        return (np.asarray(jax.device_get(collide)),
+                _stats_to_counters(st, self.cfg.fused))
 
     # ------------------------------------------------------------------
     def _query_naive(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
@@ -146,6 +430,9 @@ class CollisionEngine:
 
     # ------------------------------------------------------------------
     def _query_tree(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
+        """Legacy host-in-the-loop traversal (``wavefront_host`` and the
+        predication/no-exit ablation arms): the frontier is re-bucketed on
+        the host between levels, which blocks jit across levels."""
         cfg = self.cfg
         oct_ = self.octree
         M = obbs.n
@@ -239,3 +526,32 @@ class CollisionEngine:
             valid, q_idx, codes = _compact(flat_mask, bucket, flat_q,
                                            flat_codes)
         return collide, c
+
+
+def query_batched_scenes(octrees: List[Octree], obbs: OBBs,
+                         config: EngineConfig = EngineConfig()
+                         ) -> Tuple[np.ndarray, Counters]:
+    """Traverse S scenes, each with its own (M,) OBB set, in ONE compiled call.
+
+    ``obbs`` fields carry a leading scene axis: center (S, M, 3).  All trees
+    must share a depth; level arrays are stacked/padded by
+    :func:`repro.core.octree.stack_device_octrees`.  Returns ((S, M)
+    verdicts, aggregate counters).
+    """
+    assert config.device_resident, "multi-scene batching needs a device mode"
+    assert obbs.center.ndim == 3 and obbs.center.shape[0] == len(octrees)
+    S, M = obbs.center.shape[:2]
+    t0 = time.perf_counter()
+    dev = stack_device_octrees(octrees)
+    worst = max(frontier_capacity_bound([len(l.codes) for l in t.levels], M,
+                                        config) for t in octrees)
+    collide, st = _escalate(
+        lambda cap: _traverse_scenes(
+            obbs.center, obbs.half, obbs.rot, dev, capacity=cap,
+            use_spheres=config.use_spheres,
+            use_pallas=config.use_pallas_compact),
+        M, worst, config)
+    counters = _stats_to_counters(st, config.fused)
+    counters.wall_time_s = time.perf_counter() - t0
+    counters.num_queries = S * M
+    return np.asarray(jax.device_get(collide)), counters

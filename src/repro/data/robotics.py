@@ -10,9 +10,8 @@ paper's range (9.8k–32k).  Also provides the smaller MPAccel-style scenarios
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,0 +1,4 @@
+# Stream compaction for wavefront frontiers: prefix-sum + scatter that packs
+# live (query, node) pairs to the front of a fixed-capacity buffer.  Replaces
+# the host-side bucket resize of the legacy engine; runs per octree level
+# inside the device-resident while_loop.

@@ -1,0 +1,66 @@
+"""Stream-compaction Pallas kernel: blockwise prefix-sum + windowed scatter.
+
+Two-pass compaction in the classic GPU style, mapped onto the sequential TPU
+grid: the cheap pass (per-block survivor counts + exclusive scan over blocks)
+runs as plain XLA in ops.py; this kernel is the scatter pass.  Grid step ``j``
+reads input block ``j``, turns the block-local inclusive scan of its mask into
+global output positions ``bases[j] + scan - 1``, builds a one-hot
+(input-lane, window-lane) matrix, and reduces it into a ``bn``-wide window
+that is stored at ``bases[j]`` with a single dynamic-slice store — survivors
+of one block always land in ``[bases[j], bases[j] + bn)``.  Later grid steps
+overwrite the window tail, so after the last step exactly the first
+``total`` rows are packed survivors (the output carries ``bn`` pad rows so
+the final window store never runs out of bounds).
+
+Elements whose global position would exceed ``n_out`` are dropped (the
+``max_frontier`` overflow clamp of the wavefront engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # CPU-only containers may lack the TPU extension
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def compact_kernel(bases_ref, mask_ref, vals_ref, out_ref, *, n_out: int,
+                   bn: int):
+    j = pl.program_id(0)
+    base = bases_ref[j]
+    m = mask_ref[...] != 0                                    # (bn,)
+    v = vals_ref[...]                                         # (bn, C)
+    incl = jnp.cumsum(m.astype(jnp.int32))                    # (bn,)
+    pos = base + incl - 1                                     # global slot
+    sel = m & (pos < n_out)                                   # overflow drop
+    rel = pos - base                                          # in [0, bn)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+    onehot = sel[:, None] & (rel[:, None] == lane)            # (in, window)
+    win = jnp.sum(jnp.where(onehot[:, :, None], v[:, None, :], 0), axis=0)
+    out_ref[pl.ds(jnp.minimum(base, n_out), bn), :] = win
+
+
+def make_compact_call(n_pad: int, n_out: int, channels: int, bn: int,
+                      interpret: bool):
+    """Build the pallas_call for (mask (n_pad,), vals (n_pad, C)) inputs."""
+    kernel = functools.partial(compact_kernel, n_out=n_out, bn=bn)
+    smem = {} if pltpu is None else {"memory_space": pltpu.SMEM}
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec(**smem),                             # bases, whole
+            pl.BlockSpec((bn,), lambda j: (j,)),
+            pl.BlockSpec((bn, channels), lambda j: (j, 0)),
+        ],
+        # Whole-array output block: it stays resident across the sequential
+        # grid so successive windows overwrite each other's tails.
+        out_specs=pl.BlockSpec((n_out + bn, channels), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out + bn, channels), jnp.int32),
+        interpret=interpret,
+    )

@@ -27,9 +27,8 @@ import jax
 
 from repro.configs.base import (ARCH_REGISTRY, SHAPES, get_config,
                                 shape_applicable)
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import api
-from repro.parallel import sharding as shd
 from repro.roofline import analysis as ra
 from repro.train import optimizer as opt_mod
 from repro.train import train_loop
@@ -71,7 +70,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     chips = mesh.devices.size
     aparams = api.abstract_params(cfg)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             step, pspecs, ospecs, bspecs = train_loop.make_sharded_train_step(
                 cfg, mesh, _opt_config(cfg), shape,

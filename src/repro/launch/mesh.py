@@ -21,3 +21,15 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    jax >= 0.5 spells this ``jax.set_mesh``; on older versions the Mesh
+    object itself is the context manager.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

@@ -14,12 +14,10 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ShapeSpec, get_config, get_smoke_config
 from repro.data.pipeline import batch_iterator
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.models import api
 from repro.parallel import sharding as shd
 from repro.train import checkpoint as ckpt_mod
@@ -55,7 +53,7 @@ def main() -> None:
 
     ckpt_dir = os.path.join(args.ckpt_dir, cfg.name)
     start = 0
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         params = jax.device_put(params, shd.named(mesh, pspecs))
         opt_state = opt_mod.init_opt_state(params, opt_cfg)

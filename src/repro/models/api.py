@@ -7,7 +7,7 @@ return pure functions suitable for jit/pjit.  ``abstract_params`` /
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -106,8 +106,8 @@ def _pad_caches(caches, cfg: ModelConfig, max_len: Optional[int]):
         target = (cfg.sliding_window if cfg.sliding_window
                   else (max_len or (S + 128)))
         pad = max(0, target - S)
-        padder = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0),
-                                       (0, 0)))
+        def padder(a):
+            return jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
         return {"k": padder(kv["k"]), "v": padder(kv["v"])}
 
     out = dict(caches)

@@ -12,7 +12,7 @@ partial softmaxes across the `model` mesh axis.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ engine (parallel/sharding.py) can attach PartitionSpecs by path pattern.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +115,15 @@ def shard_hint(x: jax.Array, *spec) -> jax.Array:
     ambient mesh are dropped so the same model code runs in single-device
     tests and under the production meshes.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_mesh is not None:
+        mesh = get_mesh()
+    else:  # jax < 0.5: ambient mesh of the `with Mesh(...)` context
+        try:
+            from jax._src import mesh as _mesh_lib
+            mesh = _mesh_lib.thread_resources.env.physical_mesh
+        except Exception:
+            mesh = None
     names = set(getattr(mesh, "axis_names", ()) or ())
     if not names:
         return x

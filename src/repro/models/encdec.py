@@ -7,7 +7,7 @@ Decode caches: per-layer self-KV ring + cross-KV computed once at prefill.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ before/after).  GQA layout: q (B,K,g,S,hd), k/v (B,K,S,hd).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ in core/ and kernels/ are drop-in for serving.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -60,7 +60,8 @@ def _time_mix_inputs(params, x, shifted, cfg):
     d = x.shape[-1]
     H = cfg.num_heads if cfg.num_heads > 0 else d // 64
     D = d // H
-    mix = lambda m: x * params[m] + shifted * (1.0 - params[m])
+    def mix(m):
+        return x * params[m] + shifted * (1.0 - params[m])
     r = jnp.einsum("bsd,de->bse", mix("mix_r"), params["wr"])
     k = jnp.einsum("bsd,de->bse", mix("mix_k"), params["wk"])
     v = jnp.einsum("bsd,de->bse", mix("mix_v"), params["wv"])
@@ -68,7 +69,8 @@ def _time_mix_inputs(params, x, shifted, cfg):
                     + jnp.einsum("bsd,de->bse", mix("mix_w"),
                                  params["wd"]).astype(jnp.float32))
     B, S = x.shape[:2]
-    shp = lambda a: a.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    def shp(a):
+        return a.reshape(B, S, H, D).transpose(0, 2, 1, 3)
     return shp(r), shp(k), shp(v), shp(logw), H, D
 
 
@@ -82,7 +84,8 @@ def rwkv_time_mix(params: Dict, x: jax.Array, cfg: ModelConfig,
     prev = None if state is None else state["tm_shift"]
     shifted = _token_shift(xn, prev)
     r, k, v, logw, H, D = _time_mix_inputs(params, xn, shifted, cfg)
-    fold = lambda a: a.reshape(B * H, S, D)
+    def fold(a):
+        return a.reshape(B * H, S, D)
     u = params["u"]                                        # (H, D)
     uexp = jnp.repeat(u[None], B, 0).reshape(B * H, D)
     s0 = None if state is None else state["wkv"].reshape(B * H, D, D)

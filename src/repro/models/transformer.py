@@ -13,8 +13,7 @@ TPUs too.  ``cfg.remat`` wraps the scan body in jax.checkpoint.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,12 +11,23 @@ in this repo uses FSDP/TP which covers the assigned cells.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _pcast(x, axis_names, to="varying"):
+    """jax.lax.pcast when available (varying-type marking for the new
+    shard_map); identity on older jax, whose shard_map has no varying
+    check."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, axis_names, to=to)
 
 
 def pipeline_forward(stage_fn: Callable, n_stages: int, n_micro: int,
@@ -35,9 +46,9 @@ def pipeline_forward(stage_fn: Callable, n_stages: int, n_micro: int,
         # `current` holds the activation resident on this stage this tick.
         # pcast marks the carries as varying over the stage axis (their
         # values genuinely differ per stage once the ring rotates).
-        current = jax.lax.pcast(jnp.zeros(mb_shape, micro.dtype),
-                                (axis_name,), to="varying")
-        outputs = jax.lax.pcast(
+        current = _pcast(jnp.zeros(mb_shape, micro.dtype),
+                         (axis_name,), to="varying")
+        outputs = _pcast(
             jnp.zeros((n_micro,) + mb_shape, micro.dtype),
             (axis_name,), to="varying")
 
@@ -84,7 +95,7 @@ def run_pipelined(mesh: Mesh, axis_name: str, stage_fn: Callable,
     n_micro = micro.shape[0]
     fn = pipeline_forward(stage_fn, n_stages, n_micro, axis_name)
     pspec = jax.tree.map(lambda _: P(axis_name), stacked_params)
-    sm = jax.shard_map(
+    sm = shard_map(
         lambda p, m: fn(jax.tree.map(lambda a: a[0], p), m),
         mesh=mesh,
         in_specs=(pspec, P()),

@@ -16,20 +16,27 @@ dim may shard unevenly; XLA pads).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
+
+# jax >= 0.5 promotes shard_map to the top level; fall back to experimental.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
 
 STACK_KEYS = ("blocks", "enc_blocks", "dec_blocks")
 
 
-def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+def fsdp_axes(mesh: Mesh):
+    """FSDP sharding entry: ('pod', 'data') multi-pod, bare 'data' otherwise
+    (a singleton tuple and the bare name shard identically; the bare name
+    keeps PartitionSpecs canonical for comparison/printing)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else "data")
 
 
 def axis_size(mesh: Mesh, axes) -> int:

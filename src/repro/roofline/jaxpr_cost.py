@@ -17,11 +17,9 @@ per-arch in EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 _ELEMENTWISE_FLOPS = {
     "add": 1, "sub": 1, "mul": 1, "div": 1, "max": 1, "min": 1, "exp": 4,

@@ -20,8 +20,7 @@ from __future__ import annotations
 import queue
 import signal
 import threading
-import time
-from typing import Callable, Iterator, Optional
+from typing import Iterator
 
 
 class PreemptionGuard:

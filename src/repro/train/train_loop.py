@@ -6,8 +6,7 @@ dry-run lowers and the launcher executes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -4,9 +4,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.geometry import random_obbs
+from repro.core.geometry import OBBs, random_obbs
 from repro.core.octree import build_octree, morton_decode, morton_encode
-from repro.core.wavefront import MODES, CollisionEngine, EngineConfig
+from repro.core.wavefront import (MODES, CollisionEngine, EngineConfig,
+                                  query_batched_scenes)
 from repro.data.robotics import make_scene, scene_trajectories
 
 
@@ -93,6 +94,84 @@ def test_work_model_orderings():
     _, c_fu = CollisionEngine(tree, EngineConfig(
         mode="wavefront_fused")).query(obbs)
     assert c_fu.bytes_moved < c_wf.bytes_moved
+
+
+def test_device_engine_matches_host_bitwise():
+    """Device-resident while_loop traversal == legacy host-loop engine,
+    verdicts AND work counters, on the seed test scenes."""
+    for seed, n_pts, depth, n_obb in [(2, 8000, 4, 40), (8, 5000, 5, 24)]:
+        rs = np.random.RandomState(seed)
+        pts = rs.uniform(-1, 1, (n_pts, 3)).astype(np.float32)
+        tree = build_octree(pts, depth=depth)
+        obbs = random_obbs(jax.random.PRNGKey(seed), n_obb)
+        host, ch = CollisionEngine(
+            tree, EngineConfig(mode="wavefront_host")).query(obbs)
+        dev, cd = CollisionEngine(
+            tree, EngineConfig(mode="wavefront")).query(obbs)
+        assert (dev == host).all()
+        assert cd.nodes_traversed == ch.nodes_traversed
+        assert cd.axis_tests_executed == ch.axis_tests_executed
+        assert cd.leaf_tests == ch.leaf_tests
+        assert cd.nodes_per_level == ch.nodes_per_level
+        assert (cd.exit_histogram == ch.exit_histogram).all()
+        assert cd.frontier_overflow == 0
+
+
+def _as_batch(obbs: OBBs, b: int) -> OBBs:
+    m = obbs.n // b
+    return OBBs(center=obbs.center.reshape(b, m, 3),
+                half=obbs.half.reshape(b, m, 3),
+                rot=obbs.rot.reshape(b, m, 3, 3))
+
+
+def test_query_batched_matches_per_set_queries():
+    rs = np.random.RandomState(3)
+    pts = rs.uniform(-1, 1, (6000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(4), 48)
+    eng = CollisionEngine(tree, EngineConfig(mode="wavefront"))
+    batch = _as_batch(obbs, 6)                       # (6, 8) query sets
+    got, c = eng.query_batched(batch)
+    assert got.shape == (6, 8)
+    flat, _ = eng.query(obbs)
+    assert (got.reshape(-1) == flat).all()
+    assert c.num_queries == 48
+    # host fallback loop agrees with the single-call device path
+    host = CollisionEngine(tree, EngineConfig(mode="wavefront_host"))
+    got_h, _ = host.query_batched(batch)
+    assert (got_h == got).all()
+
+
+def test_query_batched_scenes_single_call():
+    trees, sets = [], []
+    for seed in (11, 12):
+        rs = np.random.RandomState(seed)
+        pts = rs.uniform(-1, 1, (4000, 3)).astype(np.float32)
+        trees.append(build_octree(pts, depth=4))
+        sets.append(random_obbs(jax.random.PRNGKey(seed), 20))
+    stack = OBBs(center=jnp.stack([o.center for o in sets]),
+                 half=jnp.stack([o.half for o in sets]),
+                 rot=jnp.stack([o.rot for o in sets]))
+    got, c = query_batched_scenes(trees, stack)
+    assert got.shape == (2, 20)
+    for s in range(2):
+        ref, _ = CollisionEngine(trees[s],
+                                 EngineConfig(mode="naive")).query(sets[s])
+        assert (got[s] == ref).all()
+    assert c.num_queries == 40
+
+
+def test_device_engine_capacity_escalation():
+    """A deliberately tiny initial bucket must escalate, not drop work."""
+    rs = np.random.RandomState(5)
+    pts = rs.uniform(-1, 1, (8000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(6), 40)
+    ref, _ = CollisionEngine(tree, EngineConfig(mode="naive")).query(obbs)
+    got, c = CollisionEngine(tree, EngineConfig(
+        mode="wavefront", min_bucket=64)).query(obbs)
+    assert (got == ref).all()
+    assert c.frontier_overflow == 0
 
 
 def test_scene_traversal_on_synthetic_cubby():

@@ -2,7 +2,6 @@
 import jax
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_config
 from repro.models import api

@@ -6,7 +6,6 @@ import tempfile
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import ShapeSpec, get_smoke_config
 from repro.train import optimizer as opt_mod
@@ -73,14 +72,16 @@ def test_data_pipeline_determinism_and_host_sharding():
 
 def test_collective_parser_loop_aware():
     """A psum inside a scan must be multiplied by the trip count."""
-    import os as _os
-    import subprocess, sys, textwrap
+    import subprocess
+    import sys
+    import textwrap
     script = textwrap.dedent(f"""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys; sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.launch.mesh import use_mesh
     from repro.roofline.analysis import parse_collective_bytes
     mesh = jax.make_mesh((8,), ("model",))
     def f(x, w):
@@ -89,7 +90,7 @@ def test_collective_parser_loop_aware():
             return jnp.tanh(c @ w), None
         y, _ = jax.lax.scan(body, x, None, length=12)
         return jnp.sum(y)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, None)),
                                      NamedSharding(mesh, P("model", None)))
                     ).lower(jax.ShapeDtypeStruct((4, 64), jnp.float32),
@@ -122,8 +123,7 @@ def test_jaxpr_cost_scan_multiplication():
 
 
 def test_mcl_engines_agree_and_converge():
-    from repro.core.mcl import (init_particles, make_corridor_world,
-                                mcl_step, ray_cast_compacted, ray_cast_dense)
+    from repro.core.mcl import (make_corridor_world, ray_cast_compacted, ray_cast_dense)
     grid = make_corridor_world(jax.random.PRNGKey(0), size=96)
     rs = np.random.RandomState(2)
     org = jnp.asarray(rs.uniform(0.5, 4.0, (50, 2)).astype(np.float32))
