@@ -1,0 +1,60 @@
+"""Diff a smoke-benchmark results.json against the checked-in baseline.
+
+Usage:
+  python benchmarks/check_regression.py BENCH_smoke.json \\
+      benchmarks/results/smoke/results.json [--threshold 1.5] [--strict]
+
+Rows are matched by name; a row whose ``us_per_call`` grew past
+``threshold`` x baseline is reported as a GitHub Actions ``::warning::``
+line (warn-only by default — shared CI runners are noisy; pass ``--strict``
+to turn warnings into a nonzero exit).  Rows under ``--min-us`` in the
+baseline are ignored (timer noise / model-only 0.0 rows), as are rows that
+exist on only one side (new or retired benches).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="checked-in BENCH_smoke.json")
+    ap.add_argument("new", help="fresh results.json from --smoke")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="warn when new > threshold * baseline")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore baseline rows faster than this")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any row regresses")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    new = load_rows(args.new)
+    shared = sorted(set(base) & set(new))
+    regressions = []
+    for name in shared:
+        b, n = base[name], new[name]
+        if b < args.min_us:
+            continue
+        if n > args.threshold * b:
+            regressions.append((name, b, n))
+            print(f"::warning title=bench regression::{name}: "
+                  f"{b:.0f}us -> {n:.0f}us ({n / b:.2f}x, "
+                  f"threshold {args.threshold}x)")
+    print(f"# compared {len(shared)} rows "
+          f"({len(base) - len(shared)} baseline-only, "
+          f"{len(new) - len(shared)} new-only), "
+          f"{len(regressions)} regression(s) past {args.threshold}x")
+    return 1 if (regressions and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

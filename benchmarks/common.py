@@ -42,6 +42,22 @@ def time_call(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
     return float(np.median(ts))
 
 
+def time_group(fns: dict, repeats: int = 7, warmup: int = 1) -> dict:
+    """Contention-robust A/B timing: best (min) seconds per arm, with the
+    arms *interleaved* round-robin so slow background-load phases hit every
+    arm equally instead of whichever arm's block they land on."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            fn()
+    ts = {name: [] for name in fns}
+    for _ in range(repeats):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            ts[name].append(time.perf_counter() - t0)
+    return {name: float(min(t)) for name, t in ts.items()}
+
+
 # Simple RoboCore-style cycle model used where the paper reports simulator
 # cycles we cannot measure (Figs. 12/13/16).  Calibrated in relative terms:
 #   axis test      : CYCLES_AXIS per executed axis (decoded-but-skipped axes

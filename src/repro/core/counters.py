@@ -15,6 +15,22 @@ Bytes model (f32):
                 = 424 B
   fused test    = 84 + 8 (result+exit code)              = 92 B
   shader handoff (Mochi) = 128 B per reported hit.
+
+Fused traversal step (kernels/traverse, ``mode="wavefront_fused"``): the
+whole level is one kernel, so per live (query, node) pair per level the
+HBM-resident traffic reduces to frontier-in / frontier-out:
+  frontier triple in  (q_idx, Morton code, CSR node index)   = 12 B
+  node metadata gather (full flag, child_start, child_mask)  = 12 B
+  packed verdict word out (collide | is_term | exit_code)    =  4 B
+  compacted next-frontier triple out (amortized, <= 1 slot
+  per surviving pair per level)                              = 12 B
+  fused step                                                 = 40 B
+The query OBB table streams HBM->VMEM once per level and is amortized
+across the whole frontier, so it does not appear in the per-pair cost —
+exactly the paper's "intermediates never leave the unit" discipline.  The
+unfused device arm instead materializes ~5 capacity-sized arrays per level
+(4-field SactResult, searchsorted probe vectors, 8x-expanded candidate
+codes, compaction scratch), which the 424 B/test figure models.
 """
 from __future__ import annotations
 
@@ -25,6 +41,7 @@ import numpy as np
 
 BYTES_UNFUSED_TEST = 424
 BYTES_FUSED_TEST = 92
+BYTES_FUSED_STEP = 40
 BYTES_SHADER_HANDOFF = 128
 NUM_EXIT_CODES = 18
 

@@ -128,6 +128,19 @@ class SactResult(NamedTuple):
     sphere_tests: jax.Array  # (...,) int32 sphere tests executed (0 or 2)
 
 
+def axis_tests_from_exit(exit_code: jax.Array) -> jax.Array:
+    """Recover the conditional-return axis-test count from an exit code.
+
+    Sphere exits (codes 0/1) run no axis tests; a separating axis k (code
+    2 + k) costs k + 1 tests; EXIT_FULL costs all 15.  This is the single
+    source of truth shared by the jnp staged test and the Pallas kernels,
+    which emit only (collide, exit_code) per pair.
+    """
+    code = exit_code.astype(jnp.int32)
+    return jnp.where(code <= EXIT_ISPHERE, 0,
+                     jnp.minimum(code - 1, NUM_AXES)).astype(jnp.int32)
+
+
 def _staged_result(bsphere_miss, isphere_hit, margins, use_spheres: bool
                    ) -> SactResult:
     sep = margins > 0.0                                      # (..., 15)
@@ -143,18 +156,15 @@ def _staged_result(bsphere_miss, isphere_hit, margins, use_spheres: bool
             bsphere_miss, EXIT_BSPHERE,
             jnp.where(isphere_hit, EXIT_ISPHERE,
                       jnp.where(any_sep, EXIT_AXIS0 + first_sep, EXIT_FULL)))
-        axis_tests = jnp.where(
-            bsphere_miss | isphere_hit, 0,
-            jnp.minimum(first_sep + 1, NUM_AXES))
-        n_sphere = jnp.full(axis_tests.shape, 2, jnp.int32)
+        n_sphere = jnp.full(exit_code.shape, 2, jnp.int32)
     else:
         collide = collide_sat
         exit_code = jnp.where(any_sep, EXIT_AXIS0 + first_sep, EXIT_FULL)
-        axis_tests = jnp.minimum(first_sep + 1, NUM_AXES)
-        n_sphere = jnp.zeros(axis_tests.shape, jnp.int32)
+        n_sphere = jnp.zeros(exit_code.shape, jnp.int32)
+    exit_code = exit_code.astype(jnp.int32)
     return SactResult(collide=collide,
-                      exit_code=exit_code.astype(jnp.int32),
-                      axis_tests=axis_tests.astype(jnp.int32),
+                      exit_code=exit_code,
+                      axis_tests=axis_tests_from_exit(exit_code),
                       sphere_tests=n_sphere)
 
 
@@ -172,6 +182,13 @@ def sact(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
     return _staged_result(bs, is_, margins, use_spheres)
 
 
+def mask_frontier_result(res: SactResult, valid) -> SactResult:
+    """Clear booleans / zero counters on invalid (padding) lanes."""
+    return jax.tree.map(
+        lambda x: x & valid if x.dtype == bool else jnp.where(valid, x, 0),
+        res)
+
+
 def sact_frontier(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
                   valid, use_spheres: bool = False) -> SactResult:
     """Staged SACT over a frontier of gathered pairs with a validity mask.
@@ -184,9 +201,52 @@ def sact_frontier(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
     """
     res = sact(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
                use_spheres=use_spheres)
-    return jax.tree.map(
-        lambda x: x & valid if x.dtype == bool else jnp.where(valid, x, 0),
-        res)
+    return mask_frontier_result(res, valid)
+
+
+def sact_frontier_staged(obb_center, obb_half, obb_rot, aabb_center,
+                         aabb_half, valid, use_spheres: bool = False
+                         ) -> SactResult:
+    """Two-phase frontier SACT, bitwise-identical to :func:`sact_frontier`.
+
+    Phase 1 runs the sphere pre-tests plus the 6 box-normal axes on every
+    live pair; the 9 edge x edge margins (phase 2) are only computed — via
+    ``lax.cond`` — when some valid pair survives phase 1 undecided.  This is
+    the frontier-level analogue of the Pallas SACT kernel's tile-level
+    conditional return: on typical scenes most deep-level frontiers decide
+    entirely in phase 1, so the 9 costliest axis formulas are skipped for
+    the whole batch.  (Under ``vmap`` the cond lowers to a select and both
+    phases execute — correctness is unaffected.)
+
+    Exit codes and axis-test counts are untouched by the skip: phase-2
+    margins only influence lanes that reach phase 2, and when the cond takes
+    the skip branch no valid lane does.
+    """
+    p = make_pair_terms(obb_center, obb_half, obb_rot, aabb_center, aabb_half)
+    m_box = box_normal_margins(p)                            # (..., 6)
+    shape = m_box.shape[:-1]
+    if use_spheres:
+        bs, is_ = sphere_tests(obb_center, obb_half, aabb_center, aabb_half)
+    else:
+        bs = jnp.zeros(shape, bool)
+        is_ = jnp.zeros(shape, bool)
+    undecided = valid & ~bs & ~is_ & ~jnp.any(m_box > 0.0, axis=-1)
+
+    def phase2():
+        # Recompute the pair terms in-branch: the cond's operands stay the
+        # raw (already-live) box arrays, so skipping phase 2 never forces
+        # the (t, R, |R|) intermediates to materialize for the branch.
+        p2 = make_pair_terms(obb_center, obb_half, obb_rot, aabb_center,
+                             aabb_half)
+        return edge_margins(p2)
+
+    m_edge = jax.lax.cond(
+        jnp.any(undecided), phase2,
+        lambda: jnp.zeros(shape + (NUM_EDGE,), m_box.dtype))
+    res = _staged_result(bs, is_,
+                         jnp.concatenate([m_box, m_edge], axis=-1),
+                         use_spheres)
+    return mask_frontier_result(res, valid)
 
 
 def sact_pairwise(obbs: OBBs, aabbs: AABBs, use_spheres: bool = False

@@ -22,6 +22,18 @@ jit-compiled ``jax.lax.while_loop`` over levels:
      analogue of the paper's conditional returns — with **no host sync
      between levels**.
 
+``mode="wavefront_fused"`` replaces that loop body with the fused
+traversal step of :mod:`repro.kernels.traverse`: the frontier carries
+(query, CSR node index) pairs, codes / terminality / child occupancy are
+O(1) gathers through the :class:`DeviceOctree` CSR
+child-pointer table (no searchsorted anywhere in the loop body), the
+staged SACT culls in two phases (spheres + box-normal axes decide most
+pairs; the 9 edge axes run only when survivors remain), and on TPU the
+whole test is one Pallas kernel per level emitting a single packed verdict
+word per pair.  Verdicts and work counters are bitwise-identical to
+``wavefront``; only the modeled bytes differ (frontier-in/frontier-out,
+see :mod:`repro.core.counters`).
+
 Capacity / overflow policy: ``capacity`` is static per compile.  Sizing it
 to the worst-case frontier bound (``min(8 * bound_prev, M * n_level)``)
 wastes orders of magnitude of compute on typical scenes, so the engine
@@ -62,14 +74,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sact as sact_mod
-from repro.core.counters import (BYTES_FUSED_TEST, BYTES_SHADER_HANDOFF,
-                                 BYTES_UNFUSED_TEST, NUM_EXIT_CODES, Counters)
+from repro.core.counters import (BYTES_FUSED_STEP, BYTES_FUSED_TEST,
+                                 BYTES_SHADER_HANDOFF, BYTES_UNFUSED_TEST,
+                                 NUM_EXIT_CODES, Counters)
 from repro.core.geometry import OBBs
 from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree, device_octree,
                                lookup_children, node_centers_from_codes,
                                stack_device_octrees)
 from repro.core.sact import NUM_AXES, SactResult
 from repro.kernels.compact.ops import compact_pairs
+from repro.kernels.traverse.ops import traverse_step
 
 MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
          "wavefront", "wavefront_fused")
@@ -86,6 +100,7 @@ class EngineConfig:
     query_block: int = 128         # naive-mode OBB block size
     frontier_capacity: Optional[int] = None  # device engine: static capacity
     use_pallas_compact: Optional[bool] = None  # None = auto (TPU only)
+    use_pallas_traverse: Optional[bool] = None  # fused step kernel; None=auto
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
@@ -247,32 +262,99 @@ def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     return collide, st
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("capacity", "use_spheres", "use_pallas"))
+def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
+                    use_spheres: bool, use_pallas: bool,
+                    use_pallas_traverse: Optional[bool]):
+    """Fused multi-level wavefront traversal (``mode="wavefront_fused"``).
+
+    Same while_loop skeleton and work accounting as :func:`_traverse`, but
+    each level is one :func:`repro.kernels.traverse.ops.traverse_step`: the
+    frontier carries (query, CSR node index) pairs — codes, terminality and
+    child occupancy are O(1) CSR gathers instead of searchsorted probes —
+    the staged SACT culls in two phases, and the per-level HBM-resident
+    intermediates reduce to frontier-in / frontier-out.  Verdicts and work
+    counters are bitwise-identical to :func:`_traverse`.
+    """
+    M = obb_c.shape[0]
+    depth = dev.depth
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+
+    def body(carry):
+        level, n_live, q_idx, node_idx, collide, st = carry
+        n_next, q_next, idx_next, collide, info = traverse_step(
+            obb_c, obb_h, obb_r, dev, level, n_live, q_idx, node_idx,
+            collide, use_spheres=use_spheres,
+            use_pallas=use_pallas_traverse, use_pallas_compact=use_pallas)
+        res, valid, is_term = info["res"], info["valid"], info["is_term"]
+
+        # ---- work accounting (identical formulas to the unfused arm) -----
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        term_valid = (valid & is_term).astype(jnp.int32)
+        st = dict(
+            nodes=st["nodes"] + n_valid,
+            leaf=st["leaf"] + jnp.sum(term_valid),
+            axis_exec=st["axis_exec"] + jnp.sum(res.axis_tests),
+            axis_dec=st["axis_dec"] + n_valid * NUM_AXES,
+            sphere=st["sphere"] + jnp.sum(res.sphere_tests),
+            overflow=st["overflow"] + jnp.maximum(info["n_new"] - capacity,
+                                                  0),
+            per_level=st["per_level"].at[level].set(n_valid),
+            exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid))
+        return level + 1, n_next, q_next, idx_next, collide, st
+
+    def cond(carry):
+        level, n_live = carry[0], carry[1]
+        return (level <= depth) & (n_live > 0)
+
+    q0 = jnp.where(lane < M, lane, 0)
+    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(M), jnp.int32(capacity)),
+              q0, jnp.zeros((capacity,), jnp.int32),
+              jnp.zeros((M,), bool), _empty_stats())
+    out = jax.lax.while_loop(cond, body, carry0)
+    return out[4], out[5]
+
+
+def _traverse_mode(fused: bool):
+    """Select the per-scene traversal implementation for a mode."""
+    def run(c, h, r, d, capacity, use_spheres, use_pallas,
+            use_pallas_traverse):
+        if fused:
+            return _traverse_fused(c, h, r, d, capacity, use_spheres,
+                                   use_pallas, use_pallas_traverse)
+        return _traverse(c, h, r, d, capacity, use_spheres, use_pallas)
+    return run
+
+
+_TRAVERSE_STATICS = ("capacity", "use_spheres", "use_pallas",
+                     "use_pallas_traverse", "fused")
+
+
+@functools.partial(jax.jit, static_argnames=_TRAVERSE_STATICS)
 def _traverse_single(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                     use_pallas):
-    return _traverse(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                     use_pallas)
+                     use_pallas, use_pallas_traverse=None, fused=False):
+    return _traverse_mode(fused)(obb_c, obb_h, obb_r, dev, capacity,
+                                 use_spheres, use_pallas,
+                                 use_pallas_traverse)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("capacity", "use_spheres", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=_TRAVERSE_STATICS)
 def _traverse_batched(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                      use_pallas):
+                      use_pallas, use_pallas_traverse=None, fused=False):
     """(B, M) query batches against one scene, one compiled call."""
+    run = _traverse_mode(fused)
     return jax.vmap(
-        lambda c, h, r: _traverse(c, h, r, dev, capacity, use_spheres,
-                                  use_pallas))(obb_c, obb_h, obb_r)
+        lambda c, h, r: run(c, h, r, dev, capacity, use_spheres, use_pallas,
+                            use_pallas_traverse))(obb_c, obb_h, obb_r)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("capacity", "use_spheres", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=_TRAVERSE_STATICS)
 def _traverse_scenes(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                     use_pallas):
+                     use_pallas, use_pallas_traverse=None, fused=False):
     """(S, M) query sets against S stacked scenes, one compiled call."""
+    run = _traverse_mode(fused)
     return jax.vmap(
-        lambda c, h, r, d: _traverse(c, h, r, d, capacity, use_spheres,
-                                     use_pallas))(obb_c, obb_h, obb_r, dev)
+        lambda c, h, r, d: run(c, h, r, d, capacity, use_spheres, use_pallas,
+                               use_pallas_traverse))(obb_c, obb_h, obb_r, dev)
 
 
 def _stats_to_counters(st, fused: bool, rta_like: bool = False) -> Counters:
@@ -294,7 +376,8 @@ def _stats_to_counters(st, fused: bool, rta_like: bool = False) -> Counters:
     c.nodes_per_level = [int(n) for n in per if n > 0]
     hist = np.asarray(st["exit_hist"], np.int64)
     c.exit_histogram += hist.reshape(-1, hist.shape[-1]).sum(axis=0)
-    per_test = BYTES_FUSED_TEST if fused else BYTES_UNFUSED_TEST
+    # Fused step: frontier-in/frontier-out traffic only (see counters.py).
+    per_test = BYTES_FUSED_STEP if fused else BYTES_UNFUSED_TEST
     c.bytes_moved = c.nodes_traversed * per_test
     del rta_like
     return c
@@ -380,7 +463,9 @@ class CollisionEngine:
                 lambda cap: _traverse_batched(
                     obbs.center, obbs.half, obbs.rot, self.device_tree,
                     capacity=cap, use_spheres=self.cfg.use_spheres,
-                    use_pallas=self.cfg.use_pallas_compact),
+                    use_pallas=self.cfg.use_pallas_compact,
+                    use_pallas_traverse=self.cfg.use_pallas_traverse,
+                    fused=self.cfg.fused),
                 M, self._capacity(M), self.cfg)
             counters = _stats_to_counters(st, self.cfg.fused)
             collide = np.asarray(jax.device_get(collide))
@@ -404,7 +489,9 @@ class CollisionEngine:
             lambda cap: _traverse_single(
                 obbs.center, obbs.half, obbs.rot, self.device_tree,
                 capacity=cap, use_spheres=self.cfg.use_spheres,
-                use_pallas=self.cfg.use_pallas_compact),
+                use_pallas=self.cfg.use_pallas_compact,
+                use_pallas_traverse=self.cfg.use_pallas_traverse,
+                fused=self.cfg.fused),
             obbs.n, self._capacity(obbs.n), self.cfg)
         return (np.asarray(jax.device_get(collide)),
                 _stats_to_counters(st, self.cfg.fused))
@@ -549,7 +636,9 @@ def query_batched_scenes(octrees: List[Octree], obbs: OBBs,
         lambda cap: _traverse_scenes(
             obbs.center, obbs.half, obbs.rot, dev, capacity=cap,
             use_spheres=config.use_spheres,
-            use_pallas=config.use_pallas_compact),
+            use_pallas=config.use_pallas_compact,
+            use_pallas_traverse=config.use_pallas_traverse,
+            fused=config.fused),
         M, worst, config)
     counters = _stats_to_counters(st, config.fused)
     counters.wall_time_s = time.perf_counter() - t0

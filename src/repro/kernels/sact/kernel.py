@@ -35,43 +35,33 @@ def _load_obb(obb_ref, idx):
     return obb_ref[:, idx]
 
 
-def sact_kernel(obb_ref, aabb_ref, collide_ref, exit_ref, *,
-                use_spheres: bool):
-    bm = obb_ref.shape[0]
-    bn = aabb_ref.shape[0]
+def sact_tile(t, Rb, A, ahb, ohb, *, use_spheres: bool):
+    """Staged SACT over component-unrolled arrays of one common shape.
 
-    # --- unpack (component-unrolled) -----------------------------------
-    oc = [obb_ref[:, i] for i in range(3)]            # obb centre
-    oh = [obb_ref[:, 3 + i] for i in range(3)]        # obb half extents
-    # rot row-major: R[i][j] = obb_ref[:, 6 + 3*i + j]
-    R = [[obb_ref[:, 6 + 3 * i + j] for j in range(3)] for i in range(3)]
-    ac = [aabb_ref[:, i] for i in range(3)]
-    ah = [aabb_ref[:, 3 + i] for i in range(3)]
+    Args are the per-pair quantities as plain component lists — ``t``/
+    ``ahb``/``ohb`` three arrays each, ``Rb``/``A`` (= |R| + eps) 3x3 nested
+    lists — every array sharing one tile shape.  Returns (collide bool,
+    exit_code int32) of that shape.  Shape-agnostic so both the dense
+    (bm, bn)-plane SACT kernel and the (bn,)-lane fused traversal-step
+    kernel share the exact axis formulas (bitwise: same op order).
 
-    def bc_m(x):  # (bm,) -> (bm, bn)
-        return jnp.broadcast_to(x[:, None], (bm, bn))
-
-    def bc_n(x):  # (bn,) -> (bm, bn)
-        return jnp.broadcast_to(x[None, :], (bm, bn))
-
-    t = [bc_m(oc[i]) - bc_n(ac[i]) for i in range(3)]
-    Rb = [[bc_m(R[i][j]) for j in range(3)] for i in range(3)]
-    A = [[jnp.abs(Rb[i][j]) + _EPS for j in range(3)] for i in range(3)]
-    ahb = [bc_n(ah[i]) for i in range(3)]
-    ohb = [bc_m(oh[i]) for i in range(3)]
-
-    neg_inf = jnp.float32(-jnp.inf)
-    decided_sep = jnp.zeros((bm, bn), jnp.bool_)
-    exit_code = jnp.full((bm, bn), 17, jnp.int32)
+    Early exit is predication per lane plus a *conditional return* at tile
+    granularity: once every pair is decided after the box-normal stage, the
+    edge x edge stage is skipped with ``lax.cond`` — the per-tile version
+    of RoboCore's RETURN unit.
+    """
+    shape = t[0].shape
+    decided_sep = jnp.zeros(shape, jnp.bool_)
+    exit_code = jnp.full(shape, 17, jnp.int32)
 
     def note_sep(decided, code, sep_now, code_val):
         newly = sep_now & ~decided
         return decided | sep_now, jnp.where(newly, code_val, code)
 
     # --- stage 0/1: sphere pre-tests (optional) ------------------------
-    confirmed_hit = jnp.zeros((bm, bn), jnp.bool_)
+    confirmed_hit = jnp.zeros(shape, jnp.bool_)
     if use_spheres:
-        d2 = jnp.zeros((bm, bn), jnp.float32)
+        d2 = jnp.zeros(shape, jnp.float32)
         for i in range(3):
             d = jnp.maximum(jnp.abs(t[i]) - ahb[i], 0.0)
             d2 = d2 + d * d
@@ -116,6 +106,36 @@ def sact_kernel(obb_ref, aabb_ref, collide_ref, exit_ref, *,
         all_decided, lambda d, e: (d, e), edge_stage, decided_sep, exit_code)
 
     collide = (~decided_sep) | confirmed_hit
+    return collide, exit_code
+
+
+def sact_kernel(obb_ref, aabb_ref, collide_ref, exit_ref, *,
+                use_spheres: bool):
+    bm = obb_ref.shape[0]
+    bn = aabb_ref.shape[0]
+
+    # --- unpack (component-unrolled) -----------------------------------
+    oc = [obb_ref[:, i] for i in range(3)]            # obb centre
+    oh = [obb_ref[:, 3 + i] for i in range(3)]        # obb half extents
+    # rot row-major: R[i][j] = obb_ref[:, 6 + 3*i + j]
+    R = [[obb_ref[:, 6 + 3 * i + j] for j in range(3)] for i in range(3)]
+    ac = [aabb_ref[:, i] for i in range(3)]
+    ah = [aabb_ref[:, 3 + i] for i in range(3)]
+
+    def bc_m(x):  # (bm,) -> (bm, bn)
+        return jnp.broadcast_to(x[:, None], (bm, bn))
+
+    def bc_n(x):  # (bn,) -> (bm, bn)
+        return jnp.broadcast_to(x[None, :], (bm, bn))
+
+    t = [bc_m(oc[i]) - bc_n(ac[i]) for i in range(3)]
+    Rb = [[bc_m(R[i][j]) for j in range(3)] for i in range(3)]
+    A = [[jnp.abs(Rb[i][j]) + _EPS for j in range(3)] for i in range(3)]
+    ahb = [bc_n(ah[i]) for i in range(3)]
+    ohb = [bc_m(oh[i]) for i in range(3)]
+
+    collide, exit_code = sact_tile(t, Rb, A, ahb, ohb,
+                                   use_spheres=use_spheres)
     collide_ref[...] = collide
     exit_ref[...] = exit_code
 

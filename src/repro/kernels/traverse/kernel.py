@@ -1,0 +1,121 @@
+"""Fused traversal-step Pallas kernel — one wavefront level, boxes in,
+verdict words out.
+
+RoboGPU's RoboCore (§III-C) fuses the staged collision test with the
+traversal control flow so intermediates never leave the unit.  The TPU
+analogue for the wavefront engine: one `pallas_call` per octree level whose
+grid walks the fixed-capacity frontier in (bn,) lane blocks.  Each block
+
+  1. *gathers* its query OBBs by ``q_idx`` from the resident packed OBB
+     table — a one-hot matmul against VMEM, so an out-of-range (padding)
+     index simply gathers zeros instead of faulting;
+  2. reconstructs the frontier nodes' AABBs from their Morton codes
+     in-register (bit twiddling, no HBM lookup);
+  3. runs the staged SACT via :func:`repro.kernels.sact.kernel.sact_tile` —
+     the exact axis formulas of the dense SACT kernel, including the
+     tile-level conditional return that skips the 9 edge x edge axes once
+     every lane in the block is decided (phase 2 of the two-phase frontier
+     cull; phase 1 is the sphere + box-normal stage);
+  4. probes terminality from the gathered ``full`` flag / leaf-level scalar;
+  5. emits ONE packed int32 word per pair (collide | is_term<<1 | exit<<2).
+
+Blocks that lie entirely at or past ``n_live`` write zeros without touching
+the OBB table — the whole-tile analogue of frontier retirement, which is
+what stream compaction between levels buys: decided pairs do not just mask
+off, their tiles are never scheduled.  The expansion mask and CSR child
+codes are pure bit arithmetic on this word plus the frontier's CSR columns,
+feeding directly into the prefix-sum/scatter compaction of
+:mod:`repro.kernels.compact` — the searchsorted occupancy probe of the
+unfused path never runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.octree import jnp_morton_decode
+# _EPS is shared with the dense SACT kernel and core/sact.py: the bitwise
+# fused-vs-unfused identity depends on all arms using the same epsilon.
+from repro.kernels.sact.kernel import _EPS, sact_tile
+
+try:  # CPU-only containers may lack the TPU extension
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def traverse_kernel(scal_i_ref, scal_f_ref, obb_ref, q_ref, code_ref,
+                    full_ref, packed_ref, *, bn: int, use_spheres: bool):
+    j = pl.program_id(0)
+    n_live = scal_i_ref[0]
+    is_leaf = scal_i_ref[1]
+    cell = scal_f_ref[0]
+
+    @pl.when(j * bn >= n_live)
+    def _retired_tile():
+        packed_ref[...] = jnp.zeros((bn,), jnp.int32)
+
+    @pl.when(j * bn < n_live)
+    def _live_tile():
+        # -- gather query boxes by q_idx (one-hot matmul, OOB-safe) -----
+        q = q_ref[...]
+        m_pad = obb_ref.shape[0]
+        onehot = (q[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (bn, m_pad), 1)).astype(jnp.float32)
+        rows = jnp.dot(onehot, obb_ref[...],
+                       preferred_element_type=jnp.float32)       # (bn, 15)
+        oc = [rows[:, i] for i in range(3)]
+        oh = [rows[:, 3 + i] for i in range(3)]
+        R = [[rows[:, 6 + 3 * i + k] for k in range(3)] for i in range(3)]
+
+        # -- node AABB from Morton code (in-register) -------------------
+        xyz = jnp_morton_decode(code_ref[...]).astype(jnp.float32)
+        node_c = [scal_f_ref[1 + i] + (xyz[:, i] + 0.5) * cell
+                  for i in range(3)]
+        node_h = cell * 0.5
+
+        # -- staged SACT, shared tile formulas + conditional return -----
+        t = [oc[i] - node_c[i] for i in range(3)]
+        A = [[jnp.abs(R[i][k]) + _EPS for k in range(3)] for i in range(3)]
+        collide, exit_code = sact_tile(t, R, A, [node_h] * 3, oh,
+                                       use_spheres=use_spheres)
+
+        # -- terminality + packed verdict word --------------------------
+        is_term = (full_ref[...] != 0) | (is_leaf != 0)
+        lane = j * bn + jax.lax.broadcasted_iota(
+            jnp.int32, (1, bn), 1).reshape((bn,))
+        packed = (collide.astype(jnp.int32)
+                  | (is_term.astype(jnp.int32) << 1)
+                  | (exit_code << 2))
+        packed_ref[...] = jnp.where(lane < n_live, packed, 0)
+
+
+def make_traverse_call(capacity: int, m_pad: int, bn: int,
+                       use_spheres: bool, interpret: bool):
+    """Build the pallas_call for one traversal step at a given capacity.
+
+    Inputs: scal_i (2,) int32 [n_live, is_leaf]; scal_f (4,) f32
+    [cell, scene_lo xyz]; obb table (m_pad, 15) resident in VMEM; frontier
+    q_idx / codes / full blocks.  Output: packed (capacity,) int32 words.
+    """
+    kernel = functools.partial(traverse_kernel, bn=bn,
+                               use_spheres=use_spheres)
+    smem = {} if pltpu is None else {"memory_space": pltpu.SMEM}
+    return pl.pallas_call(
+        kernel,
+        grid=(capacity // bn,),
+        in_specs=[
+            pl.BlockSpec(**smem),                         # scal_i, whole
+            pl.BlockSpec(**smem),                         # scal_f, whole
+            pl.BlockSpec((m_pad, 15), lambda j: (0, 0)),  # OBB table
+            pl.BlockSpec((bn,), lambda j: (j,)),          # q_idx
+            pl.BlockSpec((bn,), lambda j: (j,)),          # codes
+            pl.BlockSpec((bn,), lambda j: (j,)),          # full flags
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((capacity,), jnp.int32),
+        interpret=interpret,
+    )

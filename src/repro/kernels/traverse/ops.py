@@ -1,0 +1,146 @@
+"""Fused wavefront traversal step: one level, frontier in / frontier out.
+
+``traverse_step`` is the loop body of the ``wavefront_fused`` engine: it
+takes the live (query, CSR node index) frontier pairs and returns the next
+level's compacted pairs plus the updated verdicts — the only per-level
+HBM-resident intermediates of the fused path.  Compare the
+unfused device arm, which materializes ~5 capacity-sized arrays per level
+(the 4-field SactResult, two searchsorted probe vectors, the 8x-expanded
+candidate codes, and the compaction scratch).
+
+The staged test dispatches like :mod:`repro.kernels.compact`: the Pallas
+traversal-step kernel on TPU (or ``interpret=True`` for CPU validation —
+untenable inside real traversals because interpret mode unrolls one program
+per grid step at trace time), and the jnp two-phase reference elsewhere.
+Both arms share this glue, so verdicts, exit codes, and the CSR expansion
+are backend-independent; and both cull in two phases — spheres + box-normal
+axes decide most pairs, the edge axes run only when survivors remain
+(``lax.cond`` batch-wide in jnp, per-tile in the kernel).
+
+Child expansion is O(1) per candidate: occupancy is bit ``j`` of the node's
+8-bit CSR child mask, the child's code is ``(code << 3) | j``, and its node
+index is ``child_start + popcount(mask & ((1 << j) - 1))`` — no
+searchsorted over the level's code array anywhere in the loop body.  The
+node index also makes the Morton code *redundant in the frontier*: codes
+are re-gathered from the level's code row on entry, so the compaction
+moves (query, node index) pairs — no wider than the unfused arm's
+(query, code) pairs despite the extra CSR capability.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.octree import DeviceOctree, node_centers_from_codes
+from repro.core.sact import (SactResult, axis_tests_from_exit,
+                             mask_frontier_result, sact_frontier_staged)
+from repro.kernels.compact.ops import compact_pairs
+from repro.kernels.sact.ops import pack_obbs
+from repro.kernels.traverse.kernel import make_traverse_call
+from repro.kernels.traverse.ref import unpack_verdicts
+
+
+def _use_pallas_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _test_pallas(obb_c, obb_h, obb_r, q_idx, codes, full_l, cell, scene_lo,
+                 is_leaf, n_live, use_spheres: bool, bn: int,
+                 interpret: bool):
+    """Pallas arm: packed verdict words for the whole frontier."""
+    capacity = q_idx.shape[0]
+    pad = (-capacity) % bn
+    obb = pack_obbs(obb_c, obb_h, obb_r)
+    scal_i = jnp.stack([jnp.asarray(n_live, jnp.int32),
+                        jnp.asarray(is_leaf, jnp.int32)])
+    scal_f = jnp.concatenate([jnp.asarray(cell, jnp.float32).reshape(1),
+                              jnp.asarray(scene_lo, jnp.float32)])
+    call = make_traverse_call(capacity + pad, obb.shape[0], bn, use_spheres,
+                              interpret)
+    packed = call(scal_i, scal_f, obb,
+                  jnp.pad(q_idx.astype(jnp.int32), (0, pad)),
+                  jnp.pad(codes, (0, pad)),
+                  jnp.pad(full_l.astype(jnp.int32), (0, pad)))
+    return packed[:capacity]
+
+
+def traverse_step(obb_c, obb_h, obb_r, dev: DeviceOctree, level, n_live,
+                  q_idx, node_idx, collide, *, use_spheres: bool,
+                  use_pallas: Optional[bool] = None,
+                  use_pallas_compact: Optional[bool] = None,
+                  interpret: Optional[bool] = None, bn: int = 256
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                             dict]:
+    """One fused wavefront level for a single scene / query set.
+
+    Pure function of device arrays (level / n_live may be traced); composes
+    under jit, vmap, and ``lax.while_loop``.  Returns
+    ``(n_next, q_next, idx_next, collide, info)`` where ``info`` carries the
+    per-pair quantities the work model accounts (valid / is_term /
+    SactResult / codes / n_new).
+    """
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    capacity = q_idx.shape[0]
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+    valid = lane < n_live
+    depth = dev.depth
+
+    def level_row(arr):
+        return jax.lax.dynamic_index_in_dim(arr, level, keepdims=False)
+
+    cell = level_row(dev.cell_sizes)
+    n_max = dev.codes.shape[-1]
+    idx_c = jnp.clip(node_idx, 0, n_max - 1)
+    # One (cap, 4) gather for all per-node metadata (code, full, CSR cols).
+    meta = level_row(dev.node_meta)[idx_c]
+    codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
+    full_l = meta[:, 1] != 0
+    child_start = meta[:, 2]
+    child_mask = meta[:, 3]
+    is_leaf = level == depth
+
+    if use_pallas:
+        packed = _test_pallas(obb_c, obb_h, obb_r, q_idx, codes, full_l,
+                              cell, dev.scene_lo, is_leaf, n_live,
+                              use_spheres, bn, interpret)
+        collide_raw, is_term, exit_code = unpack_verdicts(packed)
+        n_sphere = jnp.full((capacity,), 2 if use_spheres else 0, jnp.int32)
+        res = mask_frontier_result(
+            SactResult(collide=collide_raw, exit_code=exit_code,
+                       axis_tests=axis_tests_from_exit(exit_code),
+                       sphere_tests=n_sphere), valid)
+        is_term = is_term | is_leaf
+    else:
+        node_c, node_h = node_centers_from_codes(codes, dev.scene_lo, cell)
+        res = sact_frontier_staged(obb_c[q_idx], obb_h[q_idx], obb_r[q_idx],
+                                   node_c, node_h, valid,
+                                   use_spheres=use_spheres)
+        is_term = jnp.where(is_leaf, True, full_l)
+
+    overlap = res.collide & valid
+    term_hit = overlap & is_term
+    collide = collide.at[q_idx].max(term_hit)
+
+    # ---- O(1) CSR expansion + on-device stream compaction -------------
+    eight = jnp.arange(8, dtype=jnp.int32)
+    occupied = ((child_mask[:, None] >> eight[None, :]) & 1) != 0  # (cap, 8)
+    below = (jnp.int32(1) << eight) - 1                  # bits j' < j
+    cand_idx = child_start[:, None] + jax.lax.population_count(
+        child_mask[:, None] & below[None, :])
+    # Early exit: decided queries retire their whole wavefront share.
+    expand = overlap & ~is_term & ~collide[q_idx]
+    child_live = (expand[:, None] & occupied).reshape(-1)          # (cap*8,)
+    n_new = jnp.sum(child_live.astype(jnp.int32))
+    cnt, q_next, idx_next = compact_pairs(
+        child_live, jnp.repeat(q_idx, 8),
+        cand_idx.reshape(-1).astype(jnp.uint32), capacity,
+        use_pallas=use_pallas_compact)
+    idx_next = idx_next.astype(jnp.int32)
+    info = dict(valid=valid, is_term=is_term, res=res, codes=codes,
+                n_new=n_new)
+    return cnt, q_next, idx_next, collide, info

@@ -1,0 +1,51 @@
+"""jnp oracle for the fused traversal-step test kernel.
+
+Contract (shared with kernel.py): given one wavefront level's frontier —
+``q_idx``/``codes``/``full`` lanes plus the resident packed OBB table — emit
+one packed int32 word per lane:
+
+  bit 0      collide   (staged SACT verdict)
+  bit 1      is_term   (leaf level, or full-subtree internal node)
+  bits 2..6  exit_code (see repro.core.sact EXIT_*)
+
+Lanes at or past ``n_live`` pack to 0.  The axis-test and sphere-test work
+counters are *derived* from the exit code by the caller
+(:func:`repro.core.sact.axis_tests_from_exit`), so one word per pair is the
+kernel's entire HBM output — that, plus the compacted next frontier, is the
+whole per-level traffic of the fused path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sact import SactResult, sact_frontier_staged
+
+
+def pack_verdicts(res: SactResult, is_term) -> jnp.ndarray:
+    """(collide, is_term, exit_code) -> packed int32 word per lane."""
+    return (res.collide.astype(jnp.int32)
+            | (is_term.astype(jnp.int32) << 1)
+            | (res.exit_code << 2))
+
+
+def unpack_verdicts(packed):
+    """Packed word -> (collide bool, is_term bool, exit_code int32)."""
+    return (packed & 1) != 0, (packed & 2) != 0, packed >> 2
+
+
+def traverse_test_ref(obb_c, obb_h, obb_r, q_idx, node_c, node_h, full,
+                      is_leaf, n_live, use_spheres: bool):
+    """Reference traversal-step test: gather + staged SACT + terminality.
+
+    ``node_c``/``node_h`` are the frontier nodes' AABB centres/halves (the
+    kernel reconstructs them from Morton codes in-register); ``full`` the
+    gathered full-subtree flags; ``is_leaf`` whether this level is the leaf
+    level.  Returns the packed (capacity,) verdict words.
+    """
+    capacity = q_idx.shape[0]
+    valid = jnp.arange(capacity, dtype=jnp.int32) < n_live
+    res = sact_frontier_staged(obb_c[q_idx], obb_h[q_idx], obb_r[q_idx],
+                               node_c, node_h, valid,
+                               use_spheres=use_spheres)
+    is_term = jnp.where(is_leaf, True, full)
+    return jnp.where(valid, pack_verdicts(res, is_term), 0)

@@ -4,12 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-# Property-based cases need hypothesis (the ``dev`` extra); without it the
-# module still collects and the example-based tests below run.
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:
-    given = None
+from conftest import seeded_property
 
 from repro.core.ballquery import (ball_query_pray, ball_query_psphere,
                                   ball_query_ref)
@@ -73,14 +68,11 @@ def _ballquery_property(seed):
         assert cnt[m] == min(true_n, k)                 # exact counts
 
 
-if given is not None:
-    @settings(max_examples=10, deadline=None)
-    @given(st.integers(0, 2**31 - 1))
-    def test_ballquery_property_random(seed):
-        _ballquery_property(seed)
-else:
-    def test_ballquery_property_random():
-        pytest.importorskip("hypothesis")
+@seeded_property(max_examples=10)
+def test_ballquery_property_random(seed):
+    """Hypothesis when available; deterministic fixed seeds otherwise —
+    either way the property runs and the tier-1 suite reports 0 skipped."""
+    _ballquery_property(seed)
 
 
 def test_fps_invariants():
