@@ -2,12 +2,15 @@
 
 Usage:
   python benchmarks/check_regression.py BENCH_smoke.json \\
-      benchmarks/results/smoke/results.json [--threshold 1.5] [--strict]
+      benchmarks/results/smoke/results.json [--threshold 1.5] \\
+      [--fail-threshold 2.0] [--strict]
 
-Rows are matched by name; a row whose ``us_per_call`` grew past
+Rows are matched by name.  A row whose ``us_per_call`` grew past
 ``threshold`` x baseline is reported as a GitHub Actions ``::warning::``
-line (warn-only by default — shared CI runners are noisy; pass ``--strict``
-to turn warnings into a nonzero exit).  Rows under ``--min-us`` in the
+line (warn-only — shared CI runners are noisy; pass ``--strict`` to turn
+warnings into a nonzero exit).  A row past ``--fail-threshold`` is an
+``::error::`` and ALWAYS fails the job: noise does not double a row, so a
+>2x regression is treated as real.  Rows under ``--min-us`` in the
 baseline are ignored (timer noise / model-only 0.0 rows), as are rows that
 exist on only one side (new or retired benches).
 """
@@ -30,21 +33,28 @@ def main() -> int:
     ap.add_argument("new", help="fresh results.json from --smoke")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="warn when new > threshold * baseline")
+    ap.add_argument("--fail-threshold", type=float, default=2.0,
+                    help="hard-fail when new > fail_threshold * baseline")
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="ignore baseline rows faster than this")
     ap.add_argument("--strict", action="store_true",
-                    help="exit 1 when any row regresses")
+                    help="exit 1 when any row regresses past --threshold")
     args = ap.parse_args()
 
     base = load_rows(args.baseline)
     new = load_rows(args.new)
     shared = sorted(set(base) & set(new))
-    regressions = []
+    regressions, failures = [], []
     for name in shared:
         b, n = base[name], new[name]
         if b < args.min_us:
             continue
-        if n > args.threshold * b:
+        if n > args.fail_threshold * b:
+            failures.append((name, b, n))
+            print(f"::error title=bench regression::{name}: "
+                  f"{b:.0f}us -> {n:.0f}us ({n / b:.2f}x, "
+                  f"hard limit {args.fail_threshold}x)")
+        elif n > args.threshold * b:
             regressions.append((name, b, n))
             print(f"::warning title=bench regression::{name}: "
                   f"{b:.0f}us -> {n:.0f}us ({n / b:.2f}x, "
@@ -52,7 +62,10 @@ def main() -> int:
     print(f"# compared {len(shared)} rows "
           f"({len(base) - len(shared)} baseline-only, "
           f"{len(new) - len(shared)} new-only), "
-          f"{len(regressions)} regression(s) past {args.threshold}x")
+          f"{len(regressions)} warning(s) past {args.threshold}x, "
+          f"{len(failures)} failure(s) past {args.fail_threshold}x")
+    if failures:
+        return 1
     return 1 if (regressions and args.strict) else 0
 
 

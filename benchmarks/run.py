@@ -49,7 +49,7 @@ FULL_SCALE = {"points": 524288, "trajs": 25, "wps": 60, "depth": 7,
 # CI artifact job: tiny scene, 1 repeat, subset of benches (see --smoke).
 SMOKE_SCALE = {"points": 4096, "trajs": 2, "wps": 6, "depth": 4,
                "mpaccel_scenarios": 1, "mpaccel_points": 2048}
-SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched")
+SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched", "ragged")
 
 _scene_cache = {}
 
@@ -70,6 +70,7 @@ def get_scene(name, n_points, depth, trajs, wps):
 
 def fig11_collision_speedup(S):
     rows = {}
+    persist_speedups = []
     for env in ENVIRONMENTS:
         _, tree, obbs = get_scene(env, S["points"], S["depth"], S["trajs"],
                                   S["wps"])
@@ -77,7 +78,8 @@ def fig11_collision_speedup(S):
         ref = None
         engines = {}
         for mode in ("naive", "rta_like", "staged_noexit", "predicated",
-                     "wavefront_host", "wavefront", "wavefront_fused"):
+                     "wavefront_host", "wavefront", "wavefront_fused",
+                     "wavefront_persistent"):
             eng = CollisionEngine(tree, EngineConfig(mode=mode))
             engines[mode] = eng
             col, c = eng.query(obbs)
@@ -108,11 +110,13 @@ def fig11_collision_speedup(S):
             "dev": lambda: engines["wavefront"].query(obbs)}, repeats=5)
         walls_df = time_group({
             "dev": lambda: engines["wavefront"].query(obbs),
-            "fused": lambda: engines["wavefront_fused"].query(obbs)},
+            "fused": lambda: engines["wavefront_fused"].query(obbs),
+            "persist": lambda: engines["wavefront_persistent"].query(obbs)},
             repeats=21)
         host_wall = walls_hd["host"]
         dev_wall = min(walls_hd["dev"], walls_df["dev"])
         fused_wall = walls_df["fused"]
+        persist_wall = walls_df["persist"]
         emit(f"fig11/{env}/engine=device_wavefront", dev_wall * 1e6,
              f"wall_speedup_vs_host={host_wall/max(dev_wall, 1e-9):.1f}x")
         emit(f"fig11/{env}/engine=device_fused", fused_wall * 1e6,
@@ -120,6 +124,15 @@ def fig11_collision_speedup(S):
              f"{dev_wall/max(fused_wall, 1e-9):.2f}x;"
              f"wall_speedup_vs_host="
              f"{host_wall/max(fused_wall, 1e-9):.1f}x")
+        persist_speedups.append(fused_wall / max(persist_wall, 1e-9))
+        emit(f"fig11/{env}/engine=device_persistent", persist_wall * 1e6,
+             f"wall_speedup_vs_fused={persist_speedups[-1]:.2f}x;"
+             f"wall_speedup_vs_host="
+             f"{host_wall/max(persist_wall, 1e-9):.1f}x")
+    emit("fig11/persistent_vs_fused_geomean", 0.0,
+         f"geomean_wall_speedup="
+         f"{float(np.exp(np.mean(np.log(persist_speedups)))):.2f}x;"
+         f"envs={len(persist_speedups)}")
 
 
 # ---------------------------------------------------------------------------
@@ -130,7 +143,7 @@ def fig12_unit_utilization(S):
     _, tree, obbs = get_scene("cubby", S["points"], S["depth"], S["trajs"],
                               S["wps"])
     for mode in ("staged_noexit", "predicated", "wavefront",
-                 "wavefront_fused"):
+                 "wavefront_fused", "wavefront_persistent"):
         eng = CollisionEngine(tree, EngineConfig(mode=mode))
         _, c = eng.query(obbs)
         total = work_model_cycles(c, mode)
@@ -390,21 +403,26 @@ def batched_throughput(S):
     host = CollisionEngine(tree, EngineConfig(mode="wavefront_host"))
     dev = CollisionEngine(tree, EngineConfig(mode="wavefront"))
     fused = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+    persist = CollisionEngine(tree, EngineConfig(mode="wavefront_persistent"))
     col_h, _ = host.query_batched(batch)          # warm + reference
     col_d, _ = dev.query_batched(batch)           # compile
     col_f, _ = fused.query_batched(batch)
+    col_p, _ = persist.query_batched(batch)
     assert (col_d == col_h).all(), "batched verdict mismatch"
     assert (col_f == col_h).all(), "batched fused verdict mismatch"
+    assert (col_p == col_h).all(), "batched persistent verdict mismatch"
     n = B * M
     walls_hd = time_group({"h": lambda: host.query_batched(batch),
                            "d": lambda: dev.query_batched(batch)},
                           repeats=5)
     walls_df = time_group({"d": lambda: dev.query_batched(batch),
-                           "f": lambda: fused.query_batched(batch)},
+                           "f": lambda: fused.query_batched(batch),
+                           "p": lambda: persist.query_batched(batch)},
                           repeats=15)
     t_h = walls_hd["h"]
     t_d = min(walls_hd["d"], walls_df["d"])
     t_f = walls_df["f"]
+    t_p = walls_df["p"]
     emit("batched/engine=wavefront_host", t_h * 1e6,
          f"queries={n};qps={n/max(t_h, 1e-9):.0f}")
     emit("batched/engine=device_wavefront", t_d * 1e6,
@@ -416,6 +434,68 @@ def batched_throughput(S):
          f"speedup_vs_host={t_h/max(t_f, 1e-9):.1f}x;"
          f"speedup_vs_unfused={t_d/max(t_f, 1e-9):.2f}x;"
          f"collisions={int(col_f.sum())}")
+    emit("batched/engine=device_persistent", t_p * 1e6,
+         f"queries={n};qps={n/max(t_p, 1e-9):.0f};"
+         f"speedup_vs_host={t_h/max(t_p, 1e-9):.1f}x;"
+         f"speedup_vs_fused={t_f/max(t_p, 1e-9):.2f}x;"
+         f"collisions={int(col_p.sum())}")
+
+
+# ---------------------------------------------------------------------------
+# Ragged multi-scene frontier — mixed-size scene batch in ONE compiled call
+# vs the padded-vmap path that pays the widest scene for every lane
+# ---------------------------------------------------------------------------
+
+def ragged_scenes(S):
+    from repro.core.octree import build_octree as _build
+    from repro.core.wavefront import query_batched_scenes
+    rs = np.random.RandomState(0)
+    M = max(S["trajs"] * 4, 8)
+    depth = max(S["depth"] - 2, 3)
+
+    from repro.core.geometry import random_obbs
+
+    def scene_set(sizes):
+        trees, sets = [], []
+        for i, n_pts in enumerate(sizes):
+            pts = rs.uniform(-1, 1, (n_pts, 3)).astype(np.float32)
+            trees.append(_build(pts, depth=depth))
+            sets.append(random_obbs(jax.random.PRNGKey(i), M))
+        stack = OBBs(center=jnp.stack([o.center for o in sets]),
+                     half=jnp.stack([o.half for o in sets]),
+                     rot=jnp.stack([o.rot for o in sets]))
+        return trees, stack
+
+    small = S["points"] // 16
+    trees_s, stack_s = scene_set([small] * 3)             # small-only batch
+    trees_m, stack_m = scene_set([small] * 3 + [S["points"]])   # + one big
+
+    # Both CSR modes alias to the same ragged flat-frontier implementation
+    # inside query_batched_scenes, so one ragged arm suffices.
+    arms = {
+        "padded_wavefront": EngineConfig(mode="wavefront"),
+        "ragged_persistent": EngineConfig(mode="wavefront_persistent"),
+    }
+    walls = {}
+    for name, cfg in arms.items():
+        for tag, (trees, stack) in (("small", (trees_s, stack_s)),
+                                    ("mixed", (trees_m, stack_m))):
+            query_batched_scenes(trees, stack, cfg)       # warm/compile
+            walls[(name, tag)] = time_group(
+                {"q": lambda t=trees, st=stack, c=cfg:
+                 query_batched_scenes(t, st, c)}, repeats=7)["q"]
+    for name in arms:
+        t_small, t_mixed = walls[(name, "small")], walls[(name, "mixed")]
+        # padding evidence: how much does ONE big scene inflate the batch?
+        emit(f"ragged/{name}", t_mixed * 1e6,
+             f"small_batch_us={t_small*1e6:.0f};"
+             f"big_scene_cost={t_mixed/max(t_small, 1e-9):.2f}x")
+    t_pad, t_rag = (walls[("padded_wavefront", "mixed")],
+                    walls[("ragged_persistent", "mixed")])
+    emit("ragged/headline", 0.0,
+         f"ragged_vs_padded={t_pad/max(t_rag, 1e-9):.2f}x;"
+         f"pad_inflation={walls[('padded_wavefront', 'mixed')]/max(walls[('padded_wavefront', 'small')], 1e-9):.2f}x;"
+         f"ragged_inflation={walls[('ragged_persistent', 'mixed')]/max(walls[('ragged_persistent', 'small')], 1e-9):.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -459,6 +539,7 @@ BENCHES = {
     "fig18": fig18_pipeline,
     "fig19": fig19_mcl,
     "batched": batched_throughput,
+    "ragged": ragged_scenes,
     "roofline": roofline_table,
 }
 

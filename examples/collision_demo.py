@@ -37,7 +37,8 @@ def main():
     print("-" * len(header))
     ref = None
     for mode in ("naive", "rta_like", "staged_noexit", "predicated",
-                 "wavefront_host", "wavefront", "wavefront_fused"):
+                 "wavefront_host", "wavefront", "wavefront_fused",
+                 "wavefront_persistent"):
         eng = CollisionEngine(tree, EngineConfig(mode=mode,
                                                  use_spheres=args.spheres))
         col, _ = eng.query(obbs)          # warmup/compile

@@ -31,6 +31,21 @@ exactly the paper's "intermediates never leave the unit" discipline.  The
 unfused device arm instead materializes ~5 capacity-sized arrays per level
 (4-field SactResult, searchsorted probe vectors, 8x-expanded candidate
 codes, compaction scratch), which the 424 B/test figure models.
+
+Persistent megakernel (kernels/persist, ``mode="wavefront_persistent"``):
+the WHOLE traversal is one kernel and the frontier lives in VMEM for its
+entire life, so HBM-resident frontier traffic collapses from
+40 B/pair/level to a per-QUERY cost paid once:
+  seed (query, root) pair in                                 = 12 B
+  packed verdict word out                                    =  4 B
+  per-query cost                                             = 16 B
+plus spill traffic only when a tile's frontier overflows VMEM and pairs
+take the HBM spill ring (out + replay back in, 12 B each way):
+  per spilled pair                                           = 24 B
+The node-metadata and OBB tables still stream HBM->VMEM once per *kernel*
+(not per level), amortized across every pair of every level — the
+closest TPU analogue of the paper's conditional returns never leaving the
+core.
 """
 from __future__ import annotations
 
@@ -42,6 +57,8 @@ import numpy as np
 BYTES_UNFUSED_TEST = 424
 BYTES_FUSED_TEST = 92
 BYTES_FUSED_STEP = 40
+BYTES_PERSIST_QUERY = 16
+BYTES_PERSIST_SPILL = 24
 BYTES_SHADER_HANDOFF = 128
 NUM_EXIT_CODES = 18
 
@@ -62,6 +79,7 @@ class Counters:
     shader_invocations: int = 0
     bytes_moved: int = 0
     frontier_overflow: int = 0          # entries dropped at capacity (should be 0)
+    escalations: int = 0                # overflow replays before a clean run
     wall_time_s: float = 0.0
 
     def merge_exit_codes(self, codes: np.ndarray, valid: np.ndarray) -> None:
@@ -86,6 +104,7 @@ class Counters:
         self.shader_invocations += other.shader_invocations
         self.bytes_moved += other.bytes_moved
         self.frontier_overflow += other.frontier_overflow
+        self.escalations += other.escalations
         self.exit_histogram += other.exit_histogram
         a, b = self.nodes_per_level, other.nodes_per_level
         self.nodes_per_level = [

@@ -240,12 +240,92 @@ def stack_device_octrees(trees: List[Octree]) -> DeviceOctree:
         depth=depth)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MultiSceneOctree:
+    """Flat multi-scene CSR table: one row per level, scenes concatenated.
+
+    The ragged alternative to :func:`stack_device_octrees`: instead of a
+    scene axis padded to the widest scene, level ``l`` holds the nodes of
+    ALL scenes back to back (scene-major), so the pad per row is shared by
+    the whole batch and total work scales with the *sum* of scene sizes,
+    not ``S x max``.  ``child_start`` is rebased to global next-level
+    indices at build time, so traversal code is identical to the
+    single-scene CSR path; Morton codes stay scene-local (a node's AABB
+    derives from its code plus its scene's ``scene_lo`` / cell size, both
+    gathered per pair via ``scene_of_query``).  Scene ``s``'s root sits at
+    flat index ``s`` of the level-0 row.
+    """
+
+    node_meta: jax.Array   # (depth+1, n_max, 4) int32 [code, full, start, mask]
+    counts: jax.Array      # (depth+1,) int32 total nodes per level
+    cell_sizes: jax.Array  # (S, depth+1) float32 per-scene cell edge
+    scene_lo: jax.Array    # (S, 3) float32
+    depth: int             # static shared leaf level
+
+    @property
+    def num_scenes(self) -> int:
+        return self.cell_sizes.shape[0]
+
+    def tree_flatten(self):
+        return ((self.node_meta, self.counts, self.cell_sizes,
+                 self.scene_lo), self.depth)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, depth=aux)
+
+
+def concat_device_octrees(trees: List[Octree]) -> MultiSceneOctree:
+    """Concatenate scenes into one flat per-level CSR table (see
+    :class:`MultiSceneOctree`).  All trees must share a depth; node counts
+    may differ arbitrarily — no per-scene padding happens."""
+    assert trees, "need at least one octree"
+    depth = trees[0].depth
+    assert all(t.depth == depth for t in trees), "scene depths must match"
+    L = depth + 1
+    totals = [sum(len(t.levels[l].codes) for t in trees) for l in range(L)]
+    n_max = max(totals)
+    meta = np.zeros((L, n_max, 4), np.int32)
+    meta[:, :, 0] = PAD_CODE.view(np.int32)
+    for l in range(L):
+        off = 0
+        off_next = np.cumsum(
+            [0] + [len(t.levels[l + 1].codes) for t in trees]
+        ) if l < depth else None
+        for s, t in enumerate(trees):
+            lvl = t.levels[l]
+            n = len(lvl.codes)
+            meta[l, off:off + n, 0] = lvl.codes.view(np.int32)
+            meta[l, off:off + n, 1] = lvl.full.astype(np.int32)
+            if l < depth:   # rebase child pointers into the flat next row
+                meta[l, off:off + n, 2] = lvl.child_start + off_next[s]
+                meta[l, off:off + n, 3] = lvl.child_mask
+            off += n
+    cells = np.asarray([[t.cell_size(l) for l in range(L)] for t in trees],
+                       np.float32)
+    los = np.stack([np.asarray(t.scene_lo, np.float32) for t in trees])
+    return MultiSceneOctree(node_meta=jnp.asarray(meta),
+                            counts=jnp.asarray(totals, jnp.int32),
+                            cell_sizes=jnp.asarray(cells),
+                            scene_lo=jnp.asarray(los), depth=depth)
+
+
 def node_centers_from_codes(codes: jax.Array, scene_lo: jax.Array,
-                            cell_size: float) -> Tuple[jax.Array, jax.Array]:
-    """Codes (K,) at a level -> (centers (K,3), halves (K,3)). jit-safe."""
+                            cell_size) -> Tuple[jax.Array, jax.Array]:
+    """Codes (K,) at a level -> (centers (K,3), halves (K,3)). jit-safe.
+
+    ``scene_lo`` is (3,) or per-code (K, 3); ``cell_size`` a scalar or a
+    per-code (K,) array — the ragged multi-scene frontier gathers both per
+    pair, single-scene traversals pass the scalars.
+    """
     xyz = jnp_morton_decode(codes).astype(jnp.float32)
-    center = scene_lo[None, :] + (xyz + 0.5) * cell_size
-    half = jnp.full_like(center, cell_size / 2.0)
+    cell = jnp.asarray(cell_size, jnp.float32)
+    if cell.ndim:
+        cell = cell[..., None]
+    lo = scene_lo if scene_lo.ndim > 1 else scene_lo[None, :]
+    center = lo + (xyz + 0.5) * cell
+    half = jnp.broadcast_to(cell / 2.0, center.shape)
     return center, half
 
 

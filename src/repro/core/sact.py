@@ -216,7 +216,12 @@ def sact_frontier_staged(obb_center, obb_half, obb_rot, aabb_center,
     conditional return: on typical scenes most deep-level frontiers decide
     entirely in phase 1, so the 9 costliest axis formulas are skipped for
     the whole batch.  (Under ``vmap`` the cond lowers to a select and both
-    phases execute — correctness is unaffected.)
+    phases execute — correctness is unaffected; the persistent engine
+    flattens batches into one frontier pool instead of vmapping partly for
+    this reason.)  Served frontiers: the fused step's capacity-wide buffer
+    (:mod:`repro.kernels.traverse`), and the persistent ref's live-prefix
+    slices (:mod:`repro.kernels.persist`), where the skip decision is per
+    processing width — finer than capacity-wide, coarser than per-tile.
 
     Exit codes and axis-test counts are untouched by the skip: phase-2
     margins only influence lanes that reach phase 2, and when the cond takes

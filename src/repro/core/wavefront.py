@@ -34,6 +34,20 @@ word per pair.  Verdicts and work counters are bitwise-identical to
 ``wavefront``; only the modeled bytes differ (frontier-in/frontier-out,
 see :mod:`repro.core.counters`).
 
+``mode="wavefront_persistent"`` goes one step further: the ENTIRE
+multi-level traversal is one call into :mod:`repro.kernels.persist` — on
+TPU a single persistent megakernel whose per-tile frontier lives in
+double-buffered VMEM scratch for the whole walk (HBM sees one seed pair in
+and one verdict word out per query, plus a spill ring under overflow), and
+elsewhere a live-prefix jnp reference that processes each level at the
+smallest power-of-two width covering ``n_live`` and places CSR children
+in-register via per-parent popcount scans.  Multi-scene batches
+(:func:`query_batched_scenes`) and (B, M) trajectory batches run as a
+*ragged flat frontier* of (scene, query, CSR node) triples over a
+concatenated multi-scene CSR table — one compiled call and one compaction
+pool, padding-free across mixed scene sizes.  Verdicts and work counters
+stay bitwise-identical to ``wavefront_fused``.
+
 Capacity / overflow policy: ``capacity`` is static per compile.  Sizing it
 to the worst-case frontier bound (``min(8 * bound_prev, M * n_level)``)
 wastes orders of magnitude of compute on typical scenes, so the engine
@@ -67,6 +81,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import weakref
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -75,20 +90,25 @@ import numpy as np
 
 from repro.core import sact as sact_mod
 from repro.core.counters import (BYTES_FUSED_STEP, BYTES_FUSED_TEST,
+                                 BYTES_PERSIST_QUERY, BYTES_PERSIST_SPILL,
                                  BYTES_SHADER_HANDOFF, BYTES_UNFUSED_TEST,
                                  NUM_EXIT_CODES, Counters)
 from repro.core.geometry import OBBs
-from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree, device_octree,
+from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree,
+                               concat_device_octrees, device_octree,
                                lookup_children, node_centers_from_codes,
                                stack_device_octrees)
 from repro.core.sact import NUM_AXES, SactResult
 from repro.kernels.compact.ops import compact_pairs
+from repro.kernels.persist.ops import traverse_whole
 from repro.kernels.traverse.ops import traverse_step
 
 MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
-         "wavefront", "wavefront_fused")
+         "wavefront", "wavefront_fused", "wavefront_persistent")
 #: Modes whose traversal runs fully on-device inside one compiled call.
-DEVICE_MODES = ("wavefront", "wavefront_fused")
+DEVICE_MODES = ("wavefront", "wavefront_fused", "wavefront_persistent")
+#: CSR-frontier modes: multi-scene batches run on the ragged flat frontier.
+CSR_MODES = ("wavefront_fused", "wavefront_persistent")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,23 +120,30 @@ class EngineConfig:
     query_block: int = 128         # naive-mode OBB block size
     frontier_capacity: Optional[int] = None  # device engine: static capacity
     use_pallas_compact: Optional[bool] = None  # None = auto (TPU only)
-    use_pallas_traverse: Optional[bool] = None  # fused step kernel; None=auto
+    use_pallas_traverse: Optional[bool] = None  # fused step / persistent
+    #                                            megakernel; None = auto
 
     def __post_init__(self):
-        assert self.mode in MODES, self.mode
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown engine mode {self.mode!r}; allowed modes: "
+                f"{', '.join(MODES)}")
 
     @property
     def early_exit(self) -> bool:
-        return self.mode in ("predicated", "wavefront_host", "wavefront",
-                             "wavefront_fused")
+        return self.mode in ("predicated", "wavefront_host") + DEVICE_MODES
 
     @property
     def stage_split(self) -> bool:
-        return self.mode in ("wavefront_host", "wavefront", "wavefront_fused")
+        return self.mode in ("wavefront_host",) + DEVICE_MODES
 
     @property
     def fused(self) -> bool:
         return self.mode == "wavefront_fused"
+
+    @property
+    def persistent(self) -> bool:
+        return self.mode == "wavefront_persistent"
 
     @property
     def device_resident(self) -> bool:
@@ -161,18 +188,28 @@ def _initial_capacity(num_queries: int, cfg: EngineConfig) -> int:
     return max(_bucket(guess, cfg), num_queries)
 
 
-def _escalate(run, num_queries: int, worst: int, cfg: EngineConfig):
+def _escalate(run, num_queries: int, worst: int, cfg: EngineConfig,
+              start: Optional[int] = None):
     """Run ``run(capacity)`` -> (collide, stats), replaying at 4x capacity
     while the completed call reports frontier overflow.  A pinned
-    ``frontier_capacity`` disables escalation (deterministic latency)."""
+    ``frontier_capacity`` disables escalation (deterministic latency).
+
+    ``start`` seeds the first attempt (the engine remembers the last clean
+    capacity per query shape, so repeat queries skip the replay ladder).
+    Returns (collide, stats, clean_capacity, num_replays).
+    """
     cap = _initial_capacity(num_queries, cfg)
+    if start is not None and cfg.frontier_capacity is None:
+        cap = min(max(start, cap), max(worst, num_queries))
+    replays = 0
     while True:
         collide, st = run(cap)
         if cfg.frontier_capacity is not None or cap >= worst:
-            return collide, st
+            return collide, st, cap, replays
         if int(jax.device_get(jnp.sum(st["overflow"]))) == 0:
-            return collide, st
+            return collide, st, cap, replays
         cap = min(max(cap * 4, cfg.min_bucket), worst)
+        replays += 1
 
 
 # ---------------------------------------------------------------------------
@@ -314,50 +351,60 @@ def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     return out[4], out[5]
 
 
-def _traverse_mode(fused: bool):
-    """Select the per-scene traversal implementation for a mode."""
-    def run(c, h, r, d, capacity, use_spheres, use_pallas,
-            use_pallas_traverse):
-        if fused:
+#: Trace counts per cached-traversal key; Python side effects run only at
+#: trace time, so a key whose count stays 1 proved its cache hits.
+_TRACE_COUNTS: dict = {}
+
+
+@functools.lru_cache(maxsize=None)
+def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
+                  use_pallas, use_pallas_traverse):
+    """One jit-compiled traversal per (mode, batch kind, capacity, statics).
+
+    The LRU gives every (mode, capacity, ...) configuration a *stable
+    callable identity*, so jax.jit's shape-keyed cache persists across
+    overflow-escalation replays and across repeated ``CollisionEngine``
+    constructions on same-shaped scenes — neither retraces.  See
+    :func:`traversal_cache_info` for the observability hook tests use.
+    """
+    key = (mode, batch, capacity, use_spheres, use_pallas,
+           use_pallas_traverse)
+
+    def base(c, h, r, d, soq=None):
+        _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+        if mode == "wavefront_persistent" or soq is not None:
+            # Whole-traversal megakernel / live-prefix ref; the ragged
+            # multi-scene flat frontier (soq given) also lands here for
+            # every CSR mode.
+            return traverse_whole(c, h, r, d, capacity,
+                                  use_spheres=use_spheres,
+                                  use_pallas=use_pallas_traverse,
+                                  scene_of_query=soq)
+        if mode == "wavefront_fused":
             return _traverse_fused(c, h, r, d, capacity, use_spheres,
                                    use_pallas, use_pallas_traverse)
         return _traverse(c, h, r, d, capacity, use_spheres, use_pallas)
-    return run
+
+    if batch == "single":
+        fn = base
+    elif batch == "batch":       # (B, M) query sets against one scene
+        def fn(c, h, r, d, soq=None):
+            return jax.vmap(lambda cc, hh, rr: base(cc, hh, rr, d))(c, h, r)
+    else:                        # padded stacked scenes (legacy vmap path)
+        def fn(c, h, r, d, soq=None):
+            return jax.vmap(lambda cc, hh, rr, dd: base(cc, hh, rr, dd))(
+                c, h, r, d)
+    return jax.jit(fn)
 
 
-_TRAVERSE_STATICS = ("capacity", "use_spheres", "use_pallas",
-                     "use_pallas_traverse", "fused")
+def traversal_cache_info() -> dict:
+    """Cache observability: lru entries + per-key trace counts."""
+    info = _traversal_fn.cache_info()
+    return dict(hits=info.hits, misses=info.misses,
+                entries=info.currsize, traces=dict(_TRACE_COUNTS))
 
 
-@functools.partial(jax.jit, static_argnames=_TRAVERSE_STATICS)
-def _traverse_single(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                     use_pallas, use_pallas_traverse=None, fused=False):
-    return _traverse_mode(fused)(obb_c, obb_h, obb_r, dev, capacity,
-                                 use_spheres, use_pallas,
-                                 use_pallas_traverse)
-
-
-@functools.partial(jax.jit, static_argnames=_TRAVERSE_STATICS)
-def _traverse_batched(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                      use_pallas, use_pallas_traverse=None, fused=False):
-    """(B, M) query batches against one scene, one compiled call."""
-    run = _traverse_mode(fused)
-    return jax.vmap(
-        lambda c, h, r: run(c, h, r, dev, capacity, use_spheres, use_pallas,
-                            use_pallas_traverse))(obb_c, obb_h, obb_r)
-
-
-@functools.partial(jax.jit, static_argnames=_TRAVERSE_STATICS)
-def _traverse_scenes(obb_c, obb_h, obb_r, dev, capacity, use_spheres,
-                     use_pallas, use_pallas_traverse=None, fused=False):
-    """(S, M) query sets against S stacked scenes, one compiled call."""
-    run = _traverse_mode(fused)
-    return jax.vmap(
-        lambda c, h, r, d: run(c, h, r, d, capacity, use_spheres, use_pallas,
-                               use_pallas_traverse))(obb_c, obb_h, obb_r, dev)
-
-
-def _stats_to_counters(st, fused: bool, rta_like: bool = False) -> Counters:
+def _stats_to_counters(st, mode: str, replays: int = 0) -> Counters:
     st = jax.device_get(st)
     c = Counters()
 
@@ -370,16 +417,24 @@ def _stats_to_counters(st, fused: bool, rta_like: bool = False) -> Counters:
     c.axis_tests_decoded = tot("axis_dec")
     c.sphere_tests = tot("sphere")
     c.frontier_overflow = tot("overflow")
+    c.escalations = replays
     per = np.asarray(st["per_level"], np.int64)
     if per.ndim > 1:                       # batched: sum lanes per level
         per = per.reshape(-1, per.shape[-1]).sum(axis=0)
     c.nodes_per_level = [int(n) for n in per if n > 0]
     hist = np.asarray(st["exit_hist"], np.int64)
     c.exit_histogram += hist.reshape(-1, hist.shape[-1]).sum(axis=0)
-    # Fused step: frontier-in/frontier-out traffic only (see counters.py).
-    per_test = BYTES_FUSED_STEP if fused else BYTES_UNFUSED_TEST
-    c.bytes_moved = c.nodes_traversed * per_test
-    del rta_like
+    # Bytes models (see counters.py): per-level arms move the frontier
+    # through HBM every level; the persistent megakernel only moves each
+    # query's seed in / verdict out, plus spill-ring traffic.
+    if mode == "wavefront_persistent":
+        seeds = int(per[0]) if per.size else 0
+        c.bytes_moved = (seeds * BYTES_PERSIST_QUERY
+                         + c.frontier_overflow * BYTES_PERSIST_SPILL)
+    elif mode == "wavefront_fused":
+        c.bytes_moved = c.nodes_traversed * BYTES_FUSED_STEP
+    else:
+        c.bytes_moved = c.nodes_traversed * BYTES_UNFUSED_TEST
     return c
 
 
@@ -419,6 +474,9 @@ class CollisionEngine:
         self._level_codes = [jnp.asarray(l.codes) for l in octree.levels]
         self._level_full = [jnp.asarray(l.full) for l in octree.levels]
         self._dev: Optional[DeviceOctree] = None
+        # Last clean frontier capacity per query shape: repeat queries start
+        # there instead of re-climbing the escalation ladder.
+        self._cap_memo: dict = {}
 
     @property
     def device_tree(self) -> DeviceOctree:
@@ -458,16 +516,24 @@ class CollisionEngine:
         assert obbs.center.ndim == 3, "query_batched wants (B, M, 3) fields"
         B, M = obbs.center.shape[:2]
         t0 = time.perf_counter()
-        if self.cfg.device_resident:
-            collide, st = _escalate(
-                lambda cap: _traverse_batched(
-                    obbs.center, obbs.half, obbs.rot, self.device_tree,
-                    capacity=cap, use_spheres=self.cfg.use_spheres,
-                    use_pallas=self.cfg.use_pallas_compact,
-                    use_pallas_traverse=self.cfg.use_pallas_traverse,
-                    fused=self.cfg.fused),
-                M, self._capacity(M), self.cfg)
-            counters = _stats_to_counters(st, self.cfg.fused)
+        if self.cfg.persistent:
+            # The persistent mode never vmaps: the batch flattens into one
+            # ragged frontier pool of B*M independent queries (a vmapped
+            # lax.switch would execute every width branch per level).
+            flat = OBBs(center=obbs.center.reshape(-1, 3),
+                        half=obbs.half.reshape(-1, 3),
+                        rot=obbs.rot.reshape(-1, 3, 3))
+            collide_flat, counters = self._query_device(flat)
+            collide = collide_flat.reshape(B, M)
+        elif self.cfg.device_resident:
+            memo_key = ("batch", B, M)
+            collide, st, cap, replays = _escalate(
+                lambda cap: self._run(cap, "batch")(
+                    obbs.center, obbs.half, obbs.rot, self.device_tree),
+                M, self._capacity(M), self.cfg,
+                start=self._cap_memo.get(memo_key))
+            self._cap_memo[memo_key] = cap
+            counters = _stats_to_counters(st, self.cfg.mode, replays)
             collide = np.asarray(jax.device_get(collide))
         else:
             counters = Counters()
@@ -484,17 +550,23 @@ class CollisionEngine:
         return collide, counters
 
     # ------------------------------------------------------------------
+    def _run(self, capacity: int, batch: str = "single"):
+        """Cached jit-compiled traversal for this engine's config."""
+        return _traversal_fn(self.cfg.mode, batch, capacity,
+                             self.cfg.use_spheres,
+                             self.cfg.use_pallas_compact,
+                             self.cfg.use_pallas_traverse)
+
     def _query_device(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
-        collide, st = _escalate(
-            lambda cap: _traverse_single(
-                obbs.center, obbs.half, obbs.rot, self.device_tree,
-                capacity=cap, use_spheres=self.cfg.use_spheres,
-                use_pallas=self.cfg.use_pallas_compact,
-                use_pallas_traverse=self.cfg.use_pallas_traverse,
-                fused=self.cfg.fused),
-            obbs.n, self._capacity(obbs.n), self.cfg)
+        memo_key = ("single", obbs.n)
+        collide, st, cap, replays = _escalate(
+            lambda cap: self._run(cap)(obbs.center, obbs.half, obbs.rot,
+                                       self.device_tree),
+            obbs.n, self._capacity(obbs.n), self.cfg,
+            start=self._cap_memo.get(memo_key))
+        self._cap_memo[memo_key] = cap
         return (np.asarray(jax.device_get(collide)),
-                _stats_to_counters(st, self.cfg.fused))
+                _stats_to_counters(st, self.cfg.mode, replays))
 
     # ------------------------------------------------------------------
     def _query_naive(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
@@ -615,32 +687,77 @@ class CollisionEngine:
         return collide, c
 
 
+#: Device scene-table memo for repeat multi-scene batches: building the
+#: concatenated/stacked level tables is a host-side numpy pass over every
+#: level of every scene plus a device transfer — far more than a warm
+#: traversal costs.  Keyed by the octree objects' identities; weakrefs
+#: guard against id reuse after GC (a dead ref can never alias a live key).
+_TABLE_CACHE: dict = {}
+_TABLE_CACHE_MAX = 8
+
+
+def _scene_tables(octrees: List[Octree], padded: bool):
+    key = (padded, tuple(id(t) for t in octrees))
+    hit = _TABLE_CACHE.get(key)
+    if hit is not None:
+        refs, tables = hit
+        if all(r() is t for r, t in zip(refs, octrees)):
+            return tables
+    tables = (stack_device_octrees(octrees) if padded
+              else concat_device_octrees(octrees))
+    while len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
+        _TABLE_CACHE.pop(next(iter(_TABLE_CACHE)))
+    _TABLE_CACHE[key] = ([weakref.ref(t) for t in octrees], tables)
+    return tables
+
+
 def query_batched_scenes(octrees: List[Octree], obbs: OBBs,
                          config: EngineConfig = EngineConfig()
                          ) -> Tuple[np.ndarray, Counters]:
     """Traverse S scenes, each with its own (M,) OBB set, in ONE compiled call.
 
     ``obbs`` fields carry a leading scene axis: center (S, M, 3).  All trees
-    must share a depth; level arrays are stacked/padded by
-    :func:`repro.core.octree.stack_device_octrees`.  Returns ((S, M)
-    verdicts, aggregate counters).
+    must share a depth; node counts may differ arbitrarily.
+
+    CSR modes (``wavefront_fused`` / ``wavefront_persistent``) run the
+    **ragged flat frontier**: one pool of (scene, query, CSR node) triples
+    over the :func:`repro.core.octree.concat_device_octrees` flat table —
+    mixed-size scenes share the compiled call and the compaction pool, and
+    no work scales with the largest scene's padding.  ``mode="wavefront"``
+    (whose frontier carries Morton codes, not CSR indices) keeps the legacy
+    padded-vmap path over :func:`stack_device_octrees` for A/B benchmarks.
+    Returns ((S, M) verdicts, aggregate counters).
     """
     assert config.device_resident, "multi-scene batching needs a device mode"
     assert obbs.center.ndim == 3 and obbs.center.shape[0] == len(octrees)
     S, M = obbs.center.shape[:2]
     t0 = time.perf_counter()
-    dev = stack_device_octrees(octrees)
-    worst = max(frontier_capacity_bound([len(l.codes) for l in t.levels], M,
-                                        config) for t in octrees)
-    collide, st = _escalate(
-        lambda cap: _traverse_scenes(
-            obbs.center, obbs.half, obbs.rot, dev, capacity=cap,
-            use_spheres=config.use_spheres,
-            use_pallas=config.use_pallas_compact,
-            use_pallas_traverse=config.use_pallas_traverse,
-            fused=config.fused),
-        M, worst, config)
-    counters = _stats_to_counters(st, config.fused)
+    if config.mode in CSR_MODES:
+        multi = _scene_tables(octrees, padded=False)
+        soq = jnp.repeat(jnp.arange(S, dtype=jnp.int32), M)
+        # Worst-case pool: sum of the per-scene bounds, clamped once.
+        worst = min(sum(frontier_capacity_bound(
+            [len(l.codes) for l in t.levels], M, config) for t in octrees),
+            max(config.max_frontier, S * M))
+        collide, st, _, replays = _escalate(
+            lambda cap: _traversal_fn(
+                config.mode, "single", cap, config.use_spheres,
+                config.use_pallas_compact, config.use_pallas_traverse)(
+                    obbs.center.reshape(-1, 3), obbs.half.reshape(-1, 3),
+                    obbs.rot.reshape(-1, 3, 3), multi, soq),
+            S * M, worst, config)
+        collide = jax.device_get(collide).reshape(S, M)
+    else:
+        dev = _scene_tables(octrees, padded=True)
+        worst = max(frontier_capacity_bound(
+            [len(l.codes) for l in t.levels], M, config) for t in octrees)
+        collide, st, _, replays = _escalate(
+            lambda cap: _traversal_fn(
+                config.mode, "scenes", cap, config.use_spheres,
+                config.use_pallas_compact, config.use_pallas_traverse)(
+                    obbs.center, obbs.half, obbs.rot, dev),
+            M, worst, config)
+    counters = _stats_to_counters(st, config.mode, replays)
     counters.wall_time_s = time.perf_counter() - t0
     counters.num_queries = S * M
     return np.asarray(jax.device_get(collide)), counters

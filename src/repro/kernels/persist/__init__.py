@@ -1,0 +1,6 @@
+# Persistent whole-traversal megakernel: the ENTIRE multi-level wavefront
+# walk in one pallas_call — per-tile double-buffered VMEM frontier, in-kernel
+# level loop, in-register CSR expansion/compaction, HBM spill ring.  The jnp
+# reference arm mirrors it with live-prefix width scheduling.  Backs
+# ``EngineConfig.mode == "wavefront_persistent"`` and the ragged multi-scene
+# flat frontier of ``query_batched_scenes``.

@@ -1,0 +1,268 @@
+"""Persistent whole-traversal Pallas megakernel — one ``pallas_call`` for
+the ENTIRE multi-level wavefront walk.
+
+RoboGPU's central claim (§II, Fig. 11) is that a collision query should
+stay *resident in the core* across the whole tree walk: conditional
+returns, never spilling intermediates.  The per-level fused step
+(:mod:`repro.kernels.traverse`) still launches one kernel per octree level
+and round-trips the compacted frontier through HBM between levels; this
+kernel removes that last HBM round trip.  The grid walks tiles of ``bq``
+queries, and each grid step owns its tile's traversal end to end:
+
+  1. the tile's frontier lives in a **double-buffered VMEM scratch** pair
+     ``(2, fcap)`` of (query, CSR node index) lanes — level ``l`` reads
+     slot ``l % 2`` and compacts survivors' children into slot
+     ``(l + 1) % 2``; the frontier never exists in HBM;
+  2. the **level loop runs inside the kernel body** (``lax.fori_loop`` over
+     ``depth + 1`` levels; a drained frontier makes the remaining levels
+     natural no-ops — every update is masked by ``lane < n_live``);
+  3. each level gathers the lanes' query OBBs (one-hot matmul against the
+     resident packed OBB table), reconstructs node AABBs from Morton codes
+     in-register, and runs the two-phase staged SACT via the shared
+     :func:`repro.kernels.sact.kernel.sact_tile` (tile-level conditional
+     return skips the 9 edge axes once every lane is decided);
+  4. CSR child expansion AND compaction happen **in-register**: per-parent
+     child counts (popcount of the occupancy mask) are exclusive-scanned
+     over the tile, child ``j`` of parent ``i`` lands at
+     ``base[i] + popcount(mask[i] & ((1 << j) - 1))`` — no stream-compaction
+     kernel, no candidate list in memory;
+  5. children past ``fcap`` overflow to a per-tile **HBM spill ring**
+     (``ring_cap`` most recent (query, node) pairs, wrapping) and are
+     counted — the count lands in ``Counters.frontier_overflow`` and the
+     engine's existing escalate-on-overflow policy replays the query set at
+     a larger capacity, exactly as for the per-level arms.  Spilled pairs
+     are *not* silently traversed: verdicts are exact iff the overflow
+     count is zero.
+
+Because queries are partitioned across tiles and a pair's whole subtree
+stays in its query's tile, the early-exit coupling (a decided query
+retires all its pairs) is tile-local, and on every clean (overflow-free)
+run the union of per-tile work is *bitwise* the work of the global-frontier
+fused arm: same pairs per level, same exit codes, same counters (summed
+over tiles).  Overflow accounting, however, is per-tile: each tile owns
+``fcap`` VMEM lanes, so with multiple tiles the aggregate frontier room is
+``num_tiles * fcap`` and a frontier that overflows the ref's single global
+pool may fit here (or vice versa under heavy skew).  Each backend
+escalates against its *own* overflow count until clean, after which the
+counters agree again; only the clamped regime (pinned
+``frontier_capacity`` / ``max_frontier``), where verdicts under-approximate
+by contract, may drop different pairs per backend.
+
+Per-query HBM traffic collapses to: seed pair in, one verdict word out,
+plus spill traffic — the bytes model of
+:data:`repro.core.counters.BYTES_PERSIST_QUERY`.
+
+The node metadata / OBB tables are held as resident VMEM blocks, which
+bounds scene size on real hardware (~VMEM/16 B nodes); scaling past that
+needs HBM-space DMA of metadata rows, noted in DESIGN.md §3.  On the CPU
+CI matrix the kernel runs under ``interpret=True`` on small scenes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.counters import NUM_EXIT_CODES
+from repro.core.octree import jnp_morton_decode
+from repro.core.sact import axis_tests_from_exit
+from repro.kernels.persist.ref import csr_child_slots
+# _EPS shared with every SACT arm: the bitwise identity across engines
+# depends on all of them using the same epsilon and op order.
+from repro.kernels.sact.kernel import _EPS, NUM_AXES, sact_tile
+
+try:  # CPU-only containers may lack the TPU extension
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
+                   hist_ref, scalars_ref, ring_ref, fq_scr, fn_scr, *,
+                   num_queries: int, bq: int, fcap: int, depth: int,
+                   n_max: int, ring_cap: int, use_spheres: bool):
+    t = pl.program_id(0)
+    L = depth + 1
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, fcap), 1).reshape((fcap,))
+    q_base = t * bq
+    n_q = jnp.clip(num_queries - q_base, 0, bq)
+
+    scal = scal_ref[...]                       # [scene_lo(3), cells(L)]
+    obb_tab = obb_ref[...]                     # (m_pad, 15) resident
+    meta_flat = meta_ref[...].reshape(L * n_max, 4)
+    m_pad = obb_tab.shape[0]
+    iota_q = jax.lax.broadcasted_iota(jnp.int32, (1, bq), 1).reshape((bq,))
+    iota_hist = jax.lax.broadcasted_iota(
+        jnp.int32, (1, NUM_EXIT_CODES), 1).reshape((NUM_EXIT_CODES,))
+
+    # Seed frontier (slot 0): one (query, root) pair per query of the tile.
+    fq_scr[0, :] = jnp.where(lane < n_q, q_base + lane, 0)
+    fn_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
+
+    def level_body(level, carry):
+        (n_live, collide_vec, per_level, hist, leaf, axis_exec, sphere,
+         overflow, spilled, cursor, ring) = carry
+        slot = jax.lax.rem(level, 2)
+        q = jnp.where(slot == 0, fq_scr[0, :], fq_scr[1, :])
+        idx = jnp.where(slot == 0, fn_scr[0, :], fn_scr[1, :])
+        valid = lane < n_live
+
+        # ---- one metadata gather per lane (code, full, CSR cols) ------
+        meta = jnp.take(meta_flat,
+                        level * n_max + jnp.clip(idx, 0, n_max - 1), axis=0)
+        codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
+        full_l = meta[:, 1] != 0
+        child_start = meta[:, 2]
+        child_mask = meta[:, 3]
+
+        # ---- gather query boxes (one-hot matmul, OOB-safe) ------------
+        onehot = (q[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (fcap, m_pad), 1)).astype(jnp.float32)
+        rows = jnp.dot(onehot, obb_tab,
+                       preferred_element_type=jnp.float32)        # (fcap, 15)
+        oc = [rows[:, i] for i in range(3)]
+        oh = [rows[:, 3 + i] for i in range(3)]
+        R = [[rows[:, 6 + 3 * i + k] for k in range(3)] for i in range(3)]
+
+        # ---- node AABB from Morton code, in-register ------------------
+        cell = jnp.take(scal, 3 + level)
+        xyz = jnp_morton_decode(codes).astype(jnp.float32)
+        node_c = [scal[i] + (xyz[:, i] + 0.5) * cell for i in range(3)]
+        node_h = cell * 0.5
+
+        # ---- two-phase staged SACT (shared tile formulas) -------------
+        tt = [oc[i] - node_c[i] for i in range(3)]
+        A = [[jnp.abs(R[i][k]) + _EPS for k in range(3)] for i in range(3)]
+        collide_l, exit_code = sact_tile(tt, R, A, [node_h] * 3, oh,
+                                         use_spheres=use_spheres)
+
+        is_term = full_l | (level == depth)
+        overlap = collide_l & valid
+        term_hit = overlap & is_term
+
+        # ---- per-query collide, tile-local (queries never cross tiles)
+        q_onehot = (q - q_base)[:, None] == iota_q[None, :]       # (fcap, bq)
+        collide_vec = collide_vec | jnp.any(
+            term_hit[:, None] & q_onehot, axis=0)
+        decided = jnp.any(q_onehot & collide_vec[None, :], axis=1)
+
+        # ---- work accounting (formulas of the fused arm, bitwise) -----
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        term_valid = jnp.where(valid & is_term, 1, 0)
+        leaf = leaf + jnp.sum(term_valid)
+        axis_exec = axis_exec + jnp.sum(
+            jnp.where(valid, axis_tests_from_exit(exit_code), 0))
+        sphere = sphere + (2 * n_valid if use_spheres else 0)
+        per_level = per_level + jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, (1, L), 1).reshape((L,))
+            == level, n_valid, 0)
+        hist = hist + jnp.sum(
+            jnp.where((exit_code[:, None] == iota_hist[None, :])
+                      & (term_valid[:, None] != 0), 1, 0), axis=0)
+
+        # ---- in-register CSR expansion + compaction -------------------
+        expand = overlap & ~is_term & ~decided
+        occupied, offs = csr_child_slots(child_mask)
+        n_child = jnp.where(expand,
+                            jax.lax.population_count(child_mask), 0)
+        base = jnp.cumsum(n_child) - n_child
+        n_new = jnp.sum(n_child)
+        live = expand[:, None] & occupied                          # (fcap, 8)
+        pos = base[:, None] + offs
+        q_rep = jnp.repeat(q, 8)
+        cand = (child_start[:, None] + offs).reshape(-1)
+        tgt = jnp.where(live, pos, fcap).reshape(-1)
+        q_next = jnp.zeros((fcap,), jnp.int32).at[tgt].set(q_rep,
+                                                           mode="drop")
+        i_next = jnp.zeros((fcap,), jnp.int32).at[tgt].set(cand,
+                                                           mode="drop")
+
+        # ---- HBM spill ring: children past fcap, newest-wrapping ------
+        in_ring = live & (pos >= fcap)
+        ring_tgt = jnp.where(
+            in_ring, jax.lax.rem(cursor + (pos - fcap), ring_cap),
+            ring_cap).reshape(-1)
+        ring = ring.at[ring_tgt, 0].set(q_rep, mode="drop")
+        ring = ring.at[ring_tgt, 1].set(cand, mode="drop")
+        spill_now = jnp.maximum(n_new - fcap, 0)
+        overflow = overflow + spill_now
+        spilled = spilled + spill_now
+        cursor = jax.lax.rem(cursor + spill_now, ring_cap)
+
+        # ---- double-buffer write: next level reads the other slot -----
+        nxt = 1 - slot
+        fq_scr[0, :] = jnp.where(nxt == 0, q_next, fq_scr[0, :])
+        fq_scr[1, :] = jnp.where(nxt == 1, q_next, fq_scr[1, :])
+        fn_scr[0, :] = jnp.where(nxt == 0, i_next, fn_scr[0, :])
+        fn_scr[1, :] = jnp.where(nxt == 1, i_next, fn_scr[1, :])
+        return (jnp.minimum(n_new, fcap), collide_vec, per_level, hist,
+                leaf, axis_exec, sphere, overflow, spilled, cursor, ring)
+
+    carry0 = (jnp.minimum(n_q, fcap), jnp.zeros((bq,), jnp.bool_),
+              jnp.zeros((L,), jnp.int32),
+              jnp.zeros((NUM_EXIT_CODES,), jnp.int32),
+              jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+              jnp.int32(0), jnp.int32(0),
+              jnp.zeros((ring_cap, 2), jnp.int32))
+    (_, collide_vec, per_level, hist, leaf, axis_exec, sphere, overflow,
+     spilled, _, ring) = jax.lax.fori_loop(0, L, level_body, carry0)
+
+    collide_ref[...] = collide_vec.astype(jnp.int32).reshape(1, bq)
+    perlevel_ref[...] = per_level.reshape(1, L)
+    hist_ref[...] = hist.reshape(1, NUM_EXIT_CODES)
+    nodes = jnp.sum(per_level)
+    scalars_ref[...] = jnp.stack(
+        [nodes, leaf, axis_exec, nodes * NUM_AXES, sphere, overflow,
+         spilled, jnp.int32(0)]).reshape(1, 8)
+    ring_ref[...] = ring.reshape(1, ring_cap, 2)
+
+
+def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
+                      depth: int, n_max: int, m_pad: int, ring_cap: int,
+                      use_spheres: bool, interpret: bool):
+    """Build the whole-traversal pallas_call.
+
+    Inputs: scal (3 + depth+1,) f32 SMEM [scene_lo xyz, per-level cells];
+    obb table (m_pad, 15) f32; node_meta (depth+1, n_max, 4) int32 — both
+    resident blocks.  Outputs per query tile: collide words (bq,), valid
+    counts per level, exit histogram, packed work scalars
+    [nodes, leaf, axis_exec, axis_dec, sphere, overflow, spilled, 0], and
+    the spill ring's (query, node) pairs.
+    """
+    if pltpu is None:  # pragma: no cover - exercised only sans TPU extra
+        raise RuntimeError("pallas TPU extension unavailable")
+    L = depth + 1
+    kernel = functools.partial(
+        persist_kernel, num_queries=num_queries, bq=bq, fcap=fcap,
+        depth=depth, n_max=n_max, ring_cap=ring_cap,
+        use_spheres=use_spheres)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scal
+            pl.BlockSpec((m_pad, 15), lambda t: (0, 0)),      # OBB table
+            pl.BlockSpec((L, n_max, 4), lambda t: (0, 0, 0)),  # node meta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq), lambda t: (t, 0)),
+            pl.BlockSpec((1, L), lambda t: (t, 0)),
+            pl.BlockSpec((1, NUM_EXIT_CODES), lambda t: (t, 0)),
+            pl.BlockSpec((1, 8), lambda t: (t, 0)),
+            pl.BlockSpec((1, ring_cap, 2), lambda t: (t, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_tiles, bq), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, L), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, NUM_EXIT_CODES), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, 8), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, ring_cap, 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, fcap), jnp.int32),    # frontier queries (2 slots)
+            pltpu.VMEM((2, fcap), jnp.int32),    # frontier node indices
+        ],
+        interpret=interpret,
+    )

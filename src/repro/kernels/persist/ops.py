@@ -1,0 +1,89 @@
+"""Dispatch + glue for the persistent whole-traversal megakernel.
+
+``traverse_whole`` is the single entry point of ``mode=
+"wavefront_persistent"``: the ENTIRE multi-level traversal in one call —
+the Pallas megakernel on TPU (or ``interpret=True`` for the CPU CI
+matrix), the live-prefix jnp reference elsewhere.  Both arms share the
+contract of :func:`repro.core.wavefront._traverse_fused` — identical
+``(collide, stats)`` including every work counter — so the engine's
+escalation policy and counter plumbing are mode-agnostic.
+
+The ragged multi-scene frontier (``scene_of_query`` + a
+:class:`repro.core.octree.MultiSceneOctree` flat table) is served by the
+reference arm on every backend: one compiled call and one compaction pool
+for arbitrarily mixed scene sizes.  The megakernel keeps per-scene
+scalars in SMEM and is single-scene for now (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.octree import MAX_DEPTH, DeviceOctree, MultiSceneOctree
+from repro.kernels.persist.ref import traverse_whole_ref
+from repro.kernels.sact.ops import pack_obbs
+
+
+def _use_pallas_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
+                  use_spheres: bool, bq: int, ring_cap: int,
+                  interpret: bool) -> Tuple[jax.Array, dict]:
+    from repro.kernels.persist.kernel import make_persist_call
+
+    M = obb_c.shape[0]
+    L = dev.depth + 1
+    n_max = dev.codes.shape[-1]
+    num_tiles = max(math.ceil(M / bq), 1)
+    obb = pack_obbs(obb_c, obb_h, obb_r)
+    scal = jnp.concatenate([jnp.asarray(dev.scene_lo, jnp.float32),
+                            jnp.asarray(dev.cell_sizes, jnp.float32)])
+    call = make_persist_call(M, num_tiles, bq, capacity, dev.depth, n_max,
+                             obb.shape[0], ring_cap, use_spheres, interpret)
+    words, per_level, hist, scalars, _ring = call(scal, obb, dev.node_meta)
+    collide = (words.reshape(-1)[:M] != 0)
+    tot = jnp.sum(scalars, axis=0)
+    per = jnp.zeros((MAX_DEPTH + 1,), jnp.int32).at[:L].set(
+        jnp.sum(per_level, axis=0))
+    st = dict(nodes=tot[0], leaf=tot[1], axis_exec=tot[2], axis_dec=tot[3],
+              sphere=tot[4], overflow=tot[5], per_level=per,
+              exit_hist=jnp.sum(hist, axis=0))
+    return collide, st
+
+
+def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
+                   use_spheres: bool, use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None,
+                   scene_of_query: Optional[jax.Array] = None,
+                   bq: int = 128, ring_cap: int = 256, w_min: int = 128
+                   ) -> Tuple[jax.Array, dict]:
+    """Whole multi-level traversal for one flat query set.
+
+    ``dev`` is a single-scene :class:`DeviceOctree`, or a
+    :class:`MultiSceneOctree` with ``scene_of_query`` (Q,) mapping each
+    flat query to its scene.  Composes under jit; returns
+    ``(collide (Q,) bool, stats dict)`` bitwise-identical to the per-level
+    fused arm.
+    """
+    ragged = isinstance(dev, MultiSceneOctree) or scene_of_query is not None
+    assert not (isinstance(dev, MultiSceneOctree)
+                and scene_of_query is None), \
+        "a MultiSceneOctree needs scene_of_query (Q,) to map queries to scenes"
+    if use_pallas is None:
+        use_pallas = _use_pallas_default() and not ragged
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas and not ragged:
+        return _kernel_whole(obb_c, obb_h, obb_r, dev, capacity,
+                             use_spheres, bq, ring_cap, interpret)
+    # DeviceOctree and MultiSceneOctree expose the same three table fields;
+    # scene_of_query switches the ref between scalar and per-pair gathers.
+    return traverse_whole_ref(obb_c, obb_h, obb_r, dev.node_meta,
+                              dev.cell_sizes, dev.scene_lo, dev.depth,
+                              capacity, use_spheres,
+                              scene_of_query=scene_of_query, w_min=w_min)

@@ -37,6 +37,7 @@ from repro.core.octree import DeviceOctree, node_centers_from_codes
 from repro.core.sact import (SactResult, axis_tests_from_exit,
                              mask_frontier_result, sact_frontier_staged)
 from repro.kernels.compact.ops import compact_pairs
+from repro.kernels.persist.ref import csr_child_slots
 from repro.kernels.sact.ops import pack_obbs
 from repro.kernels.traverse.kernel import make_traverse_call
 from repro.kernels.traverse.ref import unpack_verdicts
@@ -127,11 +128,8 @@ def traverse_step(obb_c, obb_h, obb_r, dev: DeviceOctree, level, n_live,
     collide = collide.at[q_idx].max(term_hit)
 
     # ---- O(1) CSR expansion + on-device stream compaction -------------
-    eight = jnp.arange(8, dtype=jnp.int32)
-    occupied = ((child_mask[:, None] >> eight[None, :]) & 1) != 0  # (cap, 8)
-    below = (jnp.int32(1) << eight) - 1                  # bits j' < j
-    cand_idx = child_start[:, None] + jax.lax.population_count(
-        child_mask[:, None] & below[None, :])
+    occupied, offs = csr_child_slots(child_mask)                   # (cap, 8)
+    cand_idx = child_start[:, None] + offs
     # Early exit: decided queries retire their whole wavefront share.
     expand = overlap & ~is_term & ~collide[q_idx]
     child_live = (expand[:, None] & occupied).reshape(-1)          # (cap*8,)

@@ -1,0 +1,32 @@
+"""Docs drift guard: the engine-mode tables in DESIGN.md §2 and README.md
+duplicate each other by design (one is the architecture doc, one the
+landing page); this test keeps both in lockstep with ``MODES``."""
+import os
+import re
+
+from repro.core.wavefront import MODES
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _mode_table_cells(path: str) -> set:
+    """Backticked first-column entries of markdown table rows."""
+    cells = set()
+    with open(os.path.join(_ROOT, path)) as f:
+        for line in f:
+            m = re.match(r"\|\s*`([a-z_]+)`\s*\|", line)
+            if m:
+                cells.add(m.group(1))
+    return cells
+
+
+def test_design_mode_table_lists_every_mode():
+    cells = _mode_table_cells("DESIGN.md")
+    for mode in MODES:
+        assert mode in cells, f"DESIGN.md §2 table is missing `{mode}`"
+
+
+def test_readme_mode_table_lists_every_mode():
+    cells = _mode_table_cells("README.md")
+    for mode in MODES:
+        assert mode in cells, f"README engine-mode table is missing `{mode}`"

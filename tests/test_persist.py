@@ -1,0 +1,232 @@
+"""Persistent whole-traversal megakernel: engine equivalence, interpret-mode
+kernel vs ref, spill ring, ragged multi-scene frontier, escalation policy,
+and the traversal jit cache.
+
+The Pallas megakernel runs under ``interpret=True`` here so the CPU CI
+matrix exercises the kernel body without a TPU, mirroring the
+kernels/compact and kernels/traverse setups.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.geometry import OBBs, random_obbs
+from repro.core.octree import (build_octree, concat_device_octrees,
+                               device_octree)
+from repro.core.wavefront import (MODES, CollisionEngine, EngineConfig,
+                                  query_batched_scenes, traversal_cache_info)
+from repro.data.robotics import make_scene, scene_trajectories
+from repro.kernels.persist.ops import traverse_whole
+from repro.kernels.persist.ref import frontier_widths, traverse_whole_ref
+
+WORK_FIELDS = ("nodes_traversed", "leaf_tests", "axis_tests_executed",
+               "axis_tests_decoded", "sphere_tests", "frontier_overflow")
+
+
+def _assert_counters_equal(c, ref_c, ctx):
+    for f in WORK_FIELDS:
+        assert getattr(c, f) == getattr(ref_c, f), (ctx, f)
+    assert c.nodes_per_level == ref_c.nodes_per_level, ctx
+    assert (c.exit_histogram == ref_c.exit_histogram).all(), ctx
+
+
+def test_frontier_widths():
+    assert frontier_widths(2048, w_min=128) == (128, 256, 512, 1024, 2048)
+    assert frontier_widths(128, w_min=128) == (128,)
+    assert frontier_widths(64, w_min=128) == (64,)
+    assert frontier_widths(96, w_min=32) == (32, 64, 96)
+
+
+def test_persistent_engine_bitwise_equivalence_on_bench_scenes():
+    """wavefront_persistent == wavefront_fused == wavefront: verdicts AND
+    work counters, on benchmark scenes (the acceptance criterion)."""
+    for env, n_pts, depth in [("cubby", 4096, 4), ("dresser", 4096, 4)]:
+        sc = make_scene(env, num_points=n_pts)
+        tree = build_octree(sc.points, depth=depth)
+        obbs = scene_trajectories(sc, num_trajectories=2, waypoints=6)
+        res = {}
+        for mode in ("wavefront", "wavefront_fused", "wavefront_persistent"):
+            res[mode] = CollisionEngine(tree,
+                                        EngineConfig(mode=mode)).query(obbs)
+        ref_col, ref_c = res["wavefront_fused"]
+        col, c = res["wavefront_persistent"]
+        assert (col == ref_col).all(), env
+        _assert_counters_equal(c, ref_c, env)
+        _assert_counters_equal(res["wavefront"][1], ref_c, env)
+        # persistent bytes model (per query, not per pair-level) undercuts
+        # the fused step's frontier round trips
+        assert c.bytes_moved < ref_c.bytes_moved
+
+
+@pytest.mark.parametrize("use_spheres", [False, True])
+def test_persist_kernel_interpret_matches_ref(use_spheres):
+    """Pallas megakernel (interpret=True, multiple query tiles) == jnp ref:
+    verdicts and every stats field, bitwise."""
+    rs = np.random.RandomState(7)
+    pts = rs.uniform(-1, 1, (2500, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=3)
+    dev = device_octree(tree)
+    obbs = random_obbs(jax.random.PRNGKey(7), 21)     # 2 tiles at bq=16
+    cap = 256
+    ref = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_spheres=use_spheres, use_pallas=False)
+    pal = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_spheres=use_spheres, use_pallas=True,
+                         interpret=True, bq=16)
+    assert bool(jnp.all(ref[0] == pal[0]))
+    for k in ref[1]:
+        assert bool(jnp.all(ref[1][k] == pal[1][k])), k
+
+
+def test_persist_kernel_spill_ring_counts_overflow():
+    """A deliberately tiny VMEM frontier must spill: the kernel reports the
+    same overflow count as the global-pool ref (single tile == one pool)
+    and records spilled pairs in the HBM ring."""
+    rs = np.random.RandomState(3)
+    pts = rs.uniform(-1, 1, (4000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    dev = device_octree(tree)
+    obbs = random_obbs(jax.random.PRNGKey(3), 24)
+    cap = 64                                     # << peak frontier
+    ref = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_spheres=False, use_pallas=False)
+    pal = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_spheres=False, use_pallas=True,
+                         interpret=True, bq=32)  # one tile: global == tile
+    assert int(ref[1]["overflow"]) > 0
+    assert int(pal[1]["overflow"]) == int(ref[1]["overflow"])
+
+
+def test_persistent_escalation_replays_until_exact():
+    """A tiny initial bucket must climb the escalation ladder (>= 2
+    replays), end with zero overflow, and report exact verdicts."""
+    rs = np.random.RandomState(2)
+    pts = rs.uniform(-1, 1, (8000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(3), 40)
+    ref, _ = CollisionEngine(tree, EngineConfig(mode="naive")).query(obbs)
+    eng = CollisionEngine(tree, EngineConfig(mode="wavefront_persistent",
+                                             min_bucket=32))
+    got, c = eng.query(obbs)
+    assert (got == ref).all()
+    assert c.frontier_overflow == 0
+    assert c.escalations >= 2
+    # The engine remembers the clean capacity: a repeat query pays zero
+    # replays (and, per traversal_cache_info, zero retraces).
+    got2, c2 = eng.query(obbs)
+    assert (got2 == ref).all()
+    assert c2.escalations == 0
+
+
+def test_persistent_max_frontier_clamp_underapproximates():
+    """At the max_frontier clamp the engine cannot escalate further: the
+    overflow count is reported and verdicts under-approximate (drops can
+    only lose collisions, never invent them)."""
+    rs = np.random.RandomState(2)
+    pts = rs.uniform(-1, 1, (8000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(3), 40)
+    ref, _ = CollisionEngine(tree, EngineConfig(mode="naive")).query(obbs)
+    got, c = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_persistent", max_frontier=256)).query(obbs)
+    assert c.frontier_overflow > 0
+    assert not (got & ~ref).any()            # no false positives
+    assert got.sum() <= ref.sum()
+
+
+def test_query_batched_persistent_flattens_to_one_pool():
+    """query_batched under the persistent mode (flat ragged pool, no vmap)
+    == the fused vmapped arm, verdicts and aggregate work counters."""
+    rs = np.random.RandomState(9)
+    pts = rs.uniform(-1, 1, (5000, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(10), 48)
+    batch = OBBs(center=obbs.center.reshape(6, 8, 3),
+                 half=obbs.half.reshape(6, 8, 3),
+                 rot=obbs.rot.reshape(6, 8, 3, 3))
+    got_f, cf = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_fused")).query_batched(batch)
+    got_p, cp = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_persistent")).query_batched(batch)
+    assert got_p.shape == (6, 8)
+    assert (got_p == got_f).all()
+    _assert_counters_equal(cp, cf, "batched")
+    assert cp.num_queries == 48
+
+
+def test_ragged_scenes_mixed_sizes_one_call():
+    """Mixed-size scenes through the ragged flat frontier: verdicts match
+    per-scene naive queries and aggregate counters match the sum of
+    per-scene persistent queries."""
+    trees, sets = [], []
+    for seed, n_pts in ((11, 1000), (12, 12000), (13, 4000)):
+        rs = np.random.RandomState(seed)
+        pts = rs.uniform(-1, 1, (n_pts, 3)).astype(np.float32)
+        trees.append(build_octree(pts, depth=4))
+        sets.append(random_obbs(jax.random.PRNGKey(seed), 20))
+    stack = OBBs(center=jnp.stack([o.center for o in sets]),
+                 half=jnp.stack([o.half for o in sets]),
+                 rot=jnp.stack([o.rot for o in sets]))
+    for mode in ("wavefront_fused", "wavefront_persistent"):
+        got, c = query_batched_scenes(trees, stack, EngineConfig(mode=mode))
+        assert got.shape == (3, 20)
+        for s in range(3):
+            ref, _ = CollisionEngine(trees[s],
+                                     EngineConfig(mode="naive")).query(sets[s])
+            assert (got[s] == ref).all(), (mode, s)
+        assert c.num_queries == 60
+    # counters are the sum of independent per-scene traversals
+    per_scene = [CollisionEngine(t, EngineConfig(
+        mode="wavefront_persistent")).query(o) for t, o in zip(trees, sets)]
+    _, cr = query_batched_scenes(trees, stack,
+                                 EngineConfig(mode="wavefront_persistent"))
+    for f in ("nodes_traversed", "leaf_tests", "axis_tests_executed",
+              "sphere_tests"):
+        assert getattr(cr, f) == sum(getattr(c, f) for _, c in per_scene), f
+
+
+def test_ragged_concat_table_roots_and_counts():
+    trees = []
+    for seed, n_pts in ((1, 500), (2, 6000)):
+        rs = np.random.RandomState(seed)
+        trees.append(build_octree(
+            rs.uniform(-1, 1, (n_pts, 3)).astype(np.float32), depth=3))
+    multi = concat_device_octrees(trees)
+    counts = np.asarray(multi.counts)
+    for l in range(4):
+        assert counts[l] == sum(len(t.levels[l].codes) for t in trees)
+    # scene s's root is flat node s of the level-0 row
+    meta0 = np.asarray(multi.node_meta[0])
+    assert (meta0[:2, 0].view(np.uint32) == 0).all()
+    # flat table holds the total, not S x widest
+    assert multi.node_meta.shape[1] == max(counts)
+
+
+def test_engineconfig_rejects_unknown_mode():
+    with pytest.raises(ValueError) as ei:
+        EngineConfig(mode="warpfront")
+    msg = str(ei.value)
+    assert "warpfront" in msg
+    for mode in MODES:
+        assert mode in msg
+
+
+def test_traversal_cache_survives_engine_reconstruction():
+    """A fresh CollisionEngine on a same-shaped scene reuses the traced
+    traversal: the per-key trace counts do not grow."""
+    rs = np.random.RandomState(4)
+    pts = rs.uniform(-1, 1, (3000, 3)).astype(np.float32)
+    obbs = random_obbs(jax.random.PRNGKey(4), 16)
+    tree1 = build_octree(pts, depth=3)
+    eng1 = CollisionEngine(tree1, EngineConfig(mode="wavefront_persistent"))
+    eng1.query(obbs)
+    traces_before = traversal_cache_info()["traces"]
+    # new engine, new device arrays, same shapes -> no retrace
+    tree2 = build_octree(pts, depth=3)
+    eng2 = CollisionEngine(tree2, EngineConfig(mode="wavefront_persistent"))
+    got, _ = eng2.query(obbs)
+    traces_after = traversal_cache_info()["traces"]
+    for key, n in traces_before.items():
+        assert traces_after[key] == n, key
+    assert traversal_cache_info()["hits"] > 0
