@@ -12,7 +12,9 @@ warnings into a nonzero exit).  A row past ``--fail-threshold`` is an
 ``::error::`` and ALWAYS fails the job: noise does not double a row, so a
 >2x regression is treated as real.  Rows under ``--min-us`` in the
 baseline are ignored (timer noise / model-only 0.0 rows), as are rows that
-exist on only one side (new or retired benches).
+exist on only one side (new or retired benches) — except prefixes named
+via ``--require``: a required bench family missing from the fresh results
+fails the job (a silently crashed/retired bench must not pass the diff).
 """
 from __future__ import annotations
 
@@ -39,10 +41,19 @@ def main() -> int:
                     help="ignore baseline rows faster than this")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 when any row regresses past --threshold")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="PREFIX",
+                    help="fail unless the fresh results contain at least "
+                         "one row with this name prefix (repeatable)")
     args = ap.parse_args()
 
     base = load_rows(args.baseline)
     new = load_rows(args.new)
+    missing = [p for p in args.require
+               if not any(name.startswith(p) for name in new)]
+    for prefix in missing:
+        print(f"::error title=bench missing::no '{prefix}*' rows in "
+              f"{args.new} (required bench family absent)")
     shared = sorted(set(base) & set(new))
     regressions, failures = [], []
     for name in shared:
@@ -63,8 +74,9 @@ def main() -> int:
           f"({len(base) - len(shared)} baseline-only, "
           f"{len(new) - len(shared)} new-only), "
           f"{len(regressions)} warning(s) past {args.threshold}x, "
-          f"{len(failures)} failure(s) past {args.fail_threshold}x")
-    if failures:
+          f"{len(failures)} failure(s) past {args.fail_threshold}x, "
+          f"{len(missing)} required famil(ies) missing")
+    if failures or missing:
         return 1
     return 1 if (regressions and args.strict) else 0
 

@@ -43,13 +43,17 @@ from repro.data.robotics import (ENVIRONMENTS, make_mpaccel_scenario,
                                  make_scene, scene_trajectories)
 
 SCALE = {"points": 65536, "trajs": 6, "wps": 30, "depth": 6,
-         "mpaccel_scenarios": 4, "mpaccel_points": 16384}
+         "mpaccel_scenarios": 4, "mpaccel_points": 16384,
+         "edges": 24, "edge_res": 16}
 FULL_SCALE = {"points": 524288, "trajs": 25, "wps": 60, "depth": 7,
-              "mpaccel_scenarios": 10, "mpaccel_points": 65536}
+              "mpaccel_scenarios": 10, "mpaccel_points": 65536,
+              "edges": 64, "edge_res": 32}
 # CI artifact job: tiny scene, 1 repeat, subset of benches (see --smoke).
 SMOKE_SCALE = {"points": 4096, "trajs": 2, "wps": 6, "depth": 4,
-               "mpaccel_scenarios": 1, "mpaccel_points": 2048}
-SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched", "ragged")
+               "mpaccel_scenarios": 1, "mpaccel_points": 2048,
+               "edges": 8, "edge_res": 16}
+SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched", "ragged",
+                 "fig_edges")
 
 _scene_cache = {}
 
@@ -499,6 +503,57 @@ def ragged_scenes(S):
 
 
 # ---------------------------------------------------------------------------
+# fig_edges — PRM-style batch edge validation: swept-edge (CCD) first-hit
+# bisection vs dense waypoint sampling at equal resolution
+# ---------------------------------------------------------------------------
+
+def fig_edges(S):
+    from repro.core.pipeline import check_edges, check_trajectories
+    from repro.core.sweep import edge_waypoints
+    from repro.data.robotics import PANDA_JOINT_HI, PANDA_JOINT_LO
+    sc, tree, _ = get_scene("cubby", S["points"], S["depth"], S["trajs"],
+                            S["wps"])
+    rs = np.random.RandomState(0)
+    E, R = S["edges"], S["edge_res"]
+    jlo, jhi = PANDA_JOINT_LO, PANDA_JOINT_HI
+    # PRM edges: short joint-space hops between neighboring samples.
+    qf = rs.uniform(jlo, jhi, (E, 7)).astype(np.float32)
+    qt = np.clip(qf + rs.uniform(-0.35, 0.35, (E, 7)).astype(np.float32),
+                 jlo, jhi)
+    base = sc.robot_base
+    engine = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+    wps = jnp.asarray(edge_waypoints(qf, qt, R))
+
+    res = check_edges(engine, qf, qt, resolution=R, base_pos=base)   # warm
+    flags, cd = check_trajectories(engine, wps, base_pos=base)       # warm
+    dense = np.asarray(flags).any(axis=1)
+    assert (~dense | res.collide).all(), "swept must upper-bound dense"
+    cs = res.counters
+    walls = time_group(
+        {"dense": lambda: check_trajectories(engine, wps, base_pos=base),
+         "swept": lambda: check_edges(engine, qf, qt, resolution=R,
+                                      base_pos=base)}, repeats=5)
+    n_wp = E * (R + 1)
+    emit("fig_edges/dense_waypoints", walls["dense"] * 1e6,
+         f"edges={E};res={R};waypoints={n_wp};"
+         f"axis_exec={cd.axis_tests_executed};nodes={cd.nodes_traversed};"
+         f"colliding_edges={int(dense.sum())}")
+    hits = res.first_hit[res.collide]
+    emit("fig_edges/swept", walls["swept"] * 1e6,
+         f"edges={E};res={R};axis_exec={cs.axis_tests_executed};"
+         f"nodes={cs.nodes_traversed};"
+         f"colliding_edges={int(res.collide.sum())};"
+         f"mean_first_hit={float(hits.mean()) if hits.size else -1:.3f}")
+    emit("fig_edges/headline", 0.0,
+         f"axis_tests_dense_over_swept="
+         f"{cd.axis_tests_executed / max(cs.axis_tests_executed, 1):.2f}x;"
+         f"nodes_dense_over_swept="
+         f"{cd.nodes_traversed / max(cs.nodes_traversed, 1):.2f}x;"
+         f"wall_dense_over_swept="
+         f"{walls['dense'] / max(walls['swept'], 1e-9):.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (reads the dry-run artifacts; §Roofline source of truth)
 # ---------------------------------------------------------------------------
 
@@ -540,6 +595,7 @@ BENCHES = {
     "fig19": fig19_mcl,
     "batched": batched_throughput,
     "ragged": ragged_scenes,
+    "fig_edges": fig_edges,
     "roofline": roofline_table,
 }
 

@@ -46,6 +46,15 @@ The node-metadata and OBB tables still stream HBM->VMEM once per *kernel*
 (not per level), amortized across every pair of every level — the
 closest TPU analogue of the paper's conditional returns never leaving the
 core.
+
+Payload lanes (swept-edge / first-hit plans, see ``repro.engine.plan``):
+a grouped plan carries extra int32 lanes per query slot — the owner lane
+(verdict-group id) and/or the payload lane (sub-interval rank) — that the
+traversal gathers per frontier pair and folds into the per-group ``best``
+with a min.  Each carried lane is modeled as ``BYTES_PAYLOAD_LANE`` extra
+bytes per pair per level for the per-level arms, and per seed for the
+persistent megakernel (the lanes ride the seed in and the best word out
+replaces the boolean verdict word at equal width).
 """
 from __future__ import annotations
 
@@ -59,6 +68,7 @@ BYTES_FUSED_TEST = 92
 BYTES_FUSED_STEP = 40
 BYTES_PERSIST_QUERY = 16
 BYTES_PERSIST_SPILL = 24
+BYTES_PAYLOAD_LANE = 4
 BYTES_SHADER_HANDOFF = 128
 NUM_EXIT_CODES = 18
 

@@ -20,7 +20,7 @@ previous iteration vs a threshold.
 When a 3-D scene octree is available, the filter can additionally gate
 particles through the batched wavefront engine: every particle's robot
 footprint OBB is collision-checked against the scene in ONE compiled call
-(``CollisionEngine.query_batched`` with a (P, 1) batch), and particles
+(a flat P-query plan on ``CollisionEngine.query``), and particles
 embedded in obstacles are suppressed before resampling.
 """
 from __future__ import annotations
@@ -153,8 +153,9 @@ def particle_collision_mask(engine, particles: jax.Array,
     """Per-particle footprint collision against a 3-D scene octree.
 
     ``particles`` is (P, 3) x, y, theta; each particle becomes one yawed
-    footprint OBB and the whole population is checked as a (P, 1) batch in a
-    single compiled call.  Returns (P,) bool (True = particle in collision).
+    footprint OBB and the whole population is checked as one flat P-query
+    plan in a single compiled call.  Returns (P,) bool (True = particle in
+    collision).
     """
     P = particles.shape[0]
     x, y, th = particles[:, 0], particles[:, 1], particles[:, 2]
@@ -167,10 +168,8 @@ def particle_collision_mask(engine, particles: jax.Array,
         jnp.stack([z, z, one], -1)], -2)                    # (P, 3, 3) yaw
     center = jnp.stack([x, y, jnp.full_like(x, z_center)], -1)
     half = jnp.broadcast_to(jnp.asarray(footprint_half, jnp.float32), (P, 3))
-    obbs = OBBs(center=center[:, None, :], half=half[:, None, :],
-                rot=rot[:, None, :, :])                     # (P, 1) batch
-    collide, _ = engine.query_batched(obbs)
-    return collide[:, 0]
+    collide, _ = engine.query(OBBs(center=center, half=half, rot=rot))
+    return collide
 
 
 @dataclasses.dataclass

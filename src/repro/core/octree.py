@@ -5,7 +5,9 @@ The paper stores the environment in an octree whose nodes hold occupancy and
 with a *linear* octree: for every level ``l`` we keep a sorted array of the
 Morton codes of occupied nodes plus a ``full`` flag (all descendants occupied
 => terminal solid box).  Child lookup is a binary search — no stacks, no
-pointers, so the traversal in :mod:`repro.core.wavefront` is pure array code.
+pointers, so the traversal in :mod:`repro.engine.executor` is pure array
+code.  The engine's scene tables (padded :func:`stack_device_octrees` and
+ragged :func:`concat_device_octrees`) both build from these levels.
 
 Build runs once per scene on the host (numpy); traversal consumes the arrays
 as jax constants.

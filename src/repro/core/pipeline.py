@@ -5,6 +5,13 @@ planner rollout -> explicit collision check of the proposed trajectory.
 The paper's safety argument is that the collision gate must be part of the
 pipeline; with RoboCore-style acceleration it adds no wall-clock to the
 critical path.  Stage timings are returned for the benchmark.
+
+Every front-end here lowers through :mod:`repro.engine.plan` and executes
+on :meth:`repro.engine.executor.CollisionEngine.execute` — host-loop and
+device-resident engines consume the *same* plan, so there is no
+per-front-end engine dispatch left in this module.  ``check_edges`` is
+the swept-edge (CCD) workload: batched first-hit validation of planning
+graph edges (see :mod:`repro.core.sweep`).
 """
 from __future__ import annotations
 
@@ -16,8 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.geometry import NUM_LINKS, OBBs, arm_link_obbs
+from repro.core.sweep import sweep_edges
 from repro.core.wavefront import CollisionEngine
+from repro.engine.plan import plan_trajectory
 
 
 @dataclasses.dataclass
@@ -29,30 +37,27 @@ class PipelineResult:
     counters: Optional[object] = None
 
 
-def _waypoint_batched(obbs: OBBs, num_wp: int) -> OBBs:
-    """Reshape flattened link OBBs into a (num_wp, NUM_LINKS) query batch."""
-    return OBBs(center=obbs.center.reshape(num_wp, NUM_LINKS, 3),
-                half=obbs.half.reshape(num_wp, NUM_LINKS, 3),
-                rot=obbs.rot.reshape(num_wp, NUM_LINKS, 3, 3))
+@dataclasses.dataclass
+class EdgeCheckResult:
+    """Batched swept-edge validation verdicts (``check_edges``)."""
+
+    first_hit: np.ndarray   # (E,) float32 t0 of first colliding sub-interval
+    #                         (inf = edge collision-free)
+    collide: np.ndarray     # (E,) bool
+    counters: Optional[object] = None
 
 
 def check_trajectory(engine: CollisionEngine, waypoints: jax.Array,
                      base_pos=None):
     """FK every waypoint -> link OBBs -> octree collision query.
 
-    Device-resident engines check the whole trajectory as one (T, 7)
-    query batch in a single compiled call (per-waypoint early exit);
-    host-loop engines keep the flat query.  Returns (per-waypoint collision
-    flags, counters).
+    ``waypoints`` is (T, 7); the trajectory lowers to one flat link-OBB
+    plan whose un-flattening recipe ORs each waypoint's links — every
+    engine mode consumes the same plan in a single call (device modes: one
+    compiled call with per-query early exit).  Returns (per-waypoint
+    collision flags, counters).
     """
-    obbs = arm_link_obbs(waypoints, base_pos=base_pos)
-    T = waypoints.shape[0]
-    if engine.cfg.device_resident:
-        collide, counters = engine.query_batched(_waypoint_batched(obbs, T))
-        return collide.any(axis=1), counters
-    collide, counters = engine.query(obbs)
-    per_wp = collide.reshape(T, -1).any(axis=1)
-    return per_wp, counters
+    return engine.execute(plan_trajectory(waypoints, base_pos=base_pos))
 
 
 def check_trajectories(engine: CollisionEngine, waypoints: jax.Array,
@@ -64,10 +69,27 @@ def check_trajectories(engine: CollisionEngine, waypoints: jax.Array,
     B * T waypoint queries traverse the octree together, each retiring from
     the wavefront as soon as its verdict is decided.
     """
-    B, T = waypoints.shape[:2]
-    obbs = arm_link_obbs(waypoints, base_pos=base_pos)   # (B*T*7,) flattened
-    flags, counters = engine.query_batched(_waypoint_batched(obbs, B * T))
-    return flags.any(axis=1).reshape(B, T), counters
+    return engine.execute(plan_trajectory(waypoints, base_pos=base_pos))
+
+
+def check_edges(engine: CollisionEngine, q_from: jax.Array, q_to: jax.Array,
+                resolution: int = 16, base_pos=None) -> EdgeCheckResult:
+    """Swept-edge (CCD) validation of E planning-graph edges.
+
+    Each edge ``q_from[e] -> q_to[e]`` (joint space, linear interpolation)
+    is enclosed in conservative swept OBBs and bisected only where the
+    swept volume hits occupied leaves; the finest round's payload lane
+    returns the per-edge *first* colliding sub-interval with in-traversal
+    early exit (:mod:`repro.core.sweep`).  ``first_hit[e]`` is the start
+    parameter t0 of that sub-interval (``inf`` for a collision-free edge),
+    an upper-bound verdict over dense waypoint sampling at the same
+    ``resolution``.  ``resolution`` must be a power of two (the bisection
+    halves segments down to width 1).
+    """
+    first_hit, collide, counters = sweep_edges(
+        engine, q_from, q_to, resolution=resolution, base_pos=base_pos)
+    return EdgeCheckResult(first_hit=first_hit, collide=collide,
+                           counters=counters)
 
 
 def plan_with_collision_gate(planner_params, planner_fns, engine:
@@ -79,13 +101,18 @@ def plan_with_collision_gate(planner_params, planner_fns, engine:
 
     ``planner_fns`` = (encode_fn, rollout_fn) from models/planner.py
     signatures; kept injectable so benchmarks can swap sampling modes.
+    Stage walls are honest: each stage blocks on its own device work
+    (``block_until_ready``), so the planner's async dispatch is charged to
+    ``plan_s`` and never bleeds into ``collision_s``.  ``counters`` come
+    from the collision gate only.
     """
     rollout = planner_fns["rollout"]
     t0 = time.perf_counter()
     traj = rollout(planner_params, cloud[None], q0[None], goal[None],
                    num_steps, sampling, key)
-    traj = jax.device_get(traj)[0]                  # (T+1, 7)
+    traj = jax.block_until_ready(traj)
     t_plan = time.perf_counter() - t0
+    traj = jax.device_get(traj)[0]                  # (T+1, 7)
 
     t0 = time.perf_counter()
     flags, counters = check_trajectory(engine, jnp.asarray(traj))

@@ -43,6 +43,14 @@ NUM_AXES = 15
 NUM_BOX_NORMAL = 6
 NUM_EDGE = 9
 
+#: Payload-lane "no hit" sentinel.  Grouped traversals (see
+#: :mod:`repro.engine.plan`) keep one int32 ``best`` cell per verdict group
+#: instead of a boolean per query: a terminal hit folds the pair's payload in
+#: with a min, so ``best`` ends as the smallest payload that hit (the first
+#: colliding sub-interval of a swept edge) and ``PAYLOAD_INF`` means the
+#: group never hit.  Boolean verdicts are the ``payload == 0`` special case.
+PAYLOAD_INF = 2**31 - 1
+
 
 class PairTerms(NamedTuple):
     """Precomputed per-pair quantities shared by all axis tests."""
@@ -180,6 +188,21 @@ def sact(obb_center, obb_half, obb_rot, aabb_center, aabb_half,
         bs = jnp.zeros(shape, bool)
         is_ = jnp.zeros(shape, bool)
     return _staged_result(bs, is_, margins, use_spheres)
+
+
+def payload_min_update(best, owner_lane, payload_lane, hit):
+    """Fold a frontier's terminal hits into the per-group ``best`` lane.
+
+    ``best`` is (G,) int32 (``PAYLOAD_INF`` = undecided); ``owner_lane`` /
+    ``payload_lane`` are the frontier lanes' verdict-group ids and payloads;
+    ``hit`` the terminal-hit mask.  Non-hit lanes contribute the sentinel, so
+    the scatter-min is a no-op for them — the payload-lane generalization of
+    ``collide.at[q_idx].max(term_hit)``.  Shared by the unfused / fused /
+    persistent-ref traversal arms (the persistent megakernel re-derives the
+    same min with a one-hot reduction; see kernels/persist/kernel.py).
+    """
+    return best.at[owner_lane].min(
+        jnp.where(hit, payload_lane, jnp.int32(PAYLOAD_INF)))
 
 
 def mask_frontier_result(res: SactResult, valid) -> SactResult:

@@ -1,763 +1,41 @@
-"""Batched octree collision traversal: device-resident wavefront engine.
+"""Compatibility shim over the plan/execute engine split.
 
-DESIGN — device-resident frontier
-=================================
-A *frontier* is an array of live (query, node) pairs at one octree level.
-The paper's central claim (RoboGPU §II, Fig. 11) is that collision queries
-need control flow *on the accelerator*: early exit and frontier retirement
-without a host round-trip.  The engine here realizes that as a single
-jit-compiled ``jax.lax.while_loop`` over levels:
+The batched wavefront collision engine that used to live here — mode
+dispatch, the device-resident ``lax.while_loop`` traversals, the traversal
+jit cache, the escalate-on-overflow capacity policy, and counter assembly
+— now lives in :mod:`repro.engine`:
 
-  1. the frontier lives in a **fixed-capacity** buffer ``(capacity,)`` of
-     (query index, Morton code) pairs; ``n_live`` marks the packed prefix;
-  2. each iteration runs the staged SACT on every live pair, confirms
-     collisions against *terminal* nodes (leaves, or internal nodes whose
-     subtree is fully occupied), and expands survivors to their occupied
-     children (a searchsorted occupancy probe on the padded
-     :class:`~repro.core.octree.DeviceOctree` level arrays);
-  3. the next frontier is **stream-compacted** in place by
-     :mod:`repro.kernels.compact` (prefix-sum + scatter; Pallas kernel on
-     TPU, jnp scatter elsewhere): culled pairs, decided queries' pairs and
-     empty children retire from the wavefront — the batch-granularity
-     analogue of the paper's conditional returns — with **no host sync
-     between levels**.
+* :mod:`repro.engine.plan` lowers every front-end batch shape (single
+  query set, (B, M) batch, ragged multi-scene, trajectory, swept edge)
+  into one canonical flat pair pool (query slot, scene id, CSR node,
+  payload lanes) plus an un-flattening recipe;
+* :mod:`repro.engine.executor` executes any plan under any
+  ``EngineConfig.mode`` (DESIGN.md §2) — the four hand-routed
+  ``_query_*`` / ``query_batched_scenes`` code paths of the pre-split
+  engine collapsed into one executor consuming plans.
 
-``mode="wavefront_fused"`` replaces that loop body with the fused
-traversal step of :mod:`repro.kernels.traverse`: the frontier carries
-(query, CSR node index) pairs, codes / terminality / child occupancy are
-O(1) gathers through the :class:`DeviceOctree` CSR
-child-pointer table (no searchsorted anywhere in the loop body), the
-staged SACT culls in two phases (spheres + box-normal axes decide most
-pairs; the 9 edge axes run only when survivors remain), and on TPU the
-whole test is one Pallas kernel per level emitting a single packed verdict
-word per pair.  Verdicts and work counters are bitwise-identical to
-``wavefront``; only the modeled bytes differ (frontier-in/frontier-out,
-see :mod:`repro.core.counters`).
-
-``mode="wavefront_persistent"`` goes one step further: the ENTIRE
-multi-level traversal is one call into :mod:`repro.kernels.persist` — on
-TPU a single persistent megakernel whose per-tile frontier lives in
-double-buffered VMEM scratch for the whole walk (HBM sees one seed pair in
-and one verdict word out per query, plus a spill ring under overflow), and
-elsewhere a live-prefix jnp reference that processes each level at the
-smallest power-of-two width covering ``n_live`` and places CSR children
-in-register via per-parent popcount scans.  Multi-scene batches
-(:func:`query_batched_scenes`) and (B, M) trajectory batches run as a
-*ragged flat frontier* of (scene, query, CSR node) triples over a
-concatenated multi-scene CSR table — one compiled call and one compaction
-pool, padding-free across mixed scene sizes.  Verdicts and work counters
-stay bitwise-identical to ``wavefront_fused``.
-
-Capacity / overflow policy: ``capacity`` is static per compile.  Sizing it
-to the worst-case frontier bound (``min(8 * bound_prev, M * n_level)``)
-wastes orders of magnitude of compute on typical scenes, so the engine
-starts from a small power-of-two bucket and **escalates on overflow**: the
-loop counts pairs that would exceed capacity (dropped highest-index-first)
-in ``Counters.frontier_overflow``; if a completed call reports overflow,
-the query replays at 4x capacity until clean or the worst-case bound /
-``max_frontier`` is reached.  The traversal itself never syncs per level —
-escalation is a rare whole-query replay, and verdicts are exact whenever
-``frontier_overflow == 0`` (overflow at ``max_frontier`` under-approximates
-exactly like the legacy host engine's clamp).  Pinning
-``EngineConfig.frontier_capacity`` disables escalation for
-latency-deterministic deployments.
-
-Work counters accumulate *inside* the loop carry (scalars + an exit-code
-histogram + per-level node counts) and are fetched once after the call, so
-the device engine reports the same work model as the host engine.
-
-The legacy host-in-the-loop engine — frontier buffers resized to
-power-of-two buckets on the host between levels — is retained as
-``mode="wavefront_host"`` for A/B benchmarks and bitwise cross-checks.
-``query_batched`` vmaps the traversal over whole trajectory batches, and
-:func:`query_batched_scenes` additionally vmaps over stacked scenes, each in
-one compiled call.
-
-Engine variants (paper Fig. 11 arms) are selected by ``EngineConfig.mode``;
-see DESIGN.md §2 for the mapping table.
+This module re-exports the public names so existing imports
+(``from repro.core.wavefront import CollisionEngine, EngineConfig, ...``)
+keep working; new code should import from :mod:`repro.engine` directly.
+Verdicts and work counters of every pre-split mode are bitwise-identical
+through the refactor (CI-enforced).
 """
-from __future__ import annotations
-
-import dataclasses
-import functools
-import time
-import weakref
-from typing import List, Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import sact as sact_mod
-from repro.core.counters import (BYTES_FUSED_STEP, BYTES_FUSED_TEST,
-                                 BYTES_PERSIST_QUERY, BYTES_PERSIST_SPILL,
-                                 BYTES_SHADER_HANDOFF, BYTES_UNFUSED_TEST,
-                                 NUM_EXIT_CODES, Counters)
-from repro.core.geometry import OBBs
-from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree,
-                               concat_device_octrees, device_octree,
-                               lookup_children, node_centers_from_codes,
-                               stack_device_octrees)
-from repro.core.sact import NUM_AXES, SactResult
-from repro.kernels.compact.ops import compact_pairs
-from repro.kernels.persist.ops import traverse_whole
-from repro.kernels.traverse.ops import traverse_step
-
-MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
-         "wavefront", "wavefront_fused", "wavefront_persistent")
-#: Modes whose traversal runs fully on-device inside one compiled call.
-DEVICE_MODES = ("wavefront", "wavefront_fused", "wavefront_persistent")
-#: CSR-frontier modes: multi-scene batches run on the ragged flat frontier.
-CSR_MODES = ("wavefront_fused", "wavefront_persistent")
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    mode: str = "wavefront"
-    use_spheres: bool = False      # MPAccel bounding/inscribing sphere pre-tests
-    max_frontier: int = 1 << 20    # hard cap on live pairs per level
-    min_bucket: int = 1024         # smallest frontier allocation
-    query_block: int = 128         # naive-mode OBB block size
-    frontier_capacity: Optional[int] = None  # device engine: static capacity
-    use_pallas_compact: Optional[bool] = None  # None = auto (TPU only)
-    use_pallas_traverse: Optional[bool] = None  # fused step / persistent
-    #                                            megakernel; None = auto
-
-    def __post_init__(self):
-        if self.mode not in MODES:
-            raise ValueError(
-                f"unknown engine mode {self.mode!r}; allowed modes: "
-                f"{', '.join(MODES)}")
-
-    @property
-    def early_exit(self) -> bool:
-        return self.mode in ("predicated", "wavefront_host") + DEVICE_MODES
-
-    @property
-    def stage_split(self) -> bool:
-        return self.mode in ("wavefront_host",) + DEVICE_MODES
-
-    @property
-    def fused(self) -> bool:
-        return self.mode == "wavefront_fused"
-
-    @property
-    def persistent(self) -> bool:
-        return self.mode == "wavefront_persistent"
-
-    @property
-    def device_resident(self) -> bool:
-        return self.mode in DEVICE_MODES
-
-
-def _bucket(n: int, cfg: EngineConfig) -> int:
-    b = cfg.min_bucket
-    while b < n:
-        b <<= 1
-    return min(b, cfg.max_frontier)
-
-
-def frontier_capacity_bound(level_counts: Sequence[int], num_queries: int,
-                            cfg: EngineConfig) -> int:
-    """Static worst-case frontier size for a query set against one tree.
-
-    Level l+1 can hold at most 8x the level-l frontier, and never more than
-    every query paired with every occupied node of that level.
-    """
-    if cfg.frontier_capacity is not None:
-        return max(cfg.frontier_capacity, num_queries)
-    bound = cap = num_queries                # level 0: one root cell
-    for n_l in level_counts[1:]:
-        bound = min(bound * 8, num_queries * n_l)
-        cap = max(cap, bound)
-    cap = min(cap, cfg.max_frontier)
-    return max(_bucket(cap, cfg), num_queries)
-
-
-def _initial_capacity(num_queries: int, cfg: EngineConfig) -> int:
-    """First-attempt frontier bucket for the escalate-on-overflow policy.
-
-    The level-0 frontier is exactly one pair per query, and with early exit
-    most scenes never outgrow that by much — so guess the bucket that holds
-    M and let overflow replays buy more only when traversal proves it needs
-    it.  Over-guessing costs every level of every query; under-guessing
-    costs one replay."""
-    if cfg.frontier_capacity is not None:
-        return max(cfg.frontier_capacity, num_queries)
-    guess = min(max(num_queries, cfg.min_bucket), cfg.max_frontier)
-    return max(_bucket(guess, cfg), num_queries)
-
-
-def _escalate(run, num_queries: int, worst: int, cfg: EngineConfig,
-              start: Optional[int] = None):
-    """Run ``run(capacity)`` -> (collide, stats), replaying at 4x capacity
-    while the completed call reports frontier overflow.  A pinned
-    ``frontier_capacity`` disables escalation (deterministic latency).
-
-    ``start`` seeds the first attempt (the engine remembers the last clean
-    capacity per query shape, so repeat queries skip the replay ladder).
-    Returns (collide, stats, clean_capacity, num_replays).
-    """
-    cap = _initial_capacity(num_queries, cfg)
-    if start is not None and cfg.frontier_capacity is None:
-        cap = min(max(start, cap), max(worst, num_queries))
-    replays = 0
-    while True:
-        collide, st = run(cap)
-        if cfg.frontier_capacity is not None or cap >= worst:
-            return collide, st, cap, replays
-        if int(jax.device_get(jnp.sum(st["overflow"]))) == 0:
-            return collide, st, cap, replays
-        cap = min(max(cap * 4, cfg.min_bucket), worst)
-        replays += 1
-
-
-# ---------------------------------------------------------------------------
-# Device-resident traversal (one jit-compiled while_loop, no host syncs)
-# ---------------------------------------------------------------------------
-
-def _empty_stats():
-    return dict(
-        nodes=jnp.int32(0), leaf=jnp.int32(0), axis_exec=jnp.int32(0),
-        axis_dec=jnp.int32(0), sphere=jnp.int32(0), overflow=jnp.int32(0),
-        per_level=jnp.zeros((MAX_DEPTH + 1,), jnp.int32),
-        exit_hist=jnp.zeros((NUM_EXIT_CODES,), jnp.int32))
-
-
-def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
-              use_spheres: bool, use_pallas: bool):
-    """Full multi-level wavefront traversal for one query set / one scene.
-
-    Pure function of device arrays; composes under jit and vmap.  Returns
-    (collide (M,) bool, stats dict).
-    """
-    M = obb_c.shape[0]
-    depth = dev.depth
-    lane = jnp.arange(capacity, dtype=jnp.int32)
-    eight = jnp.arange(8, dtype=jnp.uint32)
-
-    def level_row(arr, level):
-        return jax.lax.dynamic_index_in_dim(arr, level, keepdims=False)
-
-    def body(carry):
-        level, n_live, q_idx, codes, collide, st = carry
-        valid = lane < n_live
-        cell = level_row(dev.cell_sizes, level)
-        node_c, node_h = node_centers_from_codes(codes, dev.scene_lo, cell)
-        res = sact_mod.sact_frontier(
-            obb_c[q_idx], obb_h[q_idx], obb_r[q_idx], node_c, node_h, valid,
-            use_spheres=use_spheres)
-
-        # Terminal nodes: leaves, or internal nodes with a full subtree.
-        codes_l = level_row(dev.codes, level)
-        pos = jnp.clip(jnp.searchsorted(codes_l, codes), 0,
-                       codes_l.shape[0] - 1)
-        is_term = jnp.where(level == depth, True, level_row(dev.full, level)[pos])
-        overlap = res.collide & valid
-        term_hit = overlap & is_term
-        collide = collide.at[q_idx].max(term_hit)
-
-        # ---- work accounting (device-side; fetched once post-call) -------
-        n_valid = jnp.sum(valid.astype(jnp.int32))
-        term_valid = (valid & is_term).astype(jnp.int32)
-        st = dict(
-            nodes=st["nodes"] + n_valid,
-            leaf=st["leaf"] + jnp.sum(term_valid),
-            axis_exec=st["axis_exec"] + jnp.sum(res.axis_tests),
-            axis_dec=st["axis_dec"] + n_valid * NUM_AXES,
-            sphere=st["sphere"] + jnp.sum(res.sphere_tests),
-            overflow=st["overflow"],
-            per_level=st["per_level"].at[level].set(n_valid),
-            exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid))
-
-        # ---- expansion + on-device stream compaction ---------------------
-        child_codes_l = level_row(dev.codes, jnp.minimum(level + 1, depth))
-        cand = (codes[:, None] << jnp.uint32(3)) | eight[None, :]   # (cap, 8)
-        cpos = jnp.clip(
-            jnp.searchsorted(child_codes_l, cand.reshape(-1)), 0,
-            child_codes_l.shape[0] - 1).reshape(cand.shape)
-        found = child_codes_l[cpos] == cand
-        # Early exit: decided queries retire their whole wavefront share.
-        expand = overlap & ~is_term & ~collide[q_idx]
-        child_mask = (expand[:, None] & found).reshape(-1)          # (cap*8,)
-        n_new = jnp.sum(child_mask.astype(jnp.int32))
-        cnt, q_next, codes_next = compact_pairs(
-            child_mask, jnp.repeat(q_idx, 8), cand.reshape(-1), capacity,
-            use_pallas=use_pallas)
-        st["overflow"] = st["overflow"] + jnp.maximum(n_new - capacity, 0)
-        return level + 1, cnt, q_next, codes_next, collide, st
-
-    def cond(carry):
-        level, n_live = carry[0], carry[1]
-        return (level <= depth) & (n_live > 0)
-
-    q0 = jnp.where(lane < M, lane, 0)
-    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(M), jnp.int32(capacity)),
-              q0, jnp.zeros((capacity,), jnp.uint32),
-              jnp.zeros((M,), bool), _empty_stats())
-    _, _, _, _, collide, st = jax.lax.while_loop(cond, body, carry0)
-    return collide, st
-
-
-def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
-                    use_spheres: bool, use_pallas: bool,
-                    use_pallas_traverse: Optional[bool]):
-    """Fused multi-level wavefront traversal (``mode="wavefront_fused"``).
-
-    Same while_loop skeleton and work accounting as :func:`_traverse`, but
-    each level is one :func:`repro.kernels.traverse.ops.traverse_step`: the
-    frontier carries (query, CSR node index) pairs — codes, terminality and
-    child occupancy are O(1) CSR gathers instead of searchsorted probes —
-    the staged SACT culls in two phases, and the per-level HBM-resident
-    intermediates reduce to frontier-in / frontier-out.  Verdicts and work
-    counters are bitwise-identical to :func:`_traverse`.
-    """
-    M = obb_c.shape[0]
-    depth = dev.depth
-    lane = jnp.arange(capacity, dtype=jnp.int32)
-
-    def body(carry):
-        level, n_live, q_idx, node_idx, collide, st = carry
-        n_next, q_next, idx_next, collide, info = traverse_step(
-            obb_c, obb_h, obb_r, dev, level, n_live, q_idx, node_idx,
-            collide, use_spheres=use_spheres,
-            use_pallas=use_pallas_traverse, use_pallas_compact=use_pallas)
-        res, valid, is_term = info["res"], info["valid"], info["is_term"]
-
-        # ---- work accounting (identical formulas to the unfused arm) -----
-        n_valid = jnp.sum(valid.astype(jnp.int32))
-        term_valid = (valid & is_term).astype(jnp.int32)
-        st = dict(
-            nodes=st["nodes"] + n_valid,
-            leaf=st["leaf"] + jnp.sum(term_valid),
-            axis_exec=st["axis_exec"] + jnp.sum(res.axis_tests),
-            axis_dec=st["axis_dec"] + n_valid * NUM_AXES,
-            sphere=st["sphere"] + jnp.sum(res.sphere_tests),
-            overflow=st["overflow"] + jnp.maximum(info["n_new"] - capacity,
-                                                  0),
-            per_level=st["per_level"].at[level].set(n_valid),
-            exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid))
-        return level + 1, n_next, q_next, idx_next, collide, st
-
-    def cond(carry):
-        level, n_live = carry[0], carry[1]
-        return (level <= depth) & (n_live > 0)
-
-    q0 = jnp.where(lane < M, lane, 0)
-    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(M), jnp.int32(capacity)),
-              q0, jnp.zeros((capacity,), jnp.int32),
-              jnp.zeros((M,), bool), _empty_stats())
-    out = jax.lax.while_loop(cond, body, carry0)
-    return out[4], out[5]
-
-
-#: Trace counts per cached-traversal key; Python side effects run only at
-#: trace time, so a key whose count stays 1 proved its cache hits.
-_TRACE_COUNTS: dict = {}
-
-
-@functools.lru_cache(maxsize=None)
-def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
-                  use_pallas, use_pallas_traverse):
-    """One jit-compiled traversal per (mode, batch kind, capacity, statics).
-
-    The LRU gives every (mode, capacity, ...) configuration a *stable
-    callable identity*, so jax.jit's shape-keyed cache persists across
-    overflow-escalation replays and across repeated ``CollisionEngine``
-    constructions on same-shaped scenes — neither retraces.  See
-    :func:`traversal_cache_info` for the observability hook tests use.
-    """
-    key = (mode, batch, capacity, use_spheres, use_pallas,
-           use_pallas_traverse)
-
-    def base(c, h, r, d, soq=None):
-        _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
-        if mode == "wavefront_persistent" or soq is not None:
-            # Whole-traversal megakernel / live-prefix ref; the ragged
-            # multi-scene flat frontier (soq given) also lands here for
-            # every CSR mode.
-            return traverse_whole(c, h, r, d, capacity,
-                                  use_spheres=use_spheres,
-                                  use_pallas=use_pallas_traverse,
-                                  scene_of_query=soq)
-        if mode == "wavefront_fused":
-            return _traverse_fused(c, h, r, d, capacity, use_spheres,
-                                   use_pallas, use_pallas_traverse)
-        return _traverse(c, h, r, d, capacity, use_spheres, use_pallas)
-
-    if batch == "single":
-        fn = base
-    elif batch == "batch":       # (B, M) query sets against one scene
-        def fn(c, h, r, d, soq=None):
-            return jax.vmap(lambda cc, hh, rr: base(cc, hh, rr, d))(c, h, r)
-    else:                        # padded stacked scenes (legacy vmap path)
-        def fn(c, h, r, d, soq=None):
-            return jax.vmap(lambda cc, hh, rr, dd: base(cc, hh, rr, dd))(
-                c, h, r, d)
-    return jax.jit(fn)
-
-
-def traversal_cache_info() -> dict:
-    """Cache observability: lru entries + per-key trace counts."""
-    info = _traversal_fn.cache_info()
-    return dict(hits=info.hits, misses=info.misses,
-                entries=info.currsize, traces=dict(_TRACE_COUNTS))
-
-
-def _stats_to_counters(st, mode: str, replays: int = 0) -> Counters:
-    st = jax.device_get(st)
-    c = Counters()
-
-    def tot(x):
-        return int(np.sum(np.asarray(st[x], np.int64)))
-
-    c.nodes_traversed = tot("nodes")
-    c.leaf_tests = tot("leaf")
-    c.axis_tests_executed = tot("axis_exec")
-    c.axis_tests_decoded = tot("axis_dec")
-    c.sphere_tests = tot("sphere")
-    c.frontier_overflow = tot("overflow")
-    c.escalations = replays
-    per = np.asarray(st["per_level"], np.int64)
-    if per.ndim > 1:                       # batched: sum lanes per level
-        per = per.reshape(-1, per.shape[-1]).sum(axis=0)
-    c.nodes_per_level = [int(n) for n in per if n > 0]
-    hist = np.asarray(st["exit_hist"], np.int64)
-    c.exit_histogram += hist.reshape(-1, hist.shape[-1]).sum(axis=0)
-    # Bytes models (see counters.py): per-level arms move the frontier
-    # through HBM every level; the persistent megakernel only moves each
-    # query's seed in / verdict out, plus spill-ring traffic.
-    if mode == "wavefront_persistent":
-        seeds = int(per[0]) if per.size else 0
-        c.bytes_moved = (seeds * BYTES_PERSIST_QUERY
-                         + c.frontier_overflow * BYTES_PERSIST_SPILL)
-    elif mode == "wavefront_fused":
-        c.bytes_moved = c.nodes_traversed * BYTES_FUSED_STEP
-    else:
-        c.bytes_moved = c.nodes_traversed * BYTES_UNFUSED_TEST
-    return c
-
-
-@functools.partial(jax.jit, static_argnames=("use_spheres", "stage_split"))
-def _test_pairs(obb_c, obb_h, obb_r, node_c, node_h, valid,
-                use_spheres: bool, stage_split: bool) -> SactResult:
-    """Staged SACT on a host-managed frontier of pairs.
-
-    With ``stage_split`` the edge axes are evaluated behind a
-    ``lax.select``-style mask (their cost is counted separately by the work
-    model); the wall-clock stage split happens at the frontier level via
-    bucket resizing, which is where static-shape hardware can actually save.
-    """
-    del stage_split
-    return sact_mod.sact_frontier(obb_c, obb_h, obb_r, node_c, node_h, valid,
-                                  use_spheres=use_spheres)
-
-
-@functools.partial(jax.jit, static_argnames=("n_out",))
-def _compact(mask: jax.Array, n_out: int, *arrays):
-    """Pack entries where mask is True to the front of fresh (n_out,) arrays."""
-    idx = jnp.nonzero(mask, size=n_out, fill_value=mask.shape[0])[0]
-    in_range = idx < mask.shape[0]
-    idx_c = jnp.minimum(idx, mask.shape[0] - 1)
-    out = tuple(jnp.where(in_range.reshape((-1,) + (1,) * (a.ndim - 1)),
-                          a[idx_c], 0) for a in arrays)
-    return (in_range,) + out
-
-
-class CollisionEngine:
-    """Octree collision queries for a fixed scene, in a selectable mode."""
-
-    def __init__(self, octree: Octree, config: EngineConfig = EngineConfig()):
-        self.octree = octree
-        self.cfg = config
-        self._scene_lo = jnp.asarray(octree.scene_lo)
-        self._level_codes = [jnp.asarray(l.codes) for l in octree.levels]
-        self._level_full = [jnp.asarray(l.full) for l in octree.levels]
-        self._dev: Optional[DeviceOctree] = None
-        # Last clean frontier capacity per query shape: repeat queries start
-        # there instead of re-climbing the escalation ladder.
-        self._cap_memo: dict = {}
-
-    @property
-    def device_tree(self) -> DeviceOctree:
-        """Padded level arrays for the device-resident engine (lazy)."""
-        if self._dev is None:
-            self._dev = device_octree(self.octree)
-        return self._dev
-
-    def _capacity(self, num_queries: int) -> int:
-        counts = [len(l.codes) for l in self.octree.levels]
-        return frontier_capacity_bound(counts, num_queries, self.cfg)
-
-    # ------------------------------------------------------------------
-    def query(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
-        t0 = time.perf_counter()
-        if self.cfg.mode == "naive":
-            out = self._query_naive(obbs)
-        elif self.cfg.device_resident:
-            out = self._query_device(obbs)
-        else:
-            out = self._query_tree(obbs)
-        collide, counters = out
-        counters.wall_time_s = time.perf_counter() - t0
-        counters.num_queries = obbs.n
-        return collide, counters
-
-    # ------------------------------------------------------------------
-    def query_batched(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
-        """Batched front-end: OBB fields carry a leading batch axis.
-
-        ``obbs.center`` is (B, M, 3) (likewise half/rot); for device modes
-        the whole (B, M) trajectory batch traverses in ONE compiled call
-        (vmapped while_loop).  Host modes fall back to a per-set Python loop
-        so benchmarks can report the speedup.  Returns ((B, M) verdicts,
-        aggregate counters).
-        """
-        assert obbs.center.ndim == 3, "query_batched wants (B, M, 3) fields"
-        B, M = obbs.center.shape[:2]
-        t0 = time.perf_counter()
-        if self.cfg.persistent:
-            # The persistent mode never vmaps: the batch flattens into one
-            # ragged frontier pool of B*M independent queries (a vmapped
-            # lax.switch would execute every width branch per level).
-            flat = OBBs(center=obbs.center.reshape(-1, 3),
-                        half=obbs.half.reshape(-1, 3),
-                        rot=obbs.rot.reshape(-1, 3, 3))
-            collide_flat, counters = self._query_device(flat)
-            collide = collide_flat.reshape(B, M)
-        elif self.cfg.device_resident:
-            memo_key = ("batch", B, M)
-            collide, st, cap, replays = _escalate(
-                lambda cap: self._run(cap, "batch")(
-                    obbs.center, obbs.half, obbs.rot, self.device_tree),
-                M, self._capacity(M), self.cfg,
-                start=self._cap_memo.get(memo_key))
-            self._cap_memo[memo_key] = cap
-            counters = _stats_to_counters(st, self.cfg.mode, replays)
-            collide = np.asarray(jax.device_get(collide))
-        else:
-            counters = Counters()
-            rows = []
-            for b in range(B):
-                one = OBBs(center=obbs.center[b], half=obbs.half[b],
-                           rot=obbs.rot[b])
-                col, c = self.query(one)
-                rows.append(np.asarray(col))
-                counters.merge(c)
-            collide = np.stack(rows)
-        counters.wall_time_s = time.perf_counter() - t0
-        counters.num_queries = B * M
-        return collide, counters
-
-    # ------------------------------------------------------------------
-    def _run(self, capacity: int, batch: str = "single"):
-        """Cached jit-compiled traversal for this engine's config."""
-        return _traversal_fn(self.cfg.mode, batch, capacity,
-                             self.cfg.use_spheres,
-                             self.cfg.use_pallas_compact,
-                             self.cfg.use_pallas_traverse)
-
-    def _query_device(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
-        memo_key = ("single", obbs.n)
-        collide, st, cap, replays = _escalate(
-            lambda cap: self._run(cap)(obbs.center, obbs.half, obbs.rot,
-                                       self.device_tree),
-            obbs.n, self._capacity(obbs.n), self.cfg,
-            start=self._cap_memo.get(memo_key))
-        self._cap_memo[memo_key] = cap
-        return (np.asarray(jax.device_get(collide)),
-                _stats_to_counters(st, self.cfg.mode, replays))
-
-    # ------------------------------------------------------------------
-    def _query_naive(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
-        """CUDA-baseline arm: dense all-pairs vs all leaf AABBs, all axes."""
-        leaves = self.octree.leaf_aabbs()
-        c = Counters()
-        M = obbs.n
-        res = sact_mod.sact_pairwise_blocked(
-            obbs, leaves, block=self.cfg.query_block, use_spheres=False)
-        collide = np.asarray(jax.device_get(jnp.any(res.collide, axis=-1)))
-        n_tests = M * leaves.n
-        c.nodes_traversed = n_tests
-        c.leaf_tests = n_tests
-        c.axis_tests_executed = n_tests * NUM_AXES
-        c.axis_tests_decoded = n_tests * NUM_AXES
-        c.bytes_moved = n_tests * BYTES_UNFUSED_TEST
-        codes = np.asarray(jax.device_get(res.exit_code)).reshape(-1)
-        c.merge_exit_codes(codes, np.ones_like(codes, bool))
-        return collide, c
-
-    # ------------------------------------------------------------------
-    def _query_tree(self, obbs: OBBs) -> Tuple[np.ndarray, Counters]:
-        """Legacy host-in-the-loop traversal (``wavefront_host`` and the
-        predication/no-exit ablation arms): the frontier is re-bucketed on
-        the host between levels, which blocks jit across levels."""
-        cfg = self.cfg
-        oct_ = self.octree
-        M = obbs.n
-        c = Counters()
-        decided = np.zeros(M, bool)           # queries confirmed colliding
-        collide = np.zeros(M, bool)
-
-        if len(oct_.levels[0].codes) == 0:
-            return collide, c
-
-        # Frontier at level 0: every query x the root cell.
-        q_idx = jnp.arange(M, dtype=jnp.int32)
-        codes = jnp.zeros((M,), jnp.uint32)
-        n_live = M
-        bucket = _bucket(M, cfg)
-        q_idx = jnp.pad(q_idx, (0, bucket - M))
-        codes = jnp.pad(codes, (0, bucket - M))
-        valid = jnp.arange(bucket) < n_live
-
-        for level in range(0, oct_.depth + 1):
-            if n_live == 0:
-                break
-            cell = oct_.cell_size(level)
-            node_c, node_h = node_centers_from_codes(codes, self._scene_lo,
-                                                     cell)
-            res = _test_pairs(obbs.center[q_idx], obbs.half[q_idx],
-                              obbs.rot[q_idx], node_c, node_h, valid,
-                              use_spheres=cfg.use_spheres,
-                              stage_split=cfg.stage_split)
-            # Terminal nodes: leaves, or full internal subtrees.
-            if level == oct_.depth:
-                is_term = jnp.ones_like(valid)
-            else:
-                pos = jnp.searchsorted(self._level_codes[level], codes)
-                pos = jnp.clip(pos, 0, self._level_codes[level].shape[0] - 1)
-                is_term = self._level_full[level][pos]
-            overlap = res.collide & valid
-            term_hit = overlap & is_term
-
-            # ---- work accounting -------------------------------------
-            valid_np = np.asarray(jax.device_get(valid))
-            n_valid = int(valid_np.sum())
-            c.nodes_traversed += n_valid
-            c.nodes_per_level.append(n_valid)
-            n_term = int(jax.device_get(jnp.sum(valid & is_term)))
-            c.leaf_tests += n_term
-            exec_tests = int(jax.device_get(
-                jnp.sum(jnp.where(valid, res.axis_tests, 0))))
-            c.axis_tests_executed += exec_tests
-            c.axis_tests_decoded += n_valid * NUM_AXES
-            c.sphere_tests += int(jax.device_get(
-                jnp.sum(jnp.where(valid, res.sphere_tests, 0))))
-            per_test_bytes = (BYTES_FUSED_TEST if cfg.fused
-                              else BYTES_UNFUSED_TEST)
-            c.bytes_moved += n_valid * per_test_bytes
-            if cfg.mode == "rta_like":
-                n_hits = int(jax.device_get(jnp.sum(overlap)))
-                c.shader_invocations += n_hits
-                c.bytes_moved += n_hits * BYTES_SHADER_HANDOFF
-            codes_np = np.asarray(jax.device_get(res.exit_code))
-            c.merge_exit_codes(codes_np, np.asarray(jax.device_get(
-                valid & is_term)))
-
-            # ---- collision confirmation ------------------------------
-            hit_q = np.asarray(jax.device_get(
-                jnp.zeros(M, bool).at[q_idx].max(term_hit)))
-            collide |= hit_q
-            if cfg.early_exit:
-                decided |= hit_q
-
-            if level == oct_.depth:
-                break
-
-            # ---- expansion -------------------------------------------
-            expand = overlap & ~is_term
-            if cfg.early_exit:
-                expand = expand & ~jnp.asarray(decided)[q_idx]
-            child_codes, child_idx = lookup_children(
-                self._level_codes[level + 1], codes)
-            child_mask = expand[:, None] & (child_idx >= 0)         # (K, 8)
-            flat_mask = child_mask.reshape(-1)
-            flat_codes = child_codes.reshape(-1)
-            flat_q = jnp.repeat(q_idx, 8)
-            n_live = int(jax.device_get(jnp.sum(flat_mask)))
-            if n_live == 0:
-                break
-            if n_live > cfg.max_frontier:
-                c.frontier_overflow += n_live - cfg.max_frontier
-                n_live = cfg.max_frontier
-            bucket = _bucket(n_live, cfg)
-            valid, q_idx, codes = _compact(flat_mask, bucket, flat_q,
-                                           flat_codes)
-        return collide, c
-
-
-#: Device scene-table memo for repeat multi-scene batches: building the
-#: concatenated/stacked level tables is a host-side numpy pass over every
-#: level of every scene plus a device transfer — far more than a warm
-#: traversal costs.  Keyed by the octree objects' identities; weakrefs
-#: guard against id reuse after GC (a dead ref can never alias a live key).
-_TABLE_CACHE: dict = {}
-_TABLE_CACHE_MAX = 8
-
-
-def _scene_tables(octrees: List[Octree], padded: bool):
-    key = (padded, tuple(id(t) for t in octrees))
-    hit = _TABLE_CACHE.get(key)
-    if hit is not None:
-        refs, tables = hit
-        if all(r() is t for r, t in zip(refs, octrees)):
-            return tables
-    tables = (stack_device_octrees(octrees) if padded
-              else concat_device_octrees(octrees))
-    while len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
-        _TABLE_CACHE.pop(next(iter(_TABLE_CACHE)))
-    _TABLE_CACHE[key] = ([weakref.ref(t) for t in octrees], tables)
-    return tables
-
-
-def query_batched_scenes(octrees: List[Octree], obbs: OBBs,
-                         config: EngineConfig = EngineConfig()
-                         ) -> Tuple[np.ndarray, Counters]:
-    """Traverse S scenes, each with its own (M,) OBB set, in ONE compiled call.
-
-    ``obbs`` fields carry a leading scene axis: center (S, M, 3).  All trees
-    must share a depth; node counts may differ arbitrarily.
-
-    CSR modes (``wavefront_fused`` / ``wavefront_persistent``) run the
-    **ragged flat frontier**: one pool of (scene, query, CSR node) triples
-    over the :func:`repro.core.octree.concat_device_octrees` flat table —
-    mixed-size scenes share the compiled call and the compaction pool, and
-    no work scales with the largest scene's padding.  ``mode="wavefront"``
-    (whose frontier carries Morton codes, not CSR indices) keeps the legacy
-    padded-vmap path over :func:`stack_device_octrees` for A/B benchmarks.
-    Returns ((S, M) verdicts, aggregate counters).
-    """
-    assert config.device_resident, "multi-scene batching needs a device mode"
-    assert obbs.center.ndim == 3 and obbs.center.shape[0] == len(octrees)
-    S, M = obbs.center.shape[:2]
-    t0 = time.perf_counter()
-    if config.mode in CSR_MODES:
-        multi = _scene_tables(octrees, padded=False)
-        soq = jnp.repeat(jnp.arange(S, dtype=jnp.int32), M)
-        # Worst-case pool: sum of the per-scene bounds, clamped once.
-        worst = min(sum(frontier_capacity_bound(
-            [len(l.codes) for l in t.levels], M, config) for t in octrees),
-            max(config.max_frontier, S * M))
-        collide, st, _, replays = _escalate(
-            lambda cap: _traversal_fn(
-                config.mode, "single", cap, config.use_spheres,
-                config.use_pallas_compact, config.use_pallas_traverse)(
-                    obbs.center.reshape(-1, 3), obbs.half.reshape(-1, 3),
-                    obbs.rot.reshape(-1, 3, 3), multi, soq),
-            S * M, worst, config)
-        collide = jax.device_get(collide).reshape(S, M)
-    else:
-        dev = _scene_tables(octrees, padded=True)
-        worst = max(frontier_capacity_bound(
-            [len(l.codes) for l in t.levels], M, config) for t in octrees)
-        collide, st, _, replays = _escalate(
-            lambda cap: _traversal_fn(
-                config.mode, "scenes", cap, config.use_spheres,
-                config.use_pallas_compact, config.use_pallas_traverse)(
-                    obbs.center, obbs.half, obbs.rot, dev),
-            M, worst, config)
-    counters = _stats_to_counters(st, config.mode, replays)
-    counters.wall_time_s = time.perf_counter() - t0
-    counters.num_queries = S * M
-    return np.asarray(jax.device_get(collide)), counters
+from repro.engine import executor as _executor
+from repro.engine.executor import (CSR_MODES, DEVICE_MODES, MODES,
+                                   CollisionEngine, EngineConfig,
+                                   frontier_capacity_bound,
+                                   query_batched_scenes,
+                                   traversal_cache_info)
+
+# Private aliases kept for callers that reached into the old module.
+_escalate = _executor._escalate
+_initial_capacity = _executor._initial_capacity
+_stats_to_counters = _executor._stats_to_counters
+_traversal_fn = _executor._traversal_fn
+_traverse = _executor._traverse
+_traverse_fused = _executor._traverse_fused
+
+__all__ = [
+    "CSR_MODES", "CollisionEngine", "DEVICE_MODES", "EngineConfig", "MODES",
+    "frontier_capacity_bound", "query_batched_scenes", "traversal_cache_info",
+]

@@ -19,6 +19,13 @@ from repro.core.geometry import OBBs, trajectory_obbs
 
 ENVIRONMENTS = ("cubby", "dresser", "merged_cubby", "tabletop")
 
+#: Panda-like joint limits used for every sampled configuration (scene
+#: trajectories, PRM edge batches in benchmarks/tests).
+PANDA_JOINT_LO = np.asarray([-2.8, -1.7, -2.8, -3.0, -2.8, 0.0, -2.8],
+                            np.float32)
+PANDA_JOINT_HI = np.asarray([2.8, 1.7, 2.8, -0.1, 2.8, 3.7, 2.8],
+                            np.float32)
+
 
 @dataclasses.dataclass(frozen=True)
 class Scene:
@@ -136,8 +143,7 @@ def scene_trajectories(scene: Scene, num_trajectories: int = 25,
     """Random joint-space trajectories -> link OBBs (paper Table III scale:
     num_trajectories * waypoints * 7 links OBBs)."""
     rs = np.random.RandomState(seed)
-    lo = np.asarray([-2.8, -1.7, -2.8, -3.0, -2.8, 0.0, -2.8], np.float32)
-    hi = np.asarray([2.8, 1.7, 2.8, -0.1, 2.8, 3.7, 2.8], np.float32)
+    lo, hi = PANDA_JOINT_LO, PANDA_JOINT_HI
     all_obbs: List[OBBs] = []
     for _ in range(num_trajectories):
         q0 = rs.uniform(lo, hi).astype(np.float32)

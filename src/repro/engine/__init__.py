@@ -1,0 +1,24 @@
+"""Collision engine: query-plan lowering + mode-dispatching executor.
+
+``plan`` lowers every front-end batch shape (single set, (B, M) batch,
+ragged multi-scene, trajectory, swept edge) to one canonical flat pool
+with scene / owner / payload lanes; ``executor`` owns mode dispatch, the
+traversal cache, capacity escalation, and counter assembly for every plan
+alike.  ``repro.core.wavefront`` re-exports this package's public names
+for compatibility.
+"""
+from repro.engine.executor import (CSR_MODES, DEVICE_MODES, MODES,
+                                   CollisionEngine, EngineConfig,
+                                   frontier_capacity_bound,
+                                   query_batched_scenes,
+                                   traversal_cache_info)
+from repro.engine.plan import (PAYLOAD_INF, QueryPlan, WORKLOADS, plan_batch,
+                               plan_edges, plan_queries, plan_scenes,
+                               plan_trajectory)
+
+__all__ = [
+    "CSR_MODES", "CollisionEngine", "DEVICE_MODES", "EngineConfig", "MODES",
+    "PAYLOAD_INF", "QueryPlan", "WORKLOADS", "frontier_capacity_bound",
+    "plan_batch", "plan_edges", "plan_queries", "plan_scenes",
+    "plan_trajectory", "query_batched_scenes", "traversal_cache_info",
+]

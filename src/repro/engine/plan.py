@@ -1,0 +1,185 @@
+"""Query planning: lower every front-end batch shape to one canonical pool.
+
+Every collision workload the repo serves — a single OBB set, a (B, M)
+trajectory batch, a ragged multi-scene batch, a waypoint trajectory, a
+swept-edge (CCD) batch — used to reach the traversal through its own
+hand-routed code path.  A :class:`QueryPlan` replaces those paths with one
+lowered form:
+
+* a **flat OBB pool** ``(Q, 3)/(Q, 3)/(Q, 3, 3)`` — one slot per query, no
+  leading batch axes anywhere downstream;
+* an optional **scene lane** ``scene_of_query`` (Q,) mapping each slot to
+  its octree for multi-scene batches (``None`` = single scene);
+* an optional **owner lane** ``owner_of_query`` (Q,) mapping slots to
+  *verdict groups*: a terminal hit decides the whole group, and the group's
+  remaining frontier pairs are compacted out exactly like a decided
+  waypoint's (``None`` = every slot is its own group, the boolean case);
+* an optional **payload lane** ``payload`` (Q,) int32: a group's verdict is
+  the *minimum* payload that hit (``PAYLOAD_INF`` if none) instead of a
+  boolean, which is what gives swept edges their first-colliding
+  sub-interval — a waypoint is just the ``payload == 0`` special case;
+* an **un-flattening recipe** (``out_shape`` + ``reduce_last``) that maps
+  the flat group verdicts back to the front-end's native shape.
+
+Plans are data, not behavior: :mod:`repro.engine.executor` owns mode
+dispatch, the traversal cache, capacity escalation, and counter assembly
+for every plan alike.  Lowering is pure reshaping/indexing — the property
+tests assert the pool round-trips bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import NUM_LINKS, OBBs, arm_link_obbs
+from repro.core.sact import PAYLOAD_INF
+
+#: Front-end workloads a plan can carry; DESIGN.md §2's workload table and
+#: the README are drift-guarded against this tuple (tests/test_docs_modes).
+WORKLOADS = ("queries", "batch", "scenes", "trajectory", "edges")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One lowered collision query batch (see module docstring)."""
+
+    kind: str                 # workload tag, one of WORKLOADS
+    obb_c: jax.Array          # (Q, 3) flat query OBB pool
+    obb_h: jax.Array          # (Q, 3)
+    obb_r: jax.Array          # (Q, 3, 3)
+    out_shape: Tuple[int, ...]            # group verdicts reshape to this
+    num_scenes: int = 1
+    scene_of_query: Optional[jax.Array] = None   # (Q,) int32, None = scene 0
+    owner_of_query: Optional[jax.Array] = None   # (Q,) int32, None = identity
+    num_groups: Optional[int] = None             # verdict groups, None = Q
+    payload: Optional[jax.Array] = None          # (Q,) int32, None = zeros
+    reduce_last: bool = False  # any() over out_shape's last axis (trajectory)
+
+    def __post_init__(self):
+        if self.kind not in WORKLOADS:
+            raise ValueError(
+                f"unknown workload {self.kind!r}; allowed: "
+                f"{', '.join(WORKLOADS)}")
+        if math.prod(self.out_shape) != self.groups:
+            raise ValueError(
+                f"out_shape {self.out_shape} does not hold {self.groups} "
+                f"verdict groups")
+
+    @property
+    def num_queries(self) -> int:
+        return self.obb_c.shape[0]
+
+    @property
+    def groups(self) -> int:
+        return self.num_groups if self.num_groups is not None \
+            else self.num_queries
+
+    @property
+    def grouped(self) -> bool:
+        """True when the plan carries owner or payload lanes: the traversal
+        keeps an int32 ``best`` per group instead of a boolean per query."""
+        return self.owner_of_query is not None or self.payload is not None
+
+    @property
+    def obbs(self) -> OBBs:
+        return OBBs(center=self.obb_c, half=self.obb_h, rot=self.obb_r)
+
+    def unflatten(self, flat) -> np.ndarray:
+        """Map flat group verdicts back to the front-end's native shape.
+
+        ``flat`` is (G,) — bool for boolean plans, int32 ``best`` payloads
+        for grouped plans (``PAYLOAD_INF`` = group never hit).
+        """
+        out = np.asarray(flat).reshape(self.out_shape)
+        if self.reduce_last:
+            out = out.any(axis=-1)
+        return out
+
+
+def _flat_obbs(obbs: OBBs) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return (jnp.reshape(obbs.center, (-1, 3)),
+            jnp.reshape(obbs.half, (-1, 3)),
+            jnp.reshape(obbs.rot, (-1, 3, 3)))
+
+
+def plan_queries(obbs: OBBs) -> QueryPlan:
+    """Single flat query set: (M,) OBBs against one scene."""
+    assert obbs.center.ndim == 2, "plan_queries wants flat (M, 3) fields"
+    return QueryPlan(kind="queries", obb_c=obbs.center, obb_h=obbs.half,
+                     obb_r=obbs.rot, out_shape=(obbs.n,))
+
+
+def plan_batch(obbs: OBBs) -> QueryPlan:
+    """(B, M) query sets against one scene, lowered to one flat pool.
+
+    Every query keeps its own verdict slot and early exit; the batch
+    structure survives only in the un-flattening recipe, so the executor
+    runs one traversal over B * M slots instead of vmapping B loops.
+    """
+    assert obbs.center.ndim == 3, "plan_batch wants (B, M, 3) fields"
+    B, M = obbs.center.shape[:2]
+    c, h, r = _flat_obbs(obbs)
+    return QueryPlan(kind="batch", obb_c=c, obb_h=h, obb_r=r,
+                     out_shape=(B, M))
+
+
+def plan_scenes(obbs: OBBs) -> QueryPlan:
+    """S scenes x (M,) queries each: flat pool plus the scene lane."""
+    assert obbs.center.ndim == 3, "plan_scenes wants (S, M, 3) fields"
+    S, M = obbs.center.shape[:2]
+    c, h, r = _flat_obbs(obbs)
+    soq = jnp.repeat(jnp.arange(S, dtype=jnp.int32), M)
+    return QueryPlan(kind="scenes", obb_c=c, obb_h=h, obb_r=r,
+                     out_shape=(S, M), num_scenes=S, scene_of_query=soq)
+
+
+def plan_trajectory(waypoints: jax.Array, base_pos=None) -> QueryPlan:
+    """Joint-space waypoints (..., 7) -> link-OBB pool with an any-link
+    reduction: FK emits ``NUM_LINKS`` query slots per waypoint, and the
+    un-flattening recipe ORs them back into per-waypoint flags.  Host and
+    device engines consume this same plan — the lowering IS the front-end.
+    """
+    waypoints = jnp.asarray(waypoints, jnp.float32)
+    batch_shape = waypoints.shape[:-1]
+    obbs = arm_link_obbs(waypoints, base_pos=base_pos)   # flat (prod*L,)
+    return QueryPlan(kind="trajectory", obb_c=obbs.center, obb_h=obbs.half,
+                     obb_r=obbs.rot,
+                     out_shape=tuple(batch_shape) + (NUM_LINKS,),
+                     reduce_last=True)
+
+
+def plan_edges(obbs: OBBs, owner: np.ndarray, num_groups: int,
+               payload: Optional[np.ndarray] = None) -> QueryPlan:
+    """Swept-edge pool: flat swept OBBs with owner (+ optional payload) lanes.
+
+    ``owner`` groups the slots that decide together (a segment's links, or
+    every surviving segment of one edge); ``payload`` carries each slot's
+    sub-interval rank for first-hit queries.  Owner ids must be compact —
+    every value in ``[0, num_groups)`` with ``num_groups <= len(owner)`` —
+    so the executor can compute grouped verdicts in a pool-sized buffer
+    without making the group count a compile-time constant.  Built by
+    :func:`repro.core.sweep.sweep_edges`.
+    """
+    assert obbs.center.ndim == 2, "plan_edges wants a flat pool"
+    own_np = np.asarray(owner)
+    if num_groups > obbs.n or (own_np.size and (
+            int(own_np.min()) < 0 or int(own_np.max()) >= num_groups)):
+        # Non-compact ids would scatter hits into the sliced-off tail of
+        # the executor's Q-sized verdict buffer — a silently lost verdict.
+        raise ValueError(
+            f"owner ids must be compact in [0, {num_groups}) with "
+            f"num_groups <= {obbs.n} query slots")
+    own = jnp.asarray(owner, jnp.int32)
+    pay = None if payload is None else jnp.asarray(payload, jnp.int32)
+    return QueryPlan(kind="edges", obb_c=obbs.center, obb_h=obbs.half,
+                     obb_r=obbs.rot, out_shape=(num_groups,),
+                     owner_of_query=own, num_groups=num_groups, payload=pay)
+
+
+__all__ = ["PAYLOAD_INF", "QueryPlan", "WORKLOADS", "plan_batch",
+           "plan_edges", "plan_queries", "plan_scenes", "plan_trajectory"]

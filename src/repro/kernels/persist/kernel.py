@@ -52,6 +52,15 @@ Per-query HBM traffic collapses to: seed pair in, one verdict word out,
 plus spill traffic — the bytes model of
 :data:`repro.core.counters.BYTES_PERSIST_QUERY`.
 
+The frontier carries a **payload lane** (:mod:`repro.engine.plan`): each
+query's int32 payload rides its pairs, a terminal hit folds it into the
+per-query ``best`` with a min (the verdict word), and a pair stays live
+only while its payload could still beat its query's best.  All-zero
+payloads reproduce the boolean engine bit-for-bit.  Cross-slot owner
+lanes (per-EDGE first hit across a swept edge's segments) are served by
+the reference arm: queries would no longer own their verdict groups
+tile-exclusively — tiling by owner group is the follow-up (DESIGN.md §3).
+
 The node metadata / OBB tables are held as resident VMEM blocks, which
 bounds scene size on real hardware (~VMEM/16 B nodes); scaling past that
 needs HBM-space DMA of metadata rows, noted in DESIGN.md §3.  On the CPU
@@ -67,7 +76,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.counters import NUM_EXIT_CODES
 from repro.core.octree import jnp_morton_decode
-from repro.core.sact import axis_tests_from_exit
+from repro.core.sact import PAYLOAD_INF, axis_tests_from_exit
 from repro.kernels.persist.ref import csr_child_slots
 # _EPS shared with every SACT arm: the bitwise identity across engines
 # depends on all of them using the same epsilon and op order.
@@ -79,10 +88,10 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
-                   hist_ref, scalars_ref, ring_ref, fq_scr, fn_scr, *,
-                   num_queries: int, bq: int, fcap: int, depth: int,
-                   n_max: int, ring_cap: int, use_spheres: bool):
+def persist_kernel(scal_ref, obb_ref, meta_ref, payload_ref, collide_ref,
+                   perlevel_ref, hist_ref, scalars_ref, ring_ref, fq_scr,
+                   fn_scr, *, num_queries: int, bq: int, fcap: int,
+                   depth: int, n_max: int, ring_cap: int, use_spheres: bool):
     t = pl.program_id(0)
     L = depth + 1
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, fcap), 1).reshape((fcap,))
@@ -92,6 +101,7 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
     scal = scal_ref[...]                       # [scene_lo(3), cells(L)]
     obb_tab = obb_ref[...]                     # (m_pad, 15) resident
     meta_flat = meta_ref[...].reshape(L * n_max, 4)
+    pay_tile = payload_ref[...]                # (bq,) payload lane per query
     m_pad = obb_tab.shape[0]
     iota_q = jax.lax.broadcasted_iota(jnp.int32, (1, bq), 1).reshape((bq,))
     iota_hist = jax.lax.broadcasted_iota(
@@ -102,7 +112,7 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
     fn_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
 
     def level_body(level, carry):
-        (n_live, collide_vec, per_level, hist, leaf, axis_exec, sphere,
+        (n_live, best_vec, per_level, hist, leaf, axis_exec, sphere,
          overflow, spilled, cursor, ring) = carry
         slot = jax.lax.rem(level, 2)
         q = jnp.where(slot == 0, fq_scr[0, :], fq_scr[1, :])
@@ -142,11 +152,19 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
         overlap = collide_l & valid
         term_hit = overlap & is_term
 
-        # ---- per-query collide, tile-local (queries never cross tiles)
+        # ---- per-query payload-lane best, tile-local (queries never
+        # cross tiles): a terminal hit folds the lane's payload in with a
+        # min — the one-hot re-derivation of sact.payload_min_update —
+        # and a lane stays live only while its payload could still beat
+        # its query's best (boolean early exit == all-zero payloads).
         q_onehot = (q - q_base)[:, None] == iota_q[None, :]       # (fcap, bq)
-        collide_vec = collide_vec | jnp.any(
-            term_hit[:, None] & q_onehot, axis=0)
-        decided = jnp.any(q_onehot & collide_vec[None, :], axis=1)
+        inf = jnp.int32(PAYLOAD_INF)
+        pay_lane = jnp.sum(jnp.where(q_onehot, pay_tile[None, :], 0), axis=1)
+        best_vec = jnp.minimum(best_vec, jnp.min(
+            jnp.where(term_hit[:, None] & q_onehot, pay_lane[:, None], inf),
+            axis=0))
+        best_lane = jnp.min(jnp.where(q_onehot, best_vec[None, :], inf),
+                            axis=1)
 
         # ---- work accounting (formulas of the fused arm, bitwise) -----
         n_valid = jnp.sum(valid.astype(jnp.int32))
@@ -163,7 +181,7 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
                       & (term_valid[:, None] != 0), 1, 0), axis=0)
 
         # ---- in-register CSR expansion + compaction -------------------
-        expand = overlap & ~is_term & ~decided
+        expand = overlap & ~is_term & (pay_lane < best_lane)
         occupied, offs = csr_child_slots(child_mask)
         n_child = jnp.where(expand,
                             jax.lax.population_count(child_mask), 0)
@@ -197,19 +215,20 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, collide_ref, perlevel_ref,
         fq_scr[1, :] = jnp.where(nxt == 1, q_next, fq_scr[1, :])
         fn_scr[0, :] = jnp.where(nxt == 0, i_next, fn_scr[0, :])
         fn_scr[1, :] = jnp.where(nxt == 1, i_next, fn_scr[1, :])
-        return (jnp.minimum(n_new, fcap), collide_vec, per_level, hist,
+        return (jnp.minimum(n_new, fcap), best_vec, per_level, hist,
                 leaf, axis_exec, sphere, overflow, spilled, cursor, ring)
 
-    carry0 = (jnp.minimum(n_q, fcap), jnp.zeros((bq,), jnp.bool_),
+    carry0 = (jnp.minimum(n_q, fcap),
+              jnp.full((bq,), PAYLOAD_INF, jnp.int32),
               jnp.zeros((L,), jnp.int32),
               jnp.zeros((NUM_EXIT_CODES,), jnp.int32),
               jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
               jnp.int32(0), jnp.int32(0),
               jnp.zeros((ring_cap, 2), jnp.int32))
-    (_, collide_vec, per_level, hist, leaf, axis_exec, sphere, overflow,
+    (_, best_vec, per_level, hist, leaf, axis_exec, sphere, overflow,
      spilled, _, ring) = jax.lax.fori_loop(0, L, level_body, carry0)
 
-    collide_ref[...] = collide_vec.astype(jnp.int32).reshape(1, bq)
+    collide_ref[...] = best_vec.reshape(1, bq)
     perlevel_ref[...] = per_level.reshape(1, L)
     hist_ref[...] = hist.reshape(1, NUM_EXIT_CODES)
     nodes = jnp.sum(per_level)
@@ -226,10 +245,12 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
 
     Inputs: scal (3 + depth+1,) f32 SMEM [scene_lo xyz, per-level cells];
     obb table (m_pad, 15) f32; node_meta (depth+1, n_max, 4) int32 — both
-    resident blocks.  Outputs per query tile: collide words (bq,), valid
-    counts per level, exit histogram, packed work scalars
-    [nodes, leaf, axis_exec, axis_dec, sphere, overflow, spilled, 0], and
-    the spill ring's (query, node) pairs.
+    resident blocks; payload (num_tiles * bq,) int32 per-query payload
+    lane (all zeros for boolean plans).  Outputs per query tile: ``best``
+    payload words (bq,) int32 (``PAYLOAD_INF`` = query never hit; 0 = a
+    boolean hit), valid counts per level, exit histogram, packed work
+    scalars [nodes, leaf, axis_exec, axis_dec, sphere, overflow, spilled,
+    0], and the spill ring's (query, node) pairs.
     """
     if pltpu is None:  # pragma: no cover - exercised only sans TPU extra
         raise RuntimeError("pallas TPU extension unavailable")
@@ -245,6 +266,7 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
             pl.BlockSpec(memory_space=pltpu.SMEM),            # scal
             pl.BlockSpec((m_pad, 15), lambda t: (0, 0)),      # OBB table
             pl.BlockSpec((L, n_max, 4), lambda t: (0, 0, 0)),  # node meta
+            pl.BlockSpec((bq,), lambda t: (t,)),              # payload lane
         ],
         out_specs=[
             pl.BlockSpec((1, bq), lambda t: (t, 0)),

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.octree import MAX_DEPTH, DeviceOctree, MultiSceneOctree
+from repro.core.sact import PAYLOAD_INF
 from repro.kernels.persist.ref import traverse_whole_ref
 from repro.kernels.sact.ops import pack_obbs
 
@@ -33,7 +34,8 @@ def _use_pallas_default() -> bool:
 
 def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
                   use_spheres: bool, bq: int, ring_cap: int,
-                  interpret: bool) -> Tuple[jax.Array, dict]:
+                  interpret: bool, payload=None,
+                  grouped: bool = False) -> Tuple[jax.Array, dict]:
     from repro.kernels.persist.kernel import make_persist_call
 
     M = obb_c.shape[0]
@@ -43,23 +45,30 @@ def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     obb = pack_obbs(obb_c, obb_h, obb_r)
     scal = jnp.concatenate([jnp.asarray(dev.scene_lo, jnp.float32),
                             jnp.asarray(dev.cell_sizes, jnp.float32)])
+    pay = (jnp.zeros((M,), jnp.int32) if payload is None
+           else payload.astype(jnp.int32))
+    pay = jnp.pad(pay, (0, num_tiles * bq - M))
     call = make_persist_call(M, num_tiles, bq, capacity, dev.depth, n_max,
                              obb.shape[0], ring_cap, use_spheres, interpret)
-    words, per_level, hist, scalars, _ring = call(scal, obb, dev.node_meta)
-    collide = (words.reshape(-1)[:M] != 0)
+    words, per_level, hist, scalars, _ring = call(scal, obb, dev.node_meta,
+                                                  pay)
+    best = words.reshape(-1)[:M]
+    verdict = best if grouped else best != PAYLOAD_INF
     tot = jnp.sum(scalars, axis=0)
     per = jnp.zeros((MAX_DEPTH + 1,), jnp.int32).at[:L].set(
         jnp.sum(per_level, axis=0))
     st = dict(nodes=tot[0], leaf=tot[1], axis_exec=tot[2], axis_dec=tot[3],
               sphere=tot[4], overflow=tot[5], per_level=per,
               exit_hist=jnp.sum(hist, axis=0))
-    return collide, st
+    return verdict, st
 
 
 def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                    use_spheres: bool, use_pallas: Optional[bool] = None,
                    interpret: Optional[bool] = None,
                    scene_of_query: Optional[jax.Array] = None,
+                   owner_of_query: Optional[jax.Array] = None,
+                   payload: Optional[jax.Array] = None,
                    bq: int = 128, ring_cap: int = 256, w_min: int = 128
                    ) -> Tuple[jax.Array, dict]:
     """Whole multi-level traversal for one flat query set.
@@ -69,21 +78,33 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     flat query to its scene.  Composes under jit; returns
     ``(collide (Q,) bool, stats dict)`` bitwise-identical to the per-level
     fused arm.
+
+    Payload lanes (:mod:`repro.engine.plan`): with owner / payload lanes
+    the verdict is the (Q,) int32 ``best`` payload per verdict group
+    (compact owner ids; cells past the group count unused).  The
+    megakernel carries the payload lane in its VMEM frontier for
+    identity-owner plans (``owner_of_query is None`` — per-slot first
+    hit); plans with a cross-slot owner lane are served by the reference
+    arm, like the ragged multi-scene frontier, because a tile's queries
+    would no longer own their verdict groups exclusively (DESIGN.md §3).
     """
     ragged = isinstance(dev, MultiSceneOctree) or scene_of_query is not None
     assert not (isinstance(dev, MultiSceneOctree)
                 and scene_of_query is None), \
         "a MultiSceneOctree needs scene_of_query (Q,) to map queries to scenes"
+    kernel_ok = not ragged and owner_of_query is None
     if use_pallas is None:
-        use_pallas = _use_pallas_default() and not ragged
+        use_pallas = _use_pallas_default() and kernel_ok
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if use_pallas and not ragged:
+    if use_pallas and kernel_ok:
         return _kernel_whole(obb_c, obb_h, obb_r, dev, capacity,
-                             use_spheres, bq, ring_cap, interpret)
+                             use_spheres, bq, ring_cap, interpret,
+                             payload=payload, grouped=payload is not None)
     # DeviceOctree and MultiSceneOctree expose the same three table fields;
     # scene_of_query switches the ref between scalar and per-pair gathers.
     return traverse_whole_ref(obb_c, obb_h, obb_r, dev.node_meta,
                               dev.cell_sizes, dev.scene_lo, dev.depth,
                               capacity, use_spheres,
-                              scene_of_query=scene_of_query, w_min=w_min)
+                              scene_of_query=scene_of_query, w_min=w_min,
+                              owner_of_query=owner_of_query, payload=payload)

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from repro.core import sact as sact_mod
 from repro.core.counters import NUM_EXIT_CODES
 from repro.core.octree import MAX_DEPTH, node_centers_from_codes
-from repro.core.sact import NUM_AXES
+from repro.core.sact import NUM_AXES, PAYLOAD_INF, payload_min_update
 
 
 def frontier_widths(capacity: int, w_min: int = 128) -> Tuple[int, ...]:
@@ -87,7 +87,7 @@ def _empty_stats():
 def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                        depth: int, capacity: int, use_spheres: bool,
                        scene_of_query: Optional[jax.Array] = None,
-                       w_min: int = 128):
+                       w_min: int = 128, owner_of_query=None, payload=None):
     """Whole-traversal reference arm; see module docstring for the contract.
 
     Args:
@@ -98,19 +98,28 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
       scene_lo: (3,) f32, or (S, 3) when ragged.
       scene_of_query: (Q,) int32 scene id per flat query, or None for a
         single scene.
+      owner_of_query / payload: optional verdict-group and payload lanes
+        (:mod:`repro.engine.plan`): the verdict becomes the (Q,) int32
+        per-group ``best`` payload that hit (``PAYLOAD_INF`` = never;
+        owner ids are compact so cells past the group count are unused),
+        and a pair expands only while its payload could still beat its
+        group's best — boolean early exit is the identity-owner,
+        zero-payload special case.
     Returns:
-      (collide (Q,) bool, stats dict) — the ``_traverse_fused`` contract.
+      (verdict, stats dict) — the ``_traverse_fused`` contract: (Q,) bool
+      collide flags, or the (Q,) ``best`` array for grouped calls.
     """
     Q = obb_c.shape[0]
     n_max = node_meta.shape[-2]
     ragged = scene_of_query is not None
+    grouped = owner_of_query is not None or payload is not None
     widths = frontier_widths(capacity, w_min)
     widths_arr = jnp.asarray(widths, jnp.int32)
 
     def make_branch(w: int):
         lane_w = jnp.arange(w, dtype=jnp.int32)
 
-        def branch(level, n_live, q_idx, node_idx, collide, st):
+        def branch(level, n_live, q_idx, node_idx, verdict, st):
             q = q_idx[:w]
             idx = node_idx[:w]
             valid = lane_w < n_live
@@ -139,14 +148,22 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
             is_term = jnp.where(is_leaf, True, full_l)
             overlap = res.collide & valid
             term_hit = overlap & is_term
-            collide = collide.at[q].max(term_hit)
+            if grouped:
+                pay = (jnp.zeros(q.shape, jnp.int32) if payload is None
+                       else payload[q])
+                own = q if owner_of_query is None else owner_of_query[q]
+                verdict = payload_min_update(verdict, own, pay, term_hit)
+                undecided = pay < verdict[own]
+            else:
+                verdict = verdict.at[q].max(term_hit)
+                undecided = ~verdict[q]
 
             # ---- work accounting (formulas of the fused arm, bitwise) ----
             n_valid = jnp.sum(valid.astype(jnp.int32))
             term_valid = (valid & is_term).astype(jnp.int32)
 
             # ---- in-register CSR expansion (see module docstring) --------
-            expand = overlap & ~is_term & ~collide[q]
+            expand = overlap & ~is_term & undecided
             occupied, offs = csr_child_slots(child_mask)
             n_child = jnp.where(expand,
                                 jax.lax.population_count(child_mask), 0)
@@ -170,7 +187,7 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                 per_level=st["per_level"].at[level].set(n_valid),
                 exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid))
             return (level + 1, jnp.minimum(n_new, capacity), q_next,
-                    idx_next, collide, st)
+                    idx_next, verdict, st)
         return branch
 
     branches = [make_branch(w) for w in widths]
@@ -192,7 +209,9 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                           0).astype(jnp.int32)
     else:
         node0 = jnp.zeros((capacity,), jnp.int32)
+    verdict0 = (jnp.full((Q,), PAYLOAD_INF, jnp.int32) if grouped
+                else jnp.zeros((Q,), bool))
     carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(Q), jnp.int32(capacity)),
-              q0, node0, jnp.zeros((Q,), bool), _empty_stats())
+              q0, node0, verdict0, _empty_stats())
     out = jax.lax.while_loop(cond, body, carry0)
     return out[4], out[5]

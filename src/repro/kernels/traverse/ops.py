@@ -35,7 +35,8 @@ import jax.numpy as jnp
 
 from repro.core.octree import DeviceOctree, node_centers_from_codes
 from repro.core.sact import (SactResult, axis_tests_from_exit,
-                             mask_frontier_result, sact_frontier_staged)
+                             mask_frontier_result, payload_min_update,
+                             sact_frontier_staged)
 from repro.kernels.compact.ops import compact_pairs
 from repro.kernels.persist.ref import csr_child_slots
 from repro.kernels.sact.ops import pack_obbs
@@ -68,19 +69,29 @@ def _test_pallas(obb_c, obb_h, obb_r, q_idx, codes, full_l, cell, scene_lo,
 
 
 def traverse_step(obb_c, obb_h, obb_r, dev: DeviceOctree, level, n_live,
-                  q_idx, node_idx, collide, *, use_spheres: bool,
+                  q_idx, node_idx, verdict, *, use_spheres: bool,
                   use_pallas: Optional[bool] = None,
                   use_pallas_compact: Optional[bool] = None,
-                  interpret: Optional[bool] = None, bn: int = 256
+                  interpret: Optional[bool] = None, bn: int = 256,
+                  owner=None, payload=None
                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                              dict]:
     """One fused wavefront level for a single scene / query set.
 
     Pure function of device arrays (level / n_live may be traced); composes
     under jit, vmap, and ``lax.while_loop``.  Returns
-    ``(n_next, q_next, idx_next, collide, info)`` where ``info`` carries the
+    ``(n_next, q_next, idx_next, verdict, info)`` where ``info`` carries the
     per-pair quantities the work model accounts (valid / is_term /
     SactResult / codes / n_new).
+
+    ``verdict`` is the (M,) bool collide array, or — when the plan carries
+    owner / payload lanes (:mod:`repro.engine.plan`) — the (G,) int32
+    per-group ``best`` array: a terminal hit folds the pair's payload in
+    with a min, and a pair expands only while its payload could still beat
+    its group's best, which compacts first-hit-decided groups out of the
+    frontier exactly like decided waypoint lanes.  The Pallas verdict
+    kernel is unchanged either way: it emits per-pair packed words, and the
+    payload fold happens in this glue.
     """
     if use_pallas is None:
         use_pallas = _use_pallas_default()
@@ -125,13 +136,21 @@ def traverse_step(obb_c, obb_h, obb_r, dev: DeviceOctree, level, n_live,
 
     overlap = res.collide & valid
     term_hit = overlap & is_term
-    collide = collide.at[q_idx].max(term_hit)
+    if owner is not None or payload is not None:
+        pay = (jnp.zeros(q_idx.shape, jnp.int32) if payload is None
+               else payload[q_idx])
+        own = q_idx if owner is None else owner[q_idx]
+        verdict = payload_min_update(verdict, own, pay, term_hit)
+        undecided = pay < verdict[own]
+    else:
+        verdict = verdict.at[q_idx].max(term_hit)
+        undecided = ~verdict[q_idx]
 
     # ---- O(1) CSR expansion + on-device stream compaction -------------
     occupied, offs = csr_child_slots(child_mask)                   # (cap, 8)
     cand_idx = child_start[:, None] + offs
-    # Early exit: decided queries retire their whole wavefront share.
-    expand = overlap & ~is_term & ~collide[q_idx]
+    # Early exit: decided queries/groups retire their whole wavefront share.
+    expand = overlap & ~is_term & undecided
     child_live = (expand[:, None] & occupied).reshape(-1)          # (cap*8,)
     n_new = jnp.sum(child_live.astype(jnp.int32))
     cnt, q_next, idx_next = compact_pairs(
@@ -141,4 +160,4 @@ def traverse_step(obb_c, obb_h, obb_r, dev: DeviceOctree, level, n_live,
     idx_next = idx_next.astype(jnp.int32)
     info = dict(valid=valid, is_term=is_term, res=res, codes=codes,
                 n_new=n_new)
-    return cnt, q_next, idx_next, collide, info
+    return cnt, q_next, idx_next, verdict, info

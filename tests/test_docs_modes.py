@@ -1,10 +1,12 @@
-"""Docs drift guard: the engine-mode tables in DESIGN.md §2 and README.md
-duplicate each other by design (one is the architecture doc, one the
-landing page); this test keeps both in lockstep with ``MODES``."""
+"""Docs drift guard: the engine-mode and workload tables in DESIGN.md §2
+and README.md duplicate each other by design (one is the architecture doc,
+one the landing page); these tests keep both in lockstep with ``MODES``
+and the plan layer's ``WORKLOADS``."""
 import os
 import re
 
 from repro.core.wavefront import MODES
+from repro.engine.plan import WORKLOADS
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -30,3 +32,15 @@ def test_readme_mode_table_lists_every_mode():
     cells = _mode_table_cells("README.md")
     for mode in MODES:
         assert mode in cells, f"README engine-mode table is missing `{mode}`"
+
+
+def test_design_workload_table_lists_every_plan_kind():
+    cells = _mode_table_cells("DESIGN.md")
+    for kind in WORKLOADS:
+        assert kind in cells, f"DESIGN.md §2 workload table misses `{kind}`"
+
+
+def test_readme_workload_table_lists_every_plan_kind():
+    cells = _mode_table_cells("README.md")
+    for kind in WORKLOADS:
+        assert kind in cells, f"README workload table is missing `{kind}`"
