@@ -38,7 +38,8 @@ from repro.core.fps import (farthest_point_sampling, random_sampling,
                             sampling_spread)
 from repro.core.geometry import OBBs
 from repro.core.octree import build_octree
-from repro.core.wavefront import CollisionEngine, EngineConfig
+from repro.core.wavefront import (CollisionEngine, EngineConfig,
+                                  traversal_cache_info)
 from repro.data.robotics import (ENVIRONMENTS, make_mpaccel_scenario,
                                  make_scene, scene_trajectories)
 
@@ -53,7 +54,7 @@ SMOKE_SCALE = {"points": 4096, "trajs": 2, "wps": 6, "depth": 4,
                "mpaccel_scenarios": 1, "mpaccel_points": 2048,
                "edges": 8, "edge_res": 16}
 SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched", "ragged",
-                 "fig_edges")
+                 "fig_edges", "fig_bigscene")
 
 _scene_cache = {}
 
@@ -95,9 +96,14 @@ def fig11_collision_speedup(S):
             if mode == "naive":
                 base_cycles = cycles
             speed = base_cycles / cycles
+            # escalations: replays of the FIRST (cold) query; the timed
+            # second run starts at the memoized clean capacity, so a
+            # nonzero repeat count here means the memo regressed.
             emit(f"fig11/{env}/{mode}", c2.wall_time_s * 1e6,
                  f"model_speedup_vs_cuda={speed:.1f};collisions="
-                 f"{int(ref.sum())};axis_exec={c2.axis_tests_executed}")
+                 f"{int(ref.sum())};axis_exec={c2.axis_tests_executed};"
+                 f"cold_escalations={c.escalations};"
+                 f"escalations={c2.escalations}")
             rows[(env, mode)] = (c2, cycles)
         # headline: RC_CR_CU vs rta_like (paper: 3.1x), vs naive (14.8x)
         full = rows[(env, "wavefront_fused")][1]
@@ -137,6 +143,14 @@ def fig11_collision_speedup(S):
          f"geomean_wall_speedup="
          f"{float(np.exp(np.mean(np.log(persist_speedups)))):.2f}x;"
          f"envs={len(persist_speedups)}")
+    # Retrace/replay observability: lru entries and per-key trace counts
+    # of the traversal jit cache after the whole fig11 sweep — growth here
+    # between runs means escalation replays or engine reconstructions
+    # started retracing (BENCH artifacts record the trajectory).
+    tc = traversal_cache_info()
+    emit("fig11/traversal_cache", 0.0,
+         f"entries={tc['entries']};hits={tc['hits']};"
+         f"misses={tc['misses']};traces={sum(tc['traces'].values())}")
 
 
 # ---------------------------------------------------------------------------
@@ -409,9 +423,9 @@ def batched_throughput(S):
     fused = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
     persist = CollisionEngine(tree, EngineConfig(mode="wavefront_persistent"))
     col_h, _ = host.query_batched(batch)          # warm + reference
-    col_d, _ = dev.query_batched(batch)           # compile
-    col_f, _ = fused.query_batched(batch)
-    col_p, _ = persist.query_batched(batch)
+    col_d, cd0 = dev.query_batched(batch)         # compile (cold counters)
+    col_f, cf0 = fused.query_batched(batch)
+    col_p, cp0 = persist.query_batched(batch)
     assert (col_d == col_h).all(), "batched verdict mismatch"
     assert (col_f == col_h).all(), "batched fused verdict mismatch"
     assert (col_p == col_h).all(), "batched persistent verdict mismatch"
@@ -432,17 +446,24 @@ def batched_throughput(S):
     emit("batched/engine=device_wavefront", t_d * 1e6,
          f"queries={n};qps={n/max(t_d, 1e-9):.0f};"
          f"speedup_vs_host={t_h/max(t_d, 1e-9):.1f}x;"
-         f"collisions={int(col_d.sum())}")
+         f"collisions={int(col_d.sum())};"
+         f"cold_escalations={cd0.escalations}")
     emit("batched/engine=device_fused", t_f * 1e6,
          f"queries={n};qps={n/max(t_f, 1e-9):.0f};"
          f"speedup_vs_host={t_h/max(t_f, 1e-9):.1f}x;"
          f"speedup_vs_unfused={t_d/max(t_f, 1e-9):.2f}x;"
-         f"collisions={int(col_f.sum())}")
+         f"collisions={int(col_f.sum())};"
+         f"cold_escalations={cf0.escalations}")
     emit("batched/engine=device_persistent", t_p * 1e6,
          f"queries={n};qps={n/max(t_p, 1e-9):.0f};"
          f"speedup_vs_host={t_h/max(t_p, 1e-9):.1f}x;"
          f"speedup_vs_fused={t_f/max(t_p, 1e-9):.2f}x;"
-         f"collisions={int(col_p.sum())}")
+         f"collisions={int(col_p.sum())};"
+         f"cold_escalations={cp0.escalations}")
+    tc = traversal_cache_info()
+    emit("batched/traversal_cache", 0.0,
+         f"entries={tc['entries']};hits={tc['hits']};"
+         f"misses={tc['misses']};traces={sum(tc['traces'].values())}")
 
 
 # ---------------------------------------------------------------------------
@@ -554,6 +575,63 @@ def fig_edges(S):
 
 
 # ---------------------------------------------------------------------------
+# fig_bigscene — scene-size sweep past the metadata residency cap: the
+# persistent megakernel switches to streamed HBM->VMEM metadata windows
+# (DESIGN.md §3) instead of falling back to the per-level fused arm, and
+# must hold its wall advantage there
+# ---------------------------------------------------------------------------
+
+def fig_bigscene(S):
+    from repro.core.geometry import random_obbs
+    from repro.kernels.persist.ops import meta_stream_bytes, meta_table_bytes
+    rs = np.random.RandomState(5)
+    depth = min(S["depth"] + 1, 8)
+    M = max(S["trajs"] * S["wps"], 32)
+    # Two uniform clouds: 1x sits at the residency limit (the budget is
+    # set to exactly its table size), 6x points lands >= 4x the limit in
+    # occupied nodes at this depth.
+    trees = {}
+    for tag, n_pts in (("small", S["points"]), ("big", 6 * S["points"])):
+        pts = rs.uniform(-1, 1, (n_pts, 3)).astype(np.float32)
+        trees[tag] = build_octree(pts, depth=depth,
+                                  scene_lo=np.full(3, -1.0, np.float32),
+                                  scene_size=2.0)
+    table_bytes = {tag: meta_table_bytes(
+        depth, max(len(l.codes) for l in t.levels))
+        for tag, t in trees.items()}
+    budget = table_bytes["small"]
+    speedups = []
+    for tag, tree in trees.items():
+        obbs = random_obbs(jax.random.PRNGKey(11), M)
+        fused = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+        persist = CollisionEngine(tree, EngineConfig(
+            mode="wavefront_persistent", vmem_budget=budget))
+        col_f, _ = fused.query(obbs)                  # compile + reference
+        col_p, cp = persist.query(obbs)
+        assert (np.asarray(col_p) == np.asarray(col_f)).all(), tag
+        walls = time_group({"fused": lambda: fused.query(obbs),
+                            "persist": lambda: persist.query(obbs)},
+                           repeats=7)
+        speedups.append(walls["fused"] / max(walls["persist"], 1e-9))
+        emit(f"fig_bigscene/{tag}/fused", walls["fused"] * 1e6,
+             f"queries={M};depth={depth};"
+             f"table_bytes={table_bytes[tag]}")
+        n_max = max(len(l.codes) for l in tree.levels)
+        emit(f"fig_bigscene/{tag}/persistent", walls["persist"] * 1e6,
+             f"queries={M};layout={persist.meta_layout};"
+             f"meta_rows_streamed={cp.meta_rows_streamed};"
+             f"window_bytes={meta_stream_bytes(n_max)};"
+             f"overflow={cp.frontier_overflow};"
+             f"speedup_vs_fused={speedups[-1]:.2f}x")
+    emit("fig_bigscene/headline", 0.0,
+         f"geomean_speedup_vs_fused="
+         f"{float(np.exp(np.mean(np.log(speedups)))):.2f}x;"
+         f"bigscene_over_budget="
+         f"{table_bytes['big']/max(budget, 1):.1f}x;"
+         f"mode_stays=wavefront_persistent")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (reads the dry-run artifacts; §Roofline source of truth)
 # ---------------------------------------------------------------------------
 
@@ -596,6 +674,7 @@ BENCHES = {
     "batched": batched_throughput,
     "ragged": ragged_scenes,
     "fig_edges": fig_edges,
+    "fig_bigscene": fig_bigscene,
     "roofline": roofline_table,
 }
 

@@ -42,10 +42,18 @@ entire life, so HBM-resident frontier traffic collapses from
 plus spill traffic only when a tile's frontier overflows VMEM and pairs
 take the HBM spill ring (out + replay back in, 12 B each way):
   per spilled pair                                           = 24 B
-The node-metadata and OBB tables still stream HBM->VMEM once per *kernel*
-(not per level), amortized across every pair of every level — the
-closest TPU analogue of the paper's conditional returns never leaving the
-core.
+Under the RESIDENT metadata layout the node-metadata and OBB tables
+stream HBM->VMEM once per *kernel* (not per level), amortized across
+every pair of every level — the closest TPU analogue of the paper's
+conditional returns never leaving the core.  Under the STREAMED layout
+(scenes past the VMEM residency budget, DESIGN.md §3) the metadata table
+stays in HBM and each query tile double-buffers per-level row windows
+instead; that traffic is explicit, not amortized:
+  per fetched metadata row ([code, full, start, mask] int32) = 16 B
+``Counters.meta_rows_streamed`` counts the rows the window schedule
+fetched (level extents rounded up to whole DMA chunks, once per tile per
+level the tile's frontier visits; 0 under the resident layout), and
+``BYTES_META_STREAM`` prices them.
 
 Payload lanes (swept-edge / first-hit plans, see ``repro.engine.plan``):
 a grouped plan carries extra int32 lanes per query slot — the owner lane
@@ -68,6 +76,7 @@ BYTES_FUSED_TEST = 92
 BYTES_FUSED_STEP = 40
 BYTES_PERSIST_QUERY = 16
 BYTES_PERSIST_SPILL = 24
+BYTES_META_STREAM = 16
 BYTES_PAYLOAD_LANE = 4
 BYTES_SHADER_HANDOFF = 128
 NUM_EXIT_CODES = 18
@@ -90,6 +99,7 @@ class Counters:
     bytes_moved: int = 0
     frontier_overflow: int = 0          # entries dropped at capacity (should be 0)
     escalations: int = 0                # overflow replays before a clean run
+    meta_rows_streamed: int = 0         # HBM metadata rows DMA'd (streamed layout)
     wall_time_s: float = 0.0
 
     def merge_exit_codes(self, codes: np.ndarray, valid: np.ndarray) -> None:
@@ -115,6 +125,7 @@ class Counters:
         self.bytes_moved += other.bytes_moved
         self.frontier_overflow += other.frontier_overflow
         self.escalations += other.escalations
+        self.meta_rows_streamed += other.meta_rows_streamed
         self.exit_histogram += other.exit_histogram
         a, b = self.nodes_per_level, other.nodes_per_level
         self.nodes_per_level = [

@@ -37,6 +37,20 @@ from repro.core.geometry import AABBs
 
 MAX_DEPTH = 10  # 30 bits of Morton code
 PAD_CODE = np.uint32(0xFFFFFFFF)  # > any 30-bit Morton code; keeps rows sorted
+#: Row-alignment quantum of the level-major device tables.  Every padded
+#: level row (``DeviceOctree`` / ``MultiSceneOctree``) is a whole number of
+#: these rows, so the persistent megakernel's HBM->VMEM metadata windows
+#: (kernels/persist) can stream a level as back-to-back fixed-size DMA
+#: chunks without ever slicing past the table edge.  Occupied nodes sit at
+#: the FRONT of their level row (level-major layout), so a level's window
+#: is one contiguous gather of ``ceil(counts[l] / META_ROW_ALIGN)`` chunks.
+META_ROW_ALIGN = 128
+
+
+def align_rows(n: int) -> int:
+    """Round a level width up to the :data:`META_ROW_ALIGN` row quantum."""
+    return max(((int(n) + META_ROW_ALIGN - 1) // META_ROW_ALIGN)
+               * META_ROW_ALIGN, META_ROW_ALIGN)
 
 
 def _part1by2(x: np.ndarray) -> np.ndarray:
@@ -135,7 +149,8 @@ class Octree:
 class DeviceOctree:
     """Padded, device-resident view of the octree levels.
 
-    All rows are tail-padded to the widest level so a traced level index can
+    All rows are tail-padded to the widest level (rounded up to the
+    :data:`META_ROW_ALIGN` row quantum) so a traced level index can
     gather them inside ``jax.lax.while_loop`` / ``vmap``.  ``codes`` rows stay
     sorted because the pad value :data:`PAD_CODE` exceeds every valid code.
     Arrays may carry a leading scene axis when built by
@@ -171,8 +186,15 @@ class DeviceOctree:
 
 
 def device_octree(tree: Octree) -> DeviceOctree:
-    """Pad the ragged level lists of ``tree`` into rectangular device arrays."""
-    n_max = max(len(l.codes) for l in tree.levels)
+    """Pad the ragged level lists of ``tree`` into rectangular device arrays.
+
+    Rows are additionally padded to the :data:`META_ROW_ALIGN` quantum
+    (level-major row alignment): occupied nodes stay at the front of each
+    row, and the per-level row extents live in ``counts`` — together these
+    make the streamed metadata windows of the persistent megakernel
+    contiguous fixed-chunk gathers.
+    """
+    n_max = align_rows(max(len(l.codes) for l in tree.levels))
     L = tree.depth + 1
     codes = np.full((L, n_max), PAD_CODE, np.uint32)
     full = np.zeros((L, n_max), bool)
@@ -287,7 +309,7 @@ def concat_device_octrees(trees: List[Octree]) -> MultiSceneOctree:
     assert all(t.depth == depth for t in trees), "scene depths must match"
     L = depth + 1
     totals = [sum(len(t.levels[l].codes) for t in trees) for l in range(L)]
-    n_max = max(totals)
+    n_max = align_rows(max(totals))
     meta = np.zeros((L, n_max, 4), np.int32)
     meta[:, :, 0] = PAD_CODE.view(np.int32)
     for l in range(L):

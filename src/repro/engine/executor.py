@@ -48,9 +48,10 @@ import numpy as np
 
 from repro.core import sact as sact_mod
 from repro.core.counters import (BYTES_FUSED_STEP, BYTES_FUSED_TEST,
-                                 BYTES_PAYLOAD_LANE, BYTES_PERSIST_QUERY,
-                                 BYTES_PERSIST_SPILL, BYTES_SHADER_HANDOFF,
-                                 BYTES_UNFUSED_TEST, NUM_EXIT_CODES, Counters)
+                                 BYTES_META_STREAM, BYTES_PAYLOAD_LANE,
+                                 BYTES_PERSIST_QUERY, BYTES_PERSIST_SPILL,
+                                 BYTES_SHADER_HANDOFF, BYTES_UNFUSED_TEST,
+                                 NUM_EXIT_CODES, Counters)
 from repro.core.geometry import OBBs
 from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree,
                                concat_device_octrees, device_octree,
@@ -60,7 +61,8 @@ from repro.core.sact import (NUM_AXES, PAYLOAD_INF, SactResult,
                              payload_min_update)
 from repro.engine.plan import QueryPlan, plan_batch, plan_queries, plan_scenes
 from repro.kernels.compact.ops import compact_pairs
-from repro.kernels.persist.ops import traverse_whole
+from repro.kernels.persist.ops import (DEFAULT_VMEM_BUDGET,
+                                       choose_meta_layout, traverse_whole)
 from repro.kernels.traverse.ops import traverse_step
 
 MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
@@ -82,6 +84,12 @@ class EngineConfig:
     use_pallas_compact: Optional[bool] = None  # None = auto (TPU only)
     use_pallas_traverse: Optional[bool] = None  # fused step / persistent
     #                                            megakernel; None = auto
+    # Persistent-megakernel metadata residency (DESIGN.md §3): budget for
+    # the resident node_meta table, and an explicit layout override
+    # (None = residency estimator, True = force streamed windows,
+    # False = force the resident block).
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
+    stream_meta: Optional[bool] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -354,7 +362,7 @@ _TRACE_COUNTS: dict = {}
 
 @functools.lru_cache(maxsize=None)
 def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
-                  use_pallas, use_pallas_traverse):
+                  use_pallas, use_pallas_traverse, streamed: bool = False):
     """One jit-compiled traversal per (mode, batch kind, capacity, statics).
 
     The LRU gives every (mode, capacity, ...) configuration a *stable
@@ -362,9 +370,13 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
     overflow-escalation replays and across repeated ``CollisionEngine``
     constructions on same-shaped scenes — neither retraces.  See
     :func:`traversal_cache_info` for the observability hook tests use.
+
+    ``streamed`` is the persistent megakernel's metadata-residency layout
+    (the executor's estimator picks it per engine, so the choice is part
+    of this cache key like every other static).
     """
     key = (mode, batch, capacity, use_spheres, use_pallas,
-           use_pallas_traverse)
+           use_pallas_traverse, streamed)
 
     def base(c, h, r, d, soq=None, owner=None, payload=None):
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
@@ -376,7 +388,7 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
                                   use_spheres=use_spheres,
                                   use_pallas=use_pallas_traverse,
                                   scene_of_query=soq, owner_of_query=owner,
-                                  payload=payload)
+                                  payload=payload, streamed=streamed)
         if mode == "wavefront_fused":
             return _traverse_fused(c, h, r, d, capacity, use_spheres,
                                    use_pallas, use_pallas_traverse,
@@ -426,16 +438,20 @@ def _stats_to_counters(st, mode: str, replays: int = 0,
     c.nodes_per_level = [int(n) for n in per if n > 0]
     hist = np.asarray(st["exit_hist"], np.int64)
     c.exit_histogram += hist.reshape(-1, hist.shape[-1]).sum(axis=0)
+    if "meta_rows" in st:
+        c.meta_rows_streamed = tot("meta_rows")
     # Bytes models (see counters.py): per-level arms move the frontier
     # through HBM every level; the persistent megakernel only moves each
-    # query's seed in / verdict out.  Grouped plans pay one extra int32
-    # lane per frontier pair (per seed, for the persistent arm) for each
-    # lane they carry — owner and/or payload.
+    # query's seed in / verdict out, plus the streamed layout's metadata
+    # window rows.  Grouped plans pay one extra int32 lane per frontier
+    # pair (per seed, for the persistent arm) for each lane they carry —
+    # owner and/or payload.
     extra = BYTES_PAYLOAD_LANE * extra_lanes
     if mode == "wavefront_persistent":
         seeds = int(per[0]) if per.size else 0
         c.bytes_moved = (seeds * (BYTES_PERSIST_QUERY + extra)
-                         + c.frontier_overflow * BYTES_PERSIST_SPILL)
+                         + c.frontier_overflow * BYTES_PERSIST_SPILL
+                         + c.meta_rows_streamed * BYTES_META_STREAM)
     elif mode == "wavefront_fused":
         c.bytes_moved = c.nodes_traversed * (BYTES_FUSED_STEP + extra)
     else:
@@ -505,17 +521,41 @@ class CollisionEngine:
 
     def __init__(self, octree: Union[Octree, List[Octree]],
                  config: EngineConfig = EngineConfig()):
+        self.cfg = config
+        # Last clean frontier capacity per (query shape, scene signature):
+        # repeat queries start there instead of re-climbing the escalation
+        # ladder.  The scene node counts are part of every key so a
+        # rebind to a grown scene can never reuse a stale clean capacity
+        # (which could skip the ladder and silently overflow-spill).
+        self._cap_memo: dict = {}
+        self.rebind_octrees(octree)
+
+    def rebind_octrees(self, octree: Union[Octree, List[Octree]]) -> None:
+        """(Re)bind the engine to new scene(s), keeping config and caches.
+
+        Growing a scene between calls is a supported pattern (e.g. a
+        mapping robot accreting points): derived device state is rebuilt
+        lazily, and the clean-capacity memo — which survives the rebind —
+        is keyed on the scenes' node counts, so queries against the grown
+        scene re-enter the escalation ladder instead of inheriting the old
+        scene's (possibly too small, silently spilling) clean capacity.
+        """
         self.octrees = (list(octree) if isinstance(octree, (list, tuple))
                         else [octree])
         self.octree = self.octrees[0]
-        self.cfg = config
         self._scene_lo = jnp.asarray(self.octree.scene_lo)
         self._level_codes = [jnp.asarray(l.codes) for l in self.octree.levels]
         self._level_full = [jnp.asarray(l.full) for l in self.octree.levels]
         self._dev: Optional[DeviceOctree] = None
-        # Last clean frontier capacity per query shape: repeat queries start
-        # there instead of re-climbing the escalation ladder.
-        self._cap_memo: dict = {}
+        # Per-scene total node counts: the memo-key scene signature.
+        self._scene_sig = tuple(
+            sum(len(l.codes) for l in t.levels) for t in self.octrees)
+        # Every memo key ends with the scene signature; entries for
+        # superseded scenes can never be read again, so drop them — a
+        # long accreting-scene loop keeps the memo bounded by the query
+        # shapes of the CURRENT scene.
+        self._cap_memo = {k: v for k, v in self._cap_memo.items()
+                          if k[-1] == self._scene_sig}
 
     @property
     def device_tree(self) -> DeviceOctree:
@@ -523,6 +563,18 @@ class CollisionEngine:
         if self._dev is None:
             self._dev = device_octree(self.octree)
         return self._dev
+
+    @property
+    def meta_layout(self) -> str:
+        """Persistent-megakernel metadata residency for this engine's
+        scene: ``"resident"`` or ``"streamed"`` (DESIGN.md §3).  Driven by
+        the residency estimator against ``cfg.vmem_budget`` unless
+        ``cfg.stream_meta`` pins it; feeds the traversal cache key."""
+        if self.cfg.stream_meta is not None:
+            return "streamed" if self.cfg.stream_meta else "resident"
+        n_max = max(len(l.codes) for l in self.octree.levels)
+        return choose_meta_layout(self.octree.depth, n_max,
+                                  self.cfg.vmem_budget)
 
     def _capacity(self, num_queries: int) -> int:
         counts = [len(l.codes) for l in self.octree.levels]
@@ -577,17 +629,28 @@ class CollisionEngine:
         return plan.unflatten(value), counters
 
     # ------------------------------------------------------------------
-    def _run(self, capacity: int, batch: str = "single"):
+    def _run(self, capacity: int, batch: str = "single",
+             streamed: bool = False):
         """Cached jit-compiled traversal for this engine's config."""
         return _traversal_fn(self.cfg.mode, batch, capacity,
                              self.cfg.use_spheres,
                              self.cfg.use_pallas_compact,
-                             self.cfg.use_pallas_traverse)
+                             self.cfg.use_pallas_traverse, streamed)
 
     def _exec_device(self, plan: QueryPlan):
         cfg = self.cfg
         Q = plan.num_queries
         owner, payload = plan.owner_of_query, plan.payload
+        # Metadata residency is picked here, per (mode, statics) cache
+        # key, so paper-scale scenes run the persistent megakernel with
+        # streamed windows instead of needing a different mode.  The
+        # ragged multi-scene table and cross-slot owner (swept-edge)
+        # plans are ref-served with the table resident, so they neither
+        # stream nor model the window traffic (owner-group tiling and
+        # ragged streaming are the DESIGN.md §3 follow-ups).
+        streamed = (cfg.persistent and plan.num_scenes == 1
+                    and plan.owner_of_query is None
+                    and self.meta_layout == "streamed")
         if plan.num_scenes > 1 and cfg.mode in CSR_MODES:
             # Ragged flat frontier: one pool of (scene, query, CSR node)
             # triples over the concatenated multi-scene table.
@@ -598,7 +661,7 @@ class CollisionEngine:
                                             per_scene, cfg)
                     for t in self.octrees),
                 max(cfg.max_frontier, Q))
-            memo_key = ("csr_scenes", Q, plan.grouped)
+            memo_key = ("csr_scenes", Q, plan.grouped, self._scene_sig)
             verdict, st, cap, replays = _escalate(
                 lambda cap: self._run(cap)(
                     plan.obb_c, plan.obb_h, plan.obb_r, multi,
@@ -614,16 +677,16 @@ class CollisionEngine:
             worst = max(frontier_capacity_bound(
                 [len(l.codes) for l in t.levels], M, cfg)
                 for t in self.octrees)
-            memo_key = ("pad_scenes", S, M)
+            memo_key = ("pad_scenes", S, M, self._scene_sig)
             verdict, st, cap, replays = _escalate(
                 lambda cap: self._run(cap, "scenes")(
                     plan.obb_c.reshape(S, M, 3), plan.obb_h.reshape(S, M, 3),
                     plan.obb_r.reshape(S, M, 3, 3), dev),
                 M, worst, cfg, start=self._cap_memo.get(memo_key))
         else:
-            memo_key = ("single", Q, plan.grouped)
+            memo_key = ("single", Q, plan.grouped, self._scene_sig)
             verdict, st, cap, replays = _escalate(
-                lambda cap: self._run(cap)(
+                lambda cap: self._run(cap, streamed=streamed)(
                     plan.obb_c, plan.obb_h, plan.obb_r, self.device_tree,
                     None, owner, payload),
                 Q, self._capacity(Q), cfg,

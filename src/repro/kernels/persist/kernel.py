@@ -17,10 +17,11 @@ queries, and each grid step owns its tile's traversal end to end:
      ``depth + 1`` levels; a drained frontier makes the remaining levels
      natural no-ops — every update is masked by ``lane < n_live``);
   3. each level gathers the lanes' query OBBs (one-hot matmul against the
-     resident packed OBB table), reconstructs node AABBs from Morton codes
-     in-register, and runs the two-phase staged SACT via the shared
-     :func:`repro.kernels.sact.kernel.sact_tile` (tile-level conditional
-     return skips the 9 edge axes once every lane is decided);
+     tile's own ``bq``-row OBB block — queries never leave their tile, so
+     the full query table is never resident), reconstructs node AABBs from
+     Morton codes in-register, and runs the two-phase staged SACT via the
+     shared :func:`repro.kernels.sact.kernel.sact_tile` (tile-level
+     conditional return skips the 9 edge axes once every lane is decided);
   4. CSR child expansion AND compaction happen **in-register**: per-parent
      child counts (popcount of the occupancy mask) are exclusive-scanned
      over the tile, child ``j`` of parent ``i`` lands at
@@ -33,6 +34,28 @@ queries, and each grid step owns its tile's traversal end to end:
      a larger capacity, exactly as for the per-level arms.  Spilled pairs
      are *not* silently traversed: verdicts are exact iff the overflow
      count is zero.
+
+Node metadata comes in one of two **layouts** (``stream`` static flag,
+picked by the executor's residency estimator — DESIGN.md §3):
+
+* ``resident`` — the whole ``(depth+1, n_max, 4)`` table is a VMEM block,
+  bounding scene size at roughly VMEM / 16 B / (depth+1) nodes;
+* ``streamed`` — the table stays in HBM (``pltpu.ANY``) and the kernel
+  **double-buffers per-level row windows** through a ping/pong VMEM
+  scratch pair: while level ``l`` runs its SACT+expand+compact out of slot
+  ``l % 2``, the DMA for level ``l + 1``'s window (the occupied row extent
+  of that level, :data:`repro.core.octree.META_ROW_ALIGN`-row chunks) is
+  already in flight into slot ``(l + 1) % 2``.  Windows are keyed on the
+  levels the tile's frontier actually visits: a drained frontier stops the
+  prefetch chain, and every started window is waited exactly once before
+  its level reads it.  VMEM residency drops from ``(depth+1) * n_max``
+  rows to ``2 * n_max`` — ``(depth+1)/2``x more scene per VMEM byte, 4x
+  at the paper's depth-7 operating point (524k-point clouds); fixed-size
+  sub-level windows decoupling scratch from the widest level are the
+  recorded follow-up (ROADMAP).  Rows fetched are counted into
+  the ``meta_rows`` scalar (the
+  :data:`repro.core.counters.BYTES_META_STREAM` bytes-model term), with
+  the jnp ref arm modeling the identical per-tile window schedule.
 
 Because queries are partitioned across tiles and a pair's whole subtree
 stays in its query's tile, the early-exit coupling (a decided query
@@ -50,7 +73,8 @@ by contract, may drop different pairs per backend.
 
 Per-query HBM traffic collapses to: seed pair in, one verdict word out,
 plus spill traffic — the bytes model of
-:data:`repro.core.counters.BYTES_PERSIST_QUERY`.
+:data:`repro.core.counters.BYTES_PERSIST_QUERY` — plus, under the
+streamed layout, the metadata window traffic above.
 
 The frontier carries a **payload lane** (:mod:`repro.engine.plan`): each
 query's int32 payload rides its pairs, a terminal hit folds it into the
@@ -61,10 +85,8 @@ lanes (per-EDGE first hit across a swept edge's segments) are served by
 the reference arm: queries would no longer own their verdict groups
 tile-exclusively — tiling by owner group is the follow-up (DESIGN.md §3).
 
-The node metadata / OBB tables are held as resident VMEM blocks, which
-bounds scene size on real hardware (~VMEM/16 B nodes); scaling past that
-needs HBM-space DMA of metadata rows, noted in DESIGN.md §3.  On the CPU
-CI matrix the kernel runs under ``interpret=True`` on small scenes.
+On the CPU CI matrix the kernel (both layouts, including the DMA window
+machinery) runs under ``interpret=True`` on small scenes.
 """
 from __future__ import annotations
 
@@ -75,7 +97,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.counters import NUM_EXIT_CODES
-from repro.core.octree import jnp_morton_decode
+from repro.core.octree import META_ROW_ALIGN, jnp_morton_decode
 from repro.core.sact import PAYLOAD_INF, axis_tests_from_exit
 from repro.kernels.persist.ref import csr_child_slots
 # _EPS shared with every SACT arm: the bitwise identity across engines
@@ -88,49 +110,96 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def persist_kernel(scal_ref, obb_ref, meta_ref, payload_ref, collide_ref,
-                   perlevel_ref, hist_ref, scalars_ref, ring_ref, fq_scr,
-                   fn_scr, *, num_queries: int, bq: int, fcap: int,
-                   depth: int, n_max: int, ring_cap: int, use_spheres: bool):
+def persist_kernel(scal_ref, nchunk_ref, obb_ref, meta_ref, payload_ref,
+                   collide_ref, perlevel_ref, hist_ref, scalars_ref, ring_ref,
+                   fq_scr, fn_scr, meta_scr=None, dma_sem=None, *,
+                   num_queries: int, bq: int, fcap: int, depth: int,
+                   n_max: int, ring_cap: int, use_spheres: bool,
+                   stream: bool):
     t = pl.program_id(0)
     L = depth + 1
+    W = META_ROW_ALIGN
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, fcap), 1).reshape((fcap,))
     q_base = t * bq
     n_q = jnp.clip(num_queries - q_base, 0, bq)
 
     scal = scal_ref[...]                       # [scene_lo(3), cells(L)]
-    obb_tab = obb_ref[...]                     # (m_pad, 15) resident
-    meta_flat = meta_ref[...].reshape(L * n_max, 4)
+    obb_tile = obb_ref[...]                    # (bq, 15) this tile's queries
     pay_tile = payload_ref[...]                # (bq,) payload lane per query
-    m_pad = obb_tab.shape[0]
     iota_q = jax.lax.broadcasted_iota(jnp.int32, (1, bq), 1).reshape((bq,))
     iota_hist = jax.lax.broadcasted_iota(
         jnp.int32, (1, NUM_EXIT_CODES), 1).reshape((NUM_EXIT_CODES,))
 
-    # Seed frontier (slot 0): one (query, root) pair per query of the tile.
-    fq_scr[0, :] = jnp.where(lane < n_q, q_base + lane, 0)
-    fn_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
+    if stream:
+        # ---- HBM->VMEM metadata window DMA (ping/pong scratch pair) ----
+        # A level's window is its occupied row extent, issued as
+        # ``nchunk_ref[level]`` back-to-back W-row copies on the slot's
+        # semaphore; wait_window re-derives the same descriptors so every
+        # started chunk is waited exactly once.
+        def _window(op, level, slot):
+            def chunk(k, _):
+                dma = pltpu.make_async_copy(
+                    meta_ref.at[level, pl.ds(k * W, W)],
+                    meta_scr.at[pl.ds(slot * n_max + k * W, W)],
+                    dma_sem.at[slot])
+                (dma.start if op == "start" else dma.wait)()
+                return _
+            jax.lax.fori_loop(0, nchunk_ref[level], chunk, 0)
+
+        # Seed: level-0 window.  Gated on the tile holding queries so the
+        # level-0 wait gate (prev_live = n_q) pairs with it exactly — an
+        # empty tile must not leave a DMA in flight at kernel end.
+        @pl.when(n_q > 0)
+        def _():
+            _window("start", 0, 0)
+    else:
+        meta_flat = meta_ref[...].reshape(L * n_max, 4)
 
     def level_body(level, carry):
         (n_live, best_vec, per_level, hist, leaf, axis_exec, sphere,
-         overflow, spilled, cursor, ring) = carry
+         overflow, spilled, cursor, ring, meta_rows, prev_live) = carry
         slot = jax.lax.rem(level, 2)
         q = jnp.where(slot == 0, fq_scr[0, :], fq_scr[1, :])
         idx = jnp.where(slot == 0, fn_scr[0, :], fn_scr[1, :])
         valid = lane < n_live
 
         # ---- one metadata gather per lane (code, full, CSR cols) ------
-        meta = jnp.take(meta_flat,
-                        level * n_max + jnp.clip(idx, 0, n_max - 1), axis=0)
+        if stream:
+            # Wait for this level's window (started while the previous
+            # level computed), then put the NEXT level's window in flight
+            # before any SACT work — the copy overlaps the whole level.
+            @pl.when(prev_live > 0)
+            def _():
+                _window("wait", level, slot)
+
+            nxt_live = (level < depth) & (n_live > 0)
+
+            @pl.when(nxt_live)
+            def _():
+                _window("start", level + 1, 1 - slot)
+
+            meta_rows = meta_rows + jnp.where(
+                nxt_live,
+                nchunk_ref[jnp.minimum(level + 1, depth)] * W, 0)
+            # One offset gather out of the active window half — the same
+            # flat-gather idiom as the resident path, never selecting the
+            # half an in-flight prefetch DMA is writing.
+            meta = jnp.take(meta_scr[...],
+                            slot * n_max + jnp.clip(idx, 0, n_max - 1),
+                            axis=0)
+        else:
+            meta = jnp.take(meta_flat,
+                            level * n_max + jnp.clip(idx, 0, n_max - 1),
+                            axis=0)
         codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
         full_l = meta[:, 1] != 0
         child_start = meta[:, 2]
         child_mask = meta[:, 3]
 
-        # ---- gather query boxes (one-hot matmul, OOB-safe) ------------
-        onehot = (q[:, None] == jax.lax.broadcasted_iota(
-            jnp.int32, (fcap, m_pad), 1)).astype(jnp.float32)
-        rows = jnp.dot(onehot, obb_tab,
+        # ---- gather query boxes from the tile's own OBB block ---------
+        # (queries never cross tiles, so lane query ids are tile-local)
+        q_onehot = (q - q_base)[:, None] == iota_q[None, :]       # (fcap, bq)
+        rows = jnp.dot(q_onehot.astype(jnp.float32), obb_tile,
                        preferred_element_type=jnp.float32)        # (fcap, 15)
         oc = [rows[:, i] for i in range(3)]
         oh = [rows[:, 3 + i] for i in range(3)]
@@ -157,7 +226,6 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, payload_ref, collide_ref,
         # min — the one-hot re-derivation of sact.payload_min_update —
         # and a lane stays live only while its payload could still beat
         # its query's best (boolean early exit == all-zero payloads).
-        q_onehot = (q - q_base)[:, None] == iota_q[None, :]       # (fcap, bq)
         inf = jnp.int32(PAYLOAD_INF)
         pay_lane = jnp.sum(jnp.where(q_onehot, pay_tile[None, :], 0), axis=1)
         best_vec = jnp.minimum(best_vec, jnp.min(
@@ -216,17 +284,26 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, payload_ref, collide_ref,
         fn_scr[0, :] = jnp.where(nxt == 0, i_next, fn_scr[0, :])
         fn_scr[1, :] = jnp.where(nxt == 1, i_next, fn_scr[1, :])
         return (jnp.minimum(n_new, fcap), best_vec, per_level, hist,
-                leaf, axis_exec, sphere, overflow, spilled, cursor, ring)
+                leaf, axis_exec, sphere, overflow, spilled, cursor, ring,
+                meta_rows, n_live)
 
+    # Seed frontier (slot 0): one (query, root) pair per query of the tile.
+    fq_scr[0, :] = jnp.where(lane < n_q, q_base + lane, 0)
+    fn_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
+
+    meta_rows0 = (jnp.where(n_q > 0, nchunk_ref[0] * W, 0).astype(jnp.int32)
+                  if stream else jnp.int32(0))
     carry0 = (jnp.minimum(n_q, fcap),
               jnp.full((bq,), PAYLOAD_INF, jnp.int32),
               jnp.zeros((L,), jnp.int32),
               jnp.zeros((NUM_EXIT_CODES,), jnp.int32),
               jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
               jnp.int32(0), jnp.int32(0),
-              jnp.zeros((ring_cap, 2), jnp.int32))
+              jnp.zeros((ring_cap, 2), jnp.int32),
+              meta_rows0, n_q)
     (_, best_vec, per_level, hist, leaf, axis_exec, sphere, overflow,
-     spilled, _, ring) = jax.lax.fori_loop(0, L, level_body, carry0)
+     spilled, _, ring, meta_rows, _) = jax.lax.fori_loop(0, L, level_body,
+                                                         carry0)
 
     collide_ref[...] = best_vec.reshape(1, bq)
     perlevel_ref[...] = per_level.reshape(1, L)
@@ -234,38 +311,58 @@ def persist_kernel(scal_ref, obb_ref, meta_ref, payload_ref, collide_ref,
     nodes = jnp.sum(per_level)
     scalars_ref[...] = jnp.stack(
         [nodes, leaf, axis_exec, nodes * NUM_AXES, sphere, overflow,
-         spilled, jnp.int32(0)]).reshape(1, 8)
+         spilled, meta_rows]).reshape(1, 8)
     ring_ref[...] = ring.reshape(1, ring_cap, 2)
 
 
 def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
-                      depth: int, n_max: int, m_pad: int, ring_cap: int,
-                      use_spheres: bool, interpret: bool):
+                      depth: int, n_max: int, ring_cap: int,
+                      use_spheres: bool, interpret: bool, stream: bool):
     """Build the whole-traversal pallas_call.
 
     Inputs: scal (3 + depth+1,) f32 SMEM [scene_lo xyz, per-level cells];
-    obb table (m_pad, 15) f32; node_meta (depth+1, n_max, 4) int32 — both
-    resident blocks; payload (num_tiles * bq,) int32 per-query payload
-    lane (all zeros for boolean plans).  Outputs per query tile: ``best``
-    payload words (bq,) int32 (``PAYLOAD_INF`` = query never hit; 0 = a
-    boolean hit), valid counts per level, exit histogram, packed work
+    per-level window chunk counts (depth+1,) int32 SMEM (zeros under the
+    resident layout); OBB table (num_tiles * bq, 15) f32, blocked per tile;
+    node_meta (depth+1, n_max, 4) int32 — a resident VMEM block, or an
+    HBM-space (``pltpu.ANY``) table streamed through the ping/pong window
+    scratch when ``stream``; payload (num_tiles * bq,) int32 per-query
+    payload lane (all zeros for boolean plans).  Outputs per query tile:
+    ``best`` payload words (bq,) int32 (``PAYLOAD_INF`` = query never hit;
+    0 = a boolean hit), valid counts per level, exit histogram, packed work
     scalars [nodes, leaf, axis_exec, axis_dec, sphere, overflow, spilled,
-    0], and the spill ring's (query, node) pairs.
+    meta_rows], and the spill ring's (query, node) pairs.
     """
     if pltpu is None:  # pragma: no cover - exercised only sans TPU extra
         raise RuntimeError("pallas TPU extension unavailable")
+    if stream:
+        assert n_max % META_ROW_ALIGN == 0, \
+            "streamed node_meta needs META_ROW_ALIGN-aligned rows"
     L = depth + 1
     kernel = functools.partial(
         persist_kernel, num_queries=num_queries, bq=bq, fcap=fcap,
         depth=depth, n_max=n_max, ring_cap=ring_cap,
-        use_spheres=use_spheres)
+        use_spheres=use_spheres, stream=stream)
+    meta_spec = (pl.BlockSpec(memory_space=pltpu.ANY) if stream
+                 else pl.BlockSpec((L, n_max, 4), lambda t: (0, 0, 0)))
+    scratch = [
+        pltpu.VMEM((2, fcap), jnp.int32),    # frontier queries (2 slots)
+        pltpu.VMEM((2, fcap), jnp.int32),    # frontier node indices
+    ]
+    if stream:
+        scratch += [
+            # meta window ping/pong pair, flat: slot s = rows
+            # [s * n_max, (s + 1) * n_max)
+            pltpu.VMEM((2 * n_max, 4), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),          # per-slot window DMAs
+        ]
     return pl.pallas_call(
         kernel,
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),            # scal
-            pl.BlockSpec((m_pad, 15), lambda t: (0, 0)),      # OBB table
-            pl.BlockSpec((L, n_max, 4), lambda t: (0, 0, 0)),  # node meta
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # window chunks
+            pl.BlockSpec((bq, 15), lambda t: (t, 0)),         # OBB tile
+            meta_spec,                                        # node meta
             pl.BlockSpec((bq,), lambda t: (t,)),              # payload lane
         ],
         out_specs=[
@@ -282,9 +379,6 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
             jax.ShapeDtypeStruct((num_tiles, 8), jnp.int32),
             jax.ShapeDtypeStruct((num_tiles, ring_cap, 2), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, fcap), jnp.int32),    # frontier queries (2 slots)
-            pltpu.VMEM((2, fcap), jnp.int32),    # frontier node indices
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )

@@ -4,15 +4,33 @@
 "wavefront_persistent"``: the ENTIRE multi-level traversal in one call —
 the Pallas megakernel on TPU (or ``interpret=True`` for the CPU CI
 matrix), the live-prefix jnp reference elsewhere.  Both arms share the
-contract of :func:`repro.core.wavefront._traverse_fused` — identical
+contract of :func:`repro.engine.executor._traverse_fused` — identical
 ``(collide, stats)`` including every work counter — so the engine's
 escalation policy and counter plumbing are mode-agnostic.
+
+**Metadata residency layouts.**  The megakernel holds node metadata in
+one of two layouts (:data:`META_LAYOUTS`, DESIGN.md §3):
+
+* ``resident`` — the whole ``(depth+1, n_max, 4)`` table is a VMEM block
+  (:func:`meta_table_bytes`); fastest when it fits.
+* ``streamed`` — the table stays in HBM and per-level row windows are
+  double-buffered through a ping/pong VMEM scratch pair
+  (:func:`meta_stream_bytes` resident bytes; the fetched rows are counted
+  into the ``meta_rows`` stat → ``Counters.meta_rows_streamed`` →
+  :data:`repro.core.counters.BYTES_META_STREAM`).
+
+``traverse_whole(streamed=None)`` picks the layout with
+:func:`choose_meta_layout` against :data:`DEFAULT_VMEM_BUDGET`; the
+engine's executor makes the same choice per (mode, statics) traversal
+cache key and passes it down explicitly (``EngineConfig.stream_meta`` /
+``vmem_budget`` override it).
 
 The ragged multi-scene frontier (``scene_of_query`` + a
 :class:`repro.core.octree.MultiSceneOctree` flat table) is served by the
 reference arm on every backend: one compiled call and one compaction pool
 for arbitrarily mixed scene sizes.  The megakernel keeps per-scene
-scalars in SMEM and is single-scene for now (DESIGN.md §3).
+scalars in SMEM and is single-scene for now; streaming the flat
+multi-scene table is the follow-up (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -22,19 +40,74 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.octree import MAX_DEPTH, DeviceOctree, MultiSceneOctree
+from repro.core.counters import BYTES_META_STREAM
+from repro.core.octree import (MAX_DEPTH, META_ROW_ALIGN, DeviceOctree,
+                               MultiSceneOctree, align_rows)
 from repro.core.sact import PAYLOAD_INF
 from repro.kernels.persist.ref import traverse_whole_ref
 from repro.kernels.sact.ops import pack_obbs
+
+#: Node-metadata layouts of the persistent megakernel (drift-guarded
+#: against the DESIGN.md §3 / README residency tables).
+META_LAYOUTS = ("resident", "streamed")
+
+#: Bytes per node-metadata row ([code, full, child_start, child_mask],
+#: 4 x int32) — the unit of the residency estimates, aliased to the
+#: traffic model's ``BYTES_META_STREAM`` so the two can never drift.
+META_BYTES_PER_ROW = BYTES_META_STREAM
+
+#: Default VMEM budget for the resident node-metadata table.  Real TPU
+#: cores have ~16 MiB of VMEM; the megakernel also needs its frontier
+#: scratch, the per-tile OBB block, and (streamed) the window pair, so
+#: the table gets half.  ``EngineConfig.vmem_budget`` overrides per
+#: engine; CPU/interpret runs have no hard limit but honor the same
+#: estimate so layout choice is backend-independent.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def meta_table_bytes(depth: int, n_max: int) -> int:
+    """VMEM bytes of the RESIDENT node-metadata table (aligned rows)."""
+    return (depth + 1) * align_rows(n_max) * META_BYTES_PER_ROW
+
+
+def meta_stream_bytes(n_max: int) -> int:
+    """VMEM bytes of the STREAMED layout's ping/pong window pair.
+
+    A window covers a whole level's occupied extent, so the pair is sized
+    to the WIDEST level (``2 * n_max`` rows): streaming buys a
+    ``(depth+1)/2``x larger scene per VMEM byte over the resident table,
+    not an unbounded one.  Fixed-size sub-level windows (decoupling the
+    scratch from the widest level entirely) are the recorded follow-up
+    (ROADMAP).
+    """
+    return 2 * align_rows(n_max) * META_BYTES_PER_ROW
+
+
+def choose_meta_layout(depth: int, n_max: int,
+                       budget: int = DEFAULT_VMEM_BUDGET) -> str:
+    """Residency estimator: ``"resident"`` iff the whole table fits
+    ``budget``, else ``"streamed"`` — always the smaller footprint
+    (:func:`meta_stream_bytes` <= :func:`meta_table_bytes`), so it is the
+    best available layout even when the widest level alone strains the
+    budget (see :func:`meta_stream_bytes` on that bound)."""
+    return ("resident" if meta_table_bytes(depth, n_max) <= budget
+            else "streamed")
 
 
 def _use_pallas_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _window_rows(counts: jax.Array) -> jax.Array:
+    """Per-level window sizes in rows: occupied extent rounded up to whole
+    :data:`repro.core.octree.META_ROW_ALIGN`-row DMA chunks."""
+    w = META_ROW_ALIGN
+    return (((counts.astype(jnp.int32) + w - 1) // w) * w)
+
+
 def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
                   use_spheres: bool, bq: int, ring_cap: int,
-                  interpret: bool, payload=None,
+                  interpret: bool, stream: bool, payload=None,
                   grouped: bool = False) -> Tuple[jax.Array, dict]:
     from repro.kernels.persist.kernel import make_persist_call
 
@@ -43,14 +116,22 @@ def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     n_max = dev.codes.shape[-1]
     num_tiles = max(math.ceil(M / bq), 1)
     obb = pack_obbs(obb_c, obb_h, obb_r)
+    obb = jnp.pad(obb, ((0, num_tiles * bq - M), (0, 0)))
     scal = jnp.concatenate([jnp.asarray(dev.scene_lo, jnp.float32),
                             jnp.asarray(dev.cell_sizes, jnp.float32)])
     pay = (jnp.zeros((M,), jnp.int32) if payload is None
            else payload.astype(jnp.int32))
     pay = jnp.pad(pay, (0, num_tiles * bq - M))
+    meta = dev.node_meta
+    if stream and n_max % META_ROW_ALIGN:   # hand-built unaligned tables
+        pad = align_rows(n_max) - n_max
+        meta = jnp.pad(meta, ((0, 0), (0, pad), (0, 0)))
+        n_max = n_max + pad
+    nchunks = (_window_rows(dev.counts) // META_ROW_ALIGN if stream
+               else jnp.zeros((L,), jnp.int32))
     call = make_persist_call(M, num_tiles, bq, capacity, dev.depth, n_max,
-                             obb.shape[0], ring_cap, use_spheres, interpret)
-    words, per_level, hist, scalars, _ring = call(scal, obb, dev.node_meta,
+                             ring_cap, use_spheres, interpret, stream)
+    words, per_level, hist, scalars, _ring = call(scal, nchunks, obb, meta,
                                                   pay)
     best = words.reshape(-1)[:M]
     verdict = best if grouped else best != PAYLOAD_INF
@@ -59,7 +140,7 @@ def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
         jnp.sum(per_level, axis=0))
     st = dict(nodes=tot[0], leaf=tot[1], axis_exec=tot[2], axis_dec=tot[3],
               sphere=tot[4], overflow=tot[5], per_level=per,
-              exit_hist=jnp.sum(hist, axis=0))
+              exit_hist=jnp.sum(hist, axis=0), meta_rows=tot[7])
     return verdict, st
 
 
@@ -69,6 +150,7 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                    scene_of_query: Optional[jax.Array] = None,
                    owner_of_query: Optional[jax.Array] = None,
                    payload: Optional[jax.Array] = None,
+                   streamed: Optional[bool] = None,
                    bq: int = 128, ring_cap: int = 256, w_min: int = 128
                    ) -> Tuple[jax.Array, dict]:
     """Whole multi-level traversal for one flat query set.
@@ -78,6 +160,13 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     flat query to its scene.  Composes under jit; returns
     ``(collide (Q,) bool, stats dict)`` bitwise-identical to the per-level
     fused arm.
+
+    ``streamed`` selects the node-metadata layout (see module docstring):
+    ``None`` asks :func:`choose_meta_layout` with the default budget.  The
+    layout cannot change verdicts or work counters — only the ``meta_rows``
+    stat (HBM window traffic, 0 under the resident layout) and the VMEM
+    footprint move.  Both kernel and ref arms honor it, so kernel-vs-ref
+    runs stay bitwise-comparable per layout.
 
     Payload lanes (:mod:`repro.engine.plan`): with owner / payload lanes
     the verdict is the (Q,) int32 ``best`` payload per verdict group
@@ -93,6 +182,9 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                 and scene_of_query is None), \
         "a MultiSceneOctree needs scene_of_query (Q,) to map queries to scenes"
     kernel_ok = not ragged and owner_of_query is None
+    if streamed is None:
+        streamed = (not ragged) and choose_meta_layout(
+            dev.depth, dev.codes.shape[-1]) == "streamed"
     if use_pallas is None:
         use_pallas = _use_pallas_default() and kernel_ok
     if interpret is None:
@@ -100,11 +192,21 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     if use_pallas and kernel_ok:
         return _kernel_whole(obb_c, obb_h, obb_r, dev, capacity,
                              use_spheres, bq, ring_cap, interpret,
-                             payload=payload, grouped=payload is not None)
+                             stream=streamed, payload=payload,
+                             grouped=payload is not None)
     # DeviceOctree and MultiSceneOctree expose the same three table fields;
     # scene_of_query switches the ref between scalar and per-pair gathers.
+    # The streamed-window model only applies where the kernel could run
+    # (single-scene, identity-owner): ragged and cross-slot-owner plans
+    # are ref-served with the table resident, so modeling window traffic
+    # for them would price HBM fetches no arm performs.
+    model = streamed and kernel_ok
     return traverse_whole_ref(obb_c, obb_h, obb_r, dev.node_meta,
                               dev.cell_sizes, dev.scene_lo, dev.depth,
                               capacity, use_spheres,
                               scene_of_query=scene_of_query, w_min=w_min,
-                              owner_of_query=owner_of_query, payload=payload)
+                              owner_of_query=owner_of_query, payload=payload,
+                              stream_bq=bq if model else None,
+                              stream_window_rows=(
+                                  _window_rows(dev.counts) if model
+                                  else None))

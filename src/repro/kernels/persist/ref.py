@@ -36,6 +36,17 @@ The same function serves the ragged multi-scene frontier: with
 and scene origin are gathers by scene id, and scene ``s``'s root is flat
 node ``s`` of the level-0 row.  One compiled call and one compaction pool
 serve arbitrarily mixed scene sizes with no per-scene padding.
+
+**Streamed-layout window model.**  Under the kernel's streamed metadata
+layout (DESIGN.md §3) each query tile DMAs its level-0 window at seed time
+and prefetches level ``l + 1``'s window whenever its frontier is still
+live at level ``l``.  With ``stream_bq`` / ``stream_window_rows`` given,
+the ref accumulates the *identical* per-tile schedule into the
+``meta_rows`` stat: lane query ids stay sorted through the in-register
+compaction (children inherit their parent's query, parent-major), so a
+kernel tile's liveness at level ``l`` is exactly "some valid lane has
+``q // bq == t``" on the global pool — bitwise on every clean run, like
+the other counters.
 """
 from __future__ import annotations
 
@@ -81,13 +92,16 @@ def _empty_stats():
         nodes=jnp.int32(0), leaf=jnp.int32(0), axis_exec=jnp.int32(0),
         axis_dec=jnp.int32(0), sphere=jnp.int32(0), overflow=jnp.int32(0),
         per_level=jnp.zeros((MAX_DEPTH + 1,), jnp.int32),
-        exit_hist=jnp.zeros((NUM_EXIT_CODES,), jnp.int32))
+        exit_hist=jnp.zeros((NUM_EXIT_CODES,), jnp.int32),
+        meta_rows=jnp.int32(0))
 
 
 def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                        depth: int, capacity: int, use_spheres: bool,
                        scene_of_query: Optional[jax.Array] = None,
-                       w_min: int = 128, owner_of_query=None, payload=None):
+                       w_min: int = 128, owner_of_query=None, payload=None,
+                       stream_bq: Optional[int] = None,
+                       stream_window_rows: Optional[jax.Array] = None):
     """Whole-traversal reference arm; see module docstring for the contract.
 
     Args:
@@ -105,6 +119,13 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         and a pair expands only while its payload could still beat its
         group's best — boolean early exit is the identity-owner,
         zero-payload special case.
+      stream_bq / stream_window_rows: model the megakernel's streamed
+        metadata layout (see module docstring): ``stream_bq`` is the
+        kernel's query-tile width and ``stream_window_rows`` the
+        (depth+1,) int32 per-level window sizes in rows (extent rounded up
+        to whole DMA chunks).  The ``meta_rows`` stat then counts the rows
+        the per-tile window schedule fetches; without them it stays 0
+        (resident layout / ragged multi-scene).
     Returns:
       (verdict, stats dict) — the ``_traverse_fused`` contract: (Q,) bool
       collide flags, or the (Q,) ``best`` array for grouped calls.
@@ -113,6 +134,10 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
     n_max = node_meta.shape[-2]
     ragged = scene_of_query is not None
     grouped = owner_of_query is not None or payload is not None
+    model_stream = stream_window_rows is not None
+    assert not (model_stream and ragged), \
+        "the streamed-window model is single-scene (kernel tiles are)"
+    num_tiles = (-(-Q // stream_bq) if model_stream else 0)
     widths = frontier_widths(capacity, w_min)
     widths_arr = jnp.asarray(widths, jnp.int32)
 
@@ -177,6 +202,19 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
             idx_next = jnp.zeros((capacity,), jnp.int32).at[tgt].set(
                 (child_start[:, None] + offs).reshape(-1), mode="drop")
 
+            # ---- streamed-window schedule model (kernel-identical) -------
+            if model_stream:
+                # A kernel tile live at level l prefetches level l+1's
+                # window; tiles are contiguous q-ranges of the sorted pool.
+                tile_live = jnp.zeros((num_tiles,), jnp.int32).at[
+                    q // stream_bq].max(valid.astype(jnp.int32), mode="drop")
+                meta_rows = st["meta_rows"] + jnp.where(
+                    level < depth,
+                    jnp.sum(tile_live)
+                    * stream_window_rows[jnp.minimum(level + 1, depth)], 0)
+            else:
+                meta_rows = st["meta_rows"]
+
             st = dict(
                 nodes=st["nodes"] + n_valid,
                 leaf=st["leaf"] + jnp.sum(term_valid),
@@ -185,7 +223,8 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                 sphere=st["sphere"] + jnp.sum(res.sphere_tests),
                 overflow=st["overflow"] + jnp.maximum(n_new - capacity, 0),
                 per_level=st["per_level"].at[level].set(n_valid),
-                exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid))
+                exit_hist=st["exit_hist"].at[res.exit_code].add(term_valid),
+                meta_rows=meta_rows)
             return (level + 1, jnp.minimum(n_new, capacity), q_next,
                     idx_next, verdict, st)
         return branch
@@ -211,7 +250,13 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         node0 = jnp.zeros((capacity,), jnp.int32)
     verdict0 = (jnp.full((Q,), PAYLOAD_INF, jnp.int32) if grouped
                 else jnp.zeros((Q,), bool))
+    st0 = _empty_stats()
+    if model_stream:
+        # Every tile is seeded non-empty (num_tiles = ceil(Q / bq)) and
+        # fetches its level-0 window before the first level runs.
+        st0["meta_rows"] = (num_tiles * stream_window_rows[0]).astype(
+            jnp.int32)
     carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(Q), jnp.int32(capacity)),
-              q0, node0, verdict0, _empty_stats())
+              q0, node0, verdict0, st0)
     out = jax.lax.while_loop(cond, body, carry0)
     return out[4], out[5]

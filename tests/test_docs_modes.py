@@ -1,22 +1,26 @@
-"""Docs drift guard: the engine-mode and workload tables in DESIGN.md §2
-and README.md duplicate each other by design (one is the architecture doc,
-one the landing page); these tests keep both in lockstep with ``MODES``
-and the plan layer's ``WORKLOADS``."""
+"""Docs drift guard: the engine-mode, workload, and metadata-residency
+tables in DESIGN.md §2/§3 and README.md duplicate each other by design
+(one is the architecture doc, one the landing page); these tests keep
+both in lockstep with ``MODES``, the plan layer's ``WORKLOADS``, and the
+persistent megakernel's ``META_LAYOUTS``."""
 import os
 import re
 
 from repro.core.wavefront import MODES
 from repro.engine.plan import WORKLOADS
+from repro.kernels.persist.ops import META_LAYOUTS
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def _mode_table_cells(path: str) -> set:
-    """Backticked first-column entries of markdown table rows."""
+    """Backticked first-column entries of markdown table rows (tables may
+    be indented when they live inside a list item, e.g. DESIGN.md §3's
+    residency table)."""
     cells = set()
     with open(os.path.join(_ROOT, path)) as f:
         for line in f:
-            m = re.match(r"\|\s*`([a-z_]+)`\s*\|", line)
+            m = re.match(r"\s*\|\s*`([a-z_]+)`\s*\|", line)
             if m:
                 cells.add(m.group(1))
     return cells
@@ -44,3 +48,17 @@ def test_readme_workload_table_lists_every_plan_kind():
     cells = _mode_table_cells("README.md")
     for kind in WORKLOADS:
         assert kind in cells, f"README workload table is missing `{kind}`"
+
+
+def test_design_residency_table_lists_every_meta_layout():
+    cells = _mode_table_cells("DESIGN.md")
+    for layout in META_LAYOUTS:
+        assert layout in cells, \
+            f"DESIGN.md §3 residency/streaming table misses `{layout}`"
+
+
+def test_readme_residency_table_lists_every_meta_layout():
+    cells = _mode_table_cells("README.md")
+    for layout in META_LAYOUTS:
+        assert layout in cells, \
+            f"README residency/streaming table is missing `{layout}`"

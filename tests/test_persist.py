@@ -12,12 +12,14 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.geometry import OBBs, random_obbs
-from repro.core.octree import (build_octree, concat_device_octrees,
-                               device_octree)
+from repro.core.octree import (align_rows, build_octree,
+                               concat_device_octrees, device_octree)
 from repro.core.wavefront import (MODES, CollisionEngine, EngineConfig,
                                   query_batched_scenes, traversal_cache_info)
 from repro.data.robotics import make_scene, scene_trajectories
-from repro.kernels.persist.ops import traverse_whole
+from repro.kernels.persist.ops import (META_LAYOUTS, choose_meta_layout,
+                                       meta_stream_bytes, meta_table_bytes,
+                                       traverse_whole)
 from repro.kernels.persist.ref import frontier_widths, traverse_whole_ref
 
 WORK_FIELDS = ("nodes_traversed", "leaf_tests", "axis_tests_executed",
@@ -199,8 +201,8 @@ def test_ragged_concat_table_roots_and_counts():
     # scene s's root is flat node s of the level-0 row
     meta0 = np.asarray(multi.node_meta[0])
     assert (meta0[:2, 0].view(np.uint32) == 0).all()
-    # flat table holds the total, not S x widest
-    assert multi.node_meta.shape[1] == max(counts)
+    # flat table holds the total (DMA-chunk aligned), not S x widest
+    assert multi.node_meta.shape[1] == align_rows(max(counts))
 
 
 def test_engineconfig_rejects_unknown_mode():
@@ -210,6 +212,155 @@ def test_engineconfig_rejects_unknown_mode():
     assert "warpfront" in msg
     for mode in MODES:
         assert mode in msg
+
+
+def _slab_scene(seed=3, n_pts=4000, depth=5):
+    """Sparse slab: a real multi-level traversal (root never full)."""
+    rs = np.random.RandomState(seed)
+    pts = rs.uniform(-1, 1, (n_pts, 3)).astype(np.float32)
+    return build_octree(pts[np.abs(pts[:, 2]) < 0.3], depth=depth)
+
+
+def test_streamed_kernel_interpret_matches_ref_and_resident():
+    """Streamed metadata windows (interpret-mode DMA machinery, multiple
+    query tiles) == streamed jnp ref on EVERY stats field including the
+    meta_rows window schedule; == the resident layout on everything but
+    meta_rows (the layout cannot change work, only traffic)."""
+    dev = device_octree(_slab_scene())
+    obbs = random_obbs(jax.random.PRNGKey(3), 37)     # 3 tiles at bq=16
+    cap = 2048
+    kw = dict(use_spheres=False, bq=16)
+    ref = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_pallas=False, streamed=True, **kw)
+    pal = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_pallas=True, interpret=True, streamed=True,
+                         **kw)
+    res = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, cap,
+                         use_pallas=True, interpret=True, streamed=False,
+                         **kw)
+    assert int(ref[1]["meta_rows"]) > 0
+    assert bool(jnp.all(ref[0] == pal[0]))
+    for k in ref[1]:
+        assert bool(jnp.all(ref[1][k] == pal[1][k])), k
+    assert int(res[1]["meta_rows"]) == 0
+    assert bool(jnp.all(res[0] == pal[0]))
+    for k in ref[1]:
+        if k != "meta_rows":
+            assert bool(jnp.all(res[1][k] == pal[1][k])), k
+
+
+def test_bigscene_streamed_engine_bitwise_vs_fused():
+    """The satellite acceptance run: a scene >= 4x the VMEM residency
+    limit stays under mode="wavefront_persistent" (streamed layout, no
+    fused fallback), with the interpret-mode megakernel's verdicts AND
+    work counters bitwise-identical to wavefront_fused and to the jnp
+    ref arm."""
+    tree = _slab_scene()
+    n_max = max(len(l.codes) for l in tree.levels)
+    table = meta_table_bytes(tree.depth, n_max)
+    # the residency limit IS the budget: table // 4 puts this scene at
+    # 4x the limit.  The estimator must flip exactly there — resident at
+    # a table-sized budget, streamed below it — or the test is not
+    # exercising the streamed arm at all.
+    budget = table // 4
+    assert choose_meta_layout(tree.depth, n_max, budget) == "streamed"
+    assert choose_meta_layout(tree.depth, n_max, table) == "resident"
+    obbs = random_obbs(jax.random.PRNGKey(5), 24)
+    ref_col, ref_c = CollisionEngine(
+        tree, EngineConfig(mode="wavefront_fused")).query(obbs)
+    engines = {
+        "kernel": EngineConfig(mode="wavefront_persistent",
+                               vmem_budget=budget,
+                               use_pallas_traverse=True),
+        "ref": EngineConfig(mode="wavefront_persistent",
+                            vmem_budget=budget),
+    }
+    counters = {}
+    for name, cfg in engines.items():
+        eng = CollisionEngine(tree, cfg)
+        assert eng.meta_layout == "streamed"
+        col, c = eng.query(obbs)
+        assert (col == ref_col).all(), name
+        _assert_counters_equal(c, ref_c, name)
+        assert c.meta_rows_streamed > 0, name
+        counters[name] = c
+    # kernel and ref arms agree on the window schedule itself
+    assert (counters["kernel"].meta_rows_streamed
+            == counters["ref"].meta_rows_streamed)
+    # streamed metadata traffic is priced into the persistent bytes model
+    assert counters["kernel"].bytes_moved > 0
+
+
+def test_residency_estimator_and_override():
+    """choose_meta_layout picks by table size vs budget; EngineConfig can
+    pin either layout; verdicts and work counters never depend on it."""
+    tree = _slab_scene()
+    n_max = max(len(l.codes) for l in tree.levels)
+    table = meta_table_bytes(tree.depth, n_max)
+    assert choose_meta_layout(tree.depth, n_max, budget=table) == "resident"
+    assert choose_meta_layout(tree.depth, n_max,
+                              budget=table - 1) == "streamed"
+    assert set(META_LAYOUTS) == {"resident", "streamed"}
+    # the streamed ping/pong pair is sized to the WIDEST level: exactly
+    # (depth+1)/2x smaller than the resident table, not unbounded —
+    # fixed-size sub-level windows are the recorded follow-up (ROADMAP)
+    assert meta_stream_bytes(n_max) * (tree.depth + 1) == 2 * table
+    obbs = random_obbs(jax.random.PRNGKey(9), 24)
+    runs = {}
+    for layout, stream in (("resident", False), ("streamed", True)):
+        eng = CollisionEngine(tree, EngineConfig(
+            mode="wavefront_persistent", stream_meta=stream))
+        assert eng.meta_layout == layout
+        runs[layout] = eng.query(obbs)
+    col_r, c_r = runs["resident"]
+    col_s, c_s = runs["streamed"]
+    assert (col_r == col_s).all()
+    _assert_counters_equal(c_s, c_r, "layouts")
+    assert c_r.meta_rows_streamed == 0
+    assert c_s.meta_rows_streamed > 0
+    assert c_s.bytes_moved > c_r.bytes_moved
+
+
+def test_owner_plans_do_not_model_stream_traffic():
+    """Cross-slot owner (swept-edge) plans are ref-served with the table
+    resident — no arm performs window DMAs, so no window traffic may be
+    modeled even when the streamed layout is requested."""
+    dev = device_octree(_slab_scene())
+    obbs = random_obbs(jax.random.PRNGKey(2), 12)
+    owner = jnp.zeros((12,), jnp.int32)
+    _, st = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, 512,
+                           use_spheres=False, use_pallas=False,
+                           streamed=True, owner_of_query=owner, bq=8)
+    assert int(st["meta_rows"]) == 0
+
+
+def test_cap_memo_rekeys_on_scene_growth():
+    """Growing a scene between calls (rebind_octrees) must re-enter the
+    escalation ladder: the clean-capacity memo keys on the scene node
+    counts, so the old scene's (too small) clean capacity is never
+    reused and the first query against the grown scene still ends
+    overflow-free and exact."""
+    rs = np.random.RandomState(6)
+    small = build_octree(
+        rs.uniform(-1, 1, (300, 3)).astype(np.float32), depth=4)
+    big = build_octree(
+        rs.uniform(-1, 1, (8000, 3)).astype(np.float32), depth=4)
+    obbs = random_obbs(jax.random.PRNGKey(3), 40)
+    eng = CollisionEngine(small, EngineConfig(mode="wavefront_persistent",
+                                              min_bucket=32))
+    eng.query(obbs)
+    (old_key,) = set(eng._cap_memo)
+    eng.rebind_octrees(big)
+    # superseded-scene entries are unreadable (sig-keyed) and pruned
+    assert not eng._cap_memo
+    ref, _ = CollisionEngine(big, EngineConfig(mode="naive")).query(obbs)
+    got, c = eng.query(obbs)
+    assert (got == ref).all()
+    assert c.frontier_overflow == 0
+    assert c.escalations >= 1          # ladder re-entered, not memo-skipped
+    # same query shape, new scene signature in the key
+    (new_key,) = set(eng._cap_memo)
+    assert old_key[:-1] == new_key[:-1] and old_key[-1] != new_key[-1]
 
 
 def test_traversal_cache_survives_engine_reconstruction():
