@@ -32,8 +32,7 @@ import jax.numpy as jnp
 from benchmarks.common import (emit, time_call, time_group,
                                work_model_cycles, work_model_energy_pj,
                                write_results)
-from repro.core.ballquery import (ball_query_pray, ball_query_psphere,
-                                  ball_query_ref)
+from repro.core.ballquery import ball_query_pray, ball_query_psphere
 from repro.core.fps import (farthest_point_sampling, random_sampling,
                             sampling_spread)
 from repro.core.geometry import OBBs
@@ -45,16 +44,22 @@ from repro.data.robotics import (ENVIRONMENTS, make_mpaccel_scenario,
 
 SCALE = {"points": 65536, "trajs": 6, "wps": 30, "depth": 6,
          "mpaccel_scenarios": 4, "mpaccel_points": 16384,
-         "edges": 24, "edge_res": 16}
+         "edges": 24, "edge_res": 16,
+         "serve_clients": 8, "serve_requests": 16, "serve_queries": 12,
+         "serve_max_wait_ms": 2.0}
 FULL_SCALE = {"points": 524288, "trajs": 25, "wps": 60, "depth": 7,
               "mpaccel_scenarios": 10, "mpaccel_points": 65536,
-              "edges": 64, "edge_res": 32}
+              "edges": 64, "edge_res": 32,
+              "serve_clients": 16, "serve_requests": 32,
+              "serve_queries": 12, "serve_max_wait_ms": 2.0}
 # CI artifact job: tiny scene, 1 repeat, subset of benches (see --smoke).
 SMOKE_SCALE = {"points": 4096, "trajs": 2, "wps": 6, "depth": 4,
                "mpaccel_scenarios": 1, "mpaccel_points": 2048,
-               "edges": 8, "edge_res": 16}
+               "edges": 8, "edge_res": 16,
+               "serve_clients": 4, "serve_requests": 8, "serve_queries": 12,
+               "serve_max_wait_ms": 4.0}
 SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched", "ragged",
-                 "fig_edges", "fig_bigscene")
+                 "fig_edges", "fig_bigscene", "fig_serve")
 
 _scene_cache = {}
 
@@ -517,10 +522,14 @@ def ragged_scenes(S):
              f"big_scene_cost={t_mixed/max(t_small, 1e-9):.2f}x")
     t_pad, t_rag = (walls[("padded_wavefront", "mixed")],
                     walls[("ragged_persistent", "mixed")])
+    pad_infl = (walls[("padded_wavefront", "mixed")]
+                / max(walls[("padded_wavefront", "small")], 1e-9))
+    rag_infl = (walls[("ragged_persistent", "mixed")]
+                / max(walls[("ragged_persistent", "small")], 1e-9))
     emit("ragged/headline", 0.0,
          f"ragged_vs_padded={t_pad/max(t_rag, 1e-9):.2f}x;"
-         f"pad_inflation={walls[('padded_wavefront', 'mixed')]/max(walls[('padded_wavefront', 'small')], 1e-9):.2f}x;"
-         f"ragged_inflation={walls[('ragged_persistent', 'mixed')]/max(walls[('ragged_persistent', 'small')], 1e-9):.2f}x")
+         f"pad_inflation={pad_infl:.2f}x;"
+         f"ragged_inflation={rag_infl:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -632,13 +641,43 @@ def fig_bigscene(S):
 
 
 # ---------------------------------------------------------------------------
+# fig_serve — collision service SLOs (DESIGN.md §6): N closed-loop clients
+# submit small query sets through the continuous batcher over one engine;
+# reports client-observed p50/p99 latency, queries/sec, and batching
+# effectiveness.  CI requires this row family (--require fig_serve).
+# ---------------------------------------------------------------------------
+
+def fig_serve(S):
+    from repro.launch.serve import run_service
+    _, tree, _ = get_scene(ENVIRONMENTS[0], S["points"], S["depth"],
+                           S["trajs"], S["wps"])
+    rep = run_service(tree, clients=S["serve_clients"],
+                      requests=S["serve_requests"],
+                      queries_per_request=S["serve_queries"],
+                      max_wait_ms=S["serve_max_wait_ms"])
+    emit("fig_serve/latency", rep["p50_ms"] * 1e3,
+         f"p50_ms={rep['p50_ms']:.2f};p99_ms={rep['p99_ms']:.2f};"
+         f"clients={rep['clients']};requests={rep['requests']};"
+         f"queries_per_request={S['serve_queries']};"
+         f"max_wait_ms={S['serve_max_wait_ms']}")
+    emit("fig_serve/throughput", 0.0,
+         f"qps={rep['qps']:.0f};rps={rep['rps']:.0f};"
+         f"queries={rep['queries']};wall_s={rep['wall_s']:.2f}")
+    emit("fig_serve/batching", 0.0,
+         f"launches={rep['launches']};"
+         f"req_per_launch={rep['mean_requests_per_launch']:.1f};"
+         f"live_q_per_launch={rep['mean_live_queries_per_launch']:.0f};"
+         f"pad_fraction={rep['pad_fraction']:.2f}")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table (reads the dry-run artifacts; §Roofline source of truth)
 # ---------------------------------------------------------------------------
 
 def roofline_table(S):
     d = os.path.join(os.path.dirname(__file__), "results", "dryrun")
     if not os.path.isdir(d):
-        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        emit("roofline/missing", 0.0, "run repro.lm.dryrun first")
         return
     for fn in sorted(os.listdir(d)):
         if not fn.endswith(".json"):
@@ -675,6 +714,7 @@ BENCHES = {
     "ragged": ragged_scenes,
     "fig_edges": fig_edges,
     "fig_bigscene": fig_bigscene,
+    "fig_serve": fig_serve,
     "roofline": roofline_table,
 }
 

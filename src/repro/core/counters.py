@@ -100,6 +100,10 @@ class Counters:
     frontier_overflow: int = 0          # entries dropped at capacity (should be 0)
     escalations: int = 0                # overflow replays before a clean run
     meta_rows_streamed: int = 0         # HBM metadata rows DMA'd (streamed layout)
+    pad_queries: int = 0                # dead pool slots added by sharding /
+    #                                     batch coalescing (zero work each —
+    #                                     the live-prefix num_valid lane masks
+    #                                     them — but they occupy pool width)
     wall_time_s: float = 0.0
 
     def merge_exit_codes(self, codes: np.ndarray, valid: np.ndarray) -> None:
@@ -126,6 +130,7 @@ class Counters:
         self.frontier_overflow += other.frontier_overflow
         self.escalations += other.escalations
         self.meta_rows_streamed += other.meta_rows_streamed
+        self.pad_queries += other.pad_queries
         self.exit_histogram += other.exit_histogram
         a, b = self.nodes_per_level, other.nodes_per_level
         self.nodes_per_level = [

@@ -1,0 +1,247 @@
+"""Async request aggregator: continuous batching for the collision engine.
+
+The serving problem (DESIGN.md §6): planner clients issue many SMALL query
+sets — a dozen link OBBs per motion-plan step — while the engine's
+throughput comes from LARGE flat pools that keep the persistent megakernel
+saturated.  The :class:`RequestBatcher` bridges the two: client threads
+``submit`` plans and block on a ticket; a single worker thread coalesces
+whatever is queued into ONE flat pool, launches it as one engine execute,
+and routes each slice of the verdict back through the submitting plan's
+own un-flattening recipe.
+
+Admission policy (the knobs in :data:`ADMISSION_KNOBS`, drift-guarded
+against DESIGN.md §6):
+
+* ``max_batch`` — launch as soon as the coalesced pool holds this many
+  query slots (one oversized request still launches alone);
+* ``max_wait_ms`` — never hold the FIRST queued request longer than this
+  before launching, whatever the pool size.
+
+The coalesced pool pads up to a power-of-two bucket (``pad_pow2``) with
+degenerate OBBs far outside the scene — they fail the root test and die
+at level 0 — so the engine's jit cache sees O(log max_batch) distinct
+pool widths instead of one per arrival pattern.  The pad count is
+reported in ``Counters.pad_queries``.
+
+Per-request latency accounting (:class:`RequestStats`): ``wait_s`` is
+admission (submit -> launch), ``exec_s`` the shared engine call,
+``total_s`` their sum — the quantities the serve harness turns into
+p50/p99 SLO rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.counters import Counters
+from repro.core.geometry import OBBs
+from repro.engine.executor import CollisionEngine
+from repro.engine.plan import QueryPlan, plan_queries
+
+#: Admission-policy knobs of the batcher (drift-guarded against the
+#: DESIGN.md §6 admission table).
+ADMISSION_KNOBS = ("max_batch", "max_wait_ms")
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Latency + batching accounting for one submitted request."""
+
+    wait_s: float          # submit -> batch launch (admission queueing)
+    exec_s: float          # the shared engine call the request rode in
+    total_s: float         # wait_s + exec_s (client-observed latency)
+    batch_requests: int    # requests coalesced into the launch
+    batch_queries: int     # live query slots in the coalesced pool
+    pad_queries: int       # dead pow2-bucket pad slots in the pool
+
+
+class BatchTicket:
+    """Handle returned by :meth:`RequestBatcher.submit`."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Optional[np.ndarray] = None
+        self._stats: Optional[RequestStats] = None
+        self._error: Optional[BaseException] = None
+
+    def result(self, timeout: Optional[float] = None
+               ) -> Tuple[np.ndarray, RequestStats]:
+        """Block until the batch the request rode in completes; returns
+        (un-flattened verdicts, per-request stats)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("collision request still queued/in flight")
+        if self._error is not None:
+            raise self._error
+        return self._value, self._stats
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+
+@dataclasses.dataclass
+class _Pending:
+    plan: QueryPlan
+    ticket: BatchTicket
+    t_submit: float
+
+
+_STOP = object()
+
+
+def _pad_bucket(n: int, floor: int = 64) -> int:
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+class RequestBatcher:
+    """Coalesce concurrent small plans into single engine launches.
+
+    ``engine`` is any :class:`repro.engine.executor.CollisionEngine`
+    bound to ONE scene — including a sharded one (``cfg.shards``), which
+    is how the service stacks continuous batching on top of the device
+    mesh.  Accepts boolean single-scene plans of any workload kind; the
+    verdicts come back through each plan's own ``unflatten`` recipe, so
+    a trajectory client gets per-waypoint flags while an OBB-set client
+    gets per-query booleans out of the same coalesced launch.
+    """
+
+    def __init__(self, engine: CollisionEngine, max_batch: int = 1024,
+                 max_wait_ms: float = 2.0, pad_pow2: bool = True):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.pad_pow2 = pad_pow2
+        #: Aggregate engine counters over every launch (includes pads).
+        self.totals = Counters()
+        self.num_launches = 0
+        self._queue: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._closed = False
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="collision-batcher")
+        self._worker.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, plan_or_obbs) -> BatchTicket:
+        """Enqueue one request; returns a ticket to block on.
+
+        Takes a lowered boolean plan, or bare :class:`OBBs` as shorthand
+        for ``plan_queries``.
+        """
+        plan = (plan_queries(plan_or_obbs)
+                if isinstance(plan_or_obbs, OBBs) else plan_or_obbs)
+        if plan.grouped:
+            raise ValueError(
+                "the batcher coalesces boolean plans; owner/payload "
+                "verdict groups cannot share a pool with other requests")
+        if plan.num_scenes != 1:
+            raise ValueError(
+                "the batcher serves single-scene plans against the "
+                "engine's bound scene")
+        if self._closed:
+            raise RuntimeError("batcher is closed")
+        pending = _Pending(plan, BatchTicket(), time.perf_counter())
+        self._queue.put(pending)
+        return pending.ticket
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain queued requests, then stop the worker."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._queue.put(_STOP)
+        self._worker.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------------
+    def _run(self):
+        while True:
+            first = self._queue.get()
+            if first is _STOP:
+                return
+            batch = [first]
+            total = first.plan.num_queries
+            deadline = time.perf_counter() + self.max_wait_s
+            stop = False
+            while total < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    stop = True
+                    break
+                batch.append(nxt)
+                total += nxt.plan.num_queries
+            self._launch(batch)
+            if stop:
+                return
+
+    def _pad_obbs(self, n: int) -> OBBs:
+        """Degenerate pad queries: point-sized OBBs far outside the scene
+        AABB, so the root-cell test fails and each pad retires at level 0
+        with one node visit of work."""
+        lo = np.asarray(self.engine.octree.scene_lo, np.float32)
+        far = np.broadcast_to(lo - np.float32(1e6), (n, 3))
+        return OBBs(center=np.ascontiguousarray(far),
+                    half=np.full((n, 3), 1e-6, np.float32),
+                    rot=np.broadcast_to(np.eye(3, dtype=np.float32),
+                                        (n, 3, 3)))
+
+    def _launch(self, batch: List[_Pending]):
+        t_launch = time.perf_counter()
+        try:
+            c = [np.asarray(p.plan.obb_c) for p in batch]
+            h = [np.asarray(p.plan.obb_h) for p in batch]
+            r = [np.asarray(p.plan.obb_r) for p in batch]
+            live = sum(a.shape[0] for a in c)
+            pad = (_pad_bucket(live) - live) if self.pad_pow2 else 0
+            if pad:
+                po = self._pad_obbs(pad)
+                c.append(np.asarray(po.center))
+                h.append(np.asarray(po.half))
+                r.append(np.asarray(po.rot))
+            pool = OBBs(center=np.concatenate(c), half=np.concatenate(h),
+                        rot=np.concatenate(r))
+            verdict, counters = self.engine.execute(plan_queries(pool))
+            counters.pad_queries += pad
+            t_done = time.perf_counter()
+            with self._lock:
+                self.totals.merge(counters)
+                self.num_launches += 1
+            off = 0
+            for p in batch:
+                q = p.plan.num_queries
+                stats = RequestStats(
+                    wait_s=t_launch - p.t_submit,
+                    exec_s=t_done - t_launch,
+                    total_s=t_done - p.t_submit,
+                    batch_requests=len(batch), batch_queries=live,
+                    pad_queries=pad)
+                p.ticket._value = p.plan.unflatten(verdict[off:off + q])
+                p.ticket._stats = stats
+                p.ticket._error = None
+                p.ticket._event.set()
+                off += q
+        except BaseException as e:                    # noqa: BLE001
+            for p in batch:
+                p.ticket._error = e
+                p.ticket._event.set()

@@ -90,12 +90,25 @@ class EngineConfig:
     # False = force the resident block).
     vmem_budget: int = DEFAULT_VMEM_BUDGET
     stream_meta: Optional[bool] = None
+    # Sharded execution (DESIGN.md §6): split the flat pair pool over a
+    # 1-D device mesh of this many devices via shard_map.  None =
+    # single-device; any int (including 1) routes through the sharded
+    # path, whose verdicts and counters are bitwise-identical to
+    # single-device (CI-enforced on 8 virtual CPU devices).
+    shards: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown engine mode {self.mode!r}; allowed modes: "
                 f"{', '.join(MODES)}")
+        if self.shards is not None:
+            if self.mode not in DEVICE_MODES:
+                raise ValueError(
+                    f"shards={self.shards} needs a device-resident mode "
+                    f"({', '.join(DEVICE_MODES)}), not {self.mode!r}")
+            if self.shards < 1:
+                raise ValueError(f"shards must be >= 1, got {self.shards}")
 
     @property
     def early_exit(self) -> bool:
@@ -216,13 +229,19 @@ def _lane_owner(owner, q_idx):
 
 
 def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
-              use_spheres: bool, use_pallas: bool, owner=None, payload=None):
+              use_spheres: bool, use_pallas: bool, owner=None, payload=None,
+              num_valid=None):
     """Full multi-level wavefront traversal for one query set / one scene.
 
     Pure function of device arrays; composes under jit and vmap.  Returns
     (verdict, stats dict) — (M,) bool collide flags, or with owner /
     payload lanes the (M,) int32 payload-lane ``best`` array (cells past
     the plan's group count unused).
+
+    ``num_valid`` (traced int32, default all M) marks the pool's live
+    prefix: slots past it never seed the frontier and add zero work to
+    every counter, so a padded pool traverses bitwise like its unpadded
+    prefix (the sharded executor's per-shard padding relies on this).
     """
     M = obb_c.shape[0]
     grouped = owner is not None or payload is not None
@@ -293,7 +312,8 @@ def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
         return (level <= depth) & (n_live > 0)
 
     q0 = jnp.where(lane < M, lane, 0)
-    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(M), jnp.int32(capacity)),
+    nv = jnp.asarray(M if num_valid is None else num_valid, jnp.int32)
+    carry0 = (jnp.int32(0), jnp.minimum(nv, jnp.int32(capacity)),
               q0, jnp.zeros((capacity,), jnp.uint32),
               _verdict_init(M, grouped), _empty_stats())
     _, _, _, _, verdict, st = jax.lax.while_loop(cond, body, carry0)
@@ -303,7 +323,7 @@ def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
 def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
                     use_spheres: bool, use_pallas: bool,
                     use_pallas_traverse: Optional[bool], owner=None,
-                    payload=None):
+                    payload=None, num_valid=None):
     """Fused multi-level wavefront traversal (``mode="wavefront_fused"``).
 
     Same while_loop skeleton and work accounting as :func:`_traverse`, but
@@ -347,7 +367,8 @@ def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
         return (level <= depth) & (n_live > 0)
 
     q0 = jnp.where(lane < M, lane, 0)
-    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(M), jnp.int32(capacity)),
+    nv = jnp.asarray(M if num_valid is None else num_valid, jnp.int32)
+    carry0 = (jnp.int32(0), jnp.minimum(nv, jnp.int32(capacity)),
               q0, jnp.zeros((capacity,), jnp.int32),
               _verdict_init(M, owner is not None or payload is not None),
               _empty_stats())
@@ -410,11 +431,61 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_traversal_fn(mode: str, capacity: int, use_spheres: bool,
+                          use_pallas, use_pallas_traverse, streamed: bool,
+                          shards: int):
+    """Sharded sibling of :func:`_traversal_fn` (DESIGN.md §6).
+
+    One shard_map-wrapped jit-compiled traversal per (mode, capacity,
+    statics, shard count): the flat pool — padded by the executor so the
+    shard count divides it — splits into equal contiguous blocks over the
+    collision mesh, the scene tables replicate, and each device traverses
+    its block with the SAME per-shard frontier capacity a single-device
+    run would use, masking its pad slots via the live-prefix ``num_valid``
+    lane.  Work counters psum to the single-device values; ``overflow``
+    is a global max so the host escalation loop replays all shards in
+    lockstep (see :func:`repro.parallel.sharding.shard_collision_traversal`).
+    """
+    from repro.parallel.sharding import (make_collision_mesh,
+                                         shard_collision_traversal)
+    key = (mode, "sharded", capacity, use_spheres, use_pallas,
+           use_pallas_traverse, streamed, shards)
+
+    def local(nv, c, h, r, d):
+        _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+        if mode == "wavefront_persistent":
+            return traverse_whole(c, h, r, d, capacity,
+                                  use_spheres=use_spheres,
+                                  use_pallas=use_pallas_traverse,
+                                  streamed=streamed, num_valid=nv)
+        if mode == "wavefront_fused":
+            return _traverse_fused(c, h, r, d, capacity, use_spheres,
+                                   use_pallas, use_pallas_traverse,
+                                   num_valid=nv)
+        return _traverse(c, h, r, d, capacity, use_spheres, use_pallas,
+                         num_valid=nv)
+
+    mesh = make_collision_mesh(shards)
+    sm = jax.jit(shard_collision_traversal(local, mesh))
+
+    def call(counts, c, h, r, d):
+        # The wrapper's stats come back with a leading shard axis of
+        # identical (already psum/pmax-reduced) rows; read row 0 so the
+        # escalation loop and counter assembly see single-device shapes.
+        verdict, st = sm(counts, c, h, r, d)
+        return verdict, {k: v[0] for k, v in st.items()}
+
+    return call
+
+
 def traversal_cache_info() -> dict:
     """Cache observability: lru entries + per-key trace counts."""
     info = _traversal_fn.cache_info()
+    sharded = _sharded_traversal_fn.cache_info()
     return dict(hits=info.hits, misses=info.misses,
-                entries=info.currsize, traces=dict(_TRACE_COUNTS))
+                entries=info.currsize, sharded_entries=sharded.currsize,
+                traces=dict(_TRACE_COUNTS))
 
 
 def _stats_to_counters(st, mode: str, replays: int = 0,
@@ -618,7 +689,9 @@ class CollisionEngine:
             raise ValueError(
                 "owner/payload plans need a device-resident mode; lower to "
                 "a boolean plan and reduce on the host instead")
-        if self.cfg.mode == "naive":
+        if self.cfg.shards is not None:
+            value, counters = self._exec_sharded(plan)
+        elif self.cfg.mode == "naive":
             value, counters = self._exec_naive(plan)
         elif self.cfg.device_resident:
             value, counters = self._exec_device(plan)
@@ -701,6 +774,56 @@ class CollisionEngine:
             # Grouped verdicts are computed in a Q-sized buffer (owner ids
             # are compact); only the first G cells are meaningful.
             verdict = verdict[:plan.groups]
+        return verdict, counters
+
+    # ------------------------------------------------------------------
+    def _exec_sharded(self, plan: QueryPlan):
+        """Sharded execute path (``cfg.shards``, DESIGN.md §6).
+
+        The flat pool pads up to a multiple of the shard count (pad slots
+        ride in the LAST shard's tail), splits into equal contiguous
+        blocks over the collision mesh, and every device traverses its
+        block at the same frontier capacity the single-device run would
+        use — its true live count travels as a per-shard ``num_valid``
+        lane, so pads add zero work.  Verdicts and counters come back
+        bitwise-identical to single-device; escalation replays are
+        coordinated by the global max over per-shard overflow flags.
+
+        v1 serves single-scene boolean plans; ragged multi-scene pools
+        and owner/payload lanes stay single-device (their frontiers are
+        not partitioned by query slot).  The streamed metadata layout is
+        per-device-tile, so sharded runs pin the resident layout to keep
+        ``meta_rows`` partition-invariant.
+        """
+        cfg = self.cfg
+        shards = cfg.shards
+        Q = plan.num_queries
+        if plan.num_scenes != 1:
+            raise ValueError(
+                "sharded execution serves single-scene plans; multi-scene "
+                "pools are single-device for now (DESIGN.md §6)")
+        if plan.grouped:
+            raise ValueError(
+                "sharded execution serves boolean plans; owner/payload "
+                "verdict groups span shards and stay single-device")
+        q_shard = -(-Q // shards)
+        pad = q_shard * shards - Q
+        obb_c = jnp.pad(jnp.asarray(plan.obb_c), ((0, pad), (0, 0)))
+        obb_h = jnp.pad(jnp.asarray(plan.obb_h), ((0, pad), (0, 0)))
+        obb_r = jnp.pad(jnp.asarray(plan.obb_r), ((0, pad), (0, 0), (0, 0)))
+        counts = jnp.clip(
+            Q - jnp.arange(shards, dtype=jnp.int32) * q_shard, 0, q_shard)
+        memo_key = ("sharded", shards, Q, self._scene_sig)
+        verdict, st, cap, replays = _escalate(
+            lambda cap: _sharded_traversal_fn(
+                cfg.mode, cap, cfg.use_spheres, cfg.use_pallas_compact,
+                cfg.use_pallas_traverse, False, shards)(
+                    counts, obb_c, obb_h, obb_r, self.device_tree),
+            Q, self._capacity(Q), cfg, start=self._cap_memo.get(memo_key))
+        self._cap_memo[memo_key] = cap
+        counters = _stats_to_counters(st, cfg.mode, replays)
+        counters.pad_queries = pad
+        verdict = np.asarray(jax.device_get(verdict))[:Q]
         return verdict, counters
 
     # ------------------------------------------------------------------

@@ -110,18 +110,21 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def persist_kernel(scal_ref, nchunk_ref, obb_ref, meta_ref, payload_ref,
-                   collide_ref, perlevel_ref, hist_ref, scalars_ref, ring_ref,
-                   fq_scr, fn_scr, meta_scr=None, dma_sem=None, *,
-                   num_queries: int, bq: int, fcap: int, depth: int,
-                   n_max: int, ring_cap: int, use_spheres: bool,
+def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
+                   payload_ref, collide_ref, perlevel_ref, hist_ref,
+                   scalars_ref, ring_ref, fq_scr, fn_scr, meta_scr=None,
+                   dma_sem=None, *, num_queries: int, bq: int, fcap: int,
+                   depth: int, n_max: int, ring_cap: int, use_spheres: bool,
                    stream: bool):
     t = pl.program_id(0)
     L = depth + 1
     W = META_ROW_ALIGN
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, fcap), 1).reshape((fcap,))
     q_base = t * bq
-    n_q = jnp.clip(num_queries - q_base, 0, bq)
+    # Live-prefix mask: the SMEM valid count (<= the static num_queries
+    # pool width) excludes the sharded executor's pad slots — a fully
+    # padded tile seeds an empty frontier and contributes zero work.
+    n_q = jnp.clip(nvalid_ref[0] - q_base, 0, bq)
 
     scal = scal_ref[...]                       # [scene_lo(3), cells(L)]
     obb_tile = obb_ref[...]                    # (bq, 15) this tile's queries
@@ -322,7 +325,9 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
 
     Inputs: scal (3 + depth+1,) f32 SMEM [scene_lo xyz, per-level cells];
     per-level window chunk counts (depth+1,) int32 SMEM (zeros under the
-    resident layout); OBB table (num_tiles * bq, 15) f32, blocked per tile;
+    resident layout); live query count (1,) int32 SMEM (the pool's
+    live prefix — pad slots past it never seed, see the sharded
+    executor); OBB table (num_tiles * bq, 15) f32, blocked per tile;
     node_meta (depth+1, n_max, 4) int32 — a resident VMEM block, or an
     HBM-space (``pltpu.ANY``) table streamed through the ping/pong window
     scratch when ``stream``; payload (num_tiles * bq,) int32 per-query
@@ -361,6 +366,7 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),            # scal
             pl.BlockSpec(memory_space=pltpu.SMEM),            # window chunks
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # live count
             pl.BlockSpec((bq, 15), lambda t: (t, 0)),         # OBB tile
             meta_spec,                                        # node meta
             pl.BlockSpec((bq,), lambda t: (t,)),              # payload lane

@@ -108,7 +108,8 @@ def _window_rows(counts: jax.Array) -> jax.Array:
 def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
                   use_spheres: bool, bq: int, ring_cap: int,
                   interpret: bool, stream: bool, payload=None,
-                  grouped: bool = False) -> Tuple[jax.Array, dict]:
+                  grouped: bool = False,
+                  num_valid=None) -> Tuple[jax.Array, dict]:
     from repro.kernels.persist.kernel import make_persist_call
 
     M = obb_c.shape[0]
@@ -129,10 +130,12 @@ def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
         n_max = n_max + pad
     nchunks = (_window_rows(dev.counts) // META_ROW_ALIGN if stream
                else jnp.zeros((L,), jnp.int32))
+    nvalid = jnp.reshape(jnp.asarray(M if num_valid is None else num_valid,
+                                     jnp.int32), (1,))
     call = make_persist_call(M, num_tiles, bq, capacity, dev.depth, n_max,
                              ring_cap, use_spheres, interpret, stream)
-    words, per_level, hist, scalars, _ring = call(scal, nchunks, obb, meta,
-                                                  pay)
+    words, per_level, hist, scalars, _ring = call(scal, nchunks, nvalid,
+                                                  obb, meta, pay)
     best = words.reshape(-1)[:M]
     verdict = best if grouped else best != PAYLOAD_INF
     tot = jnp.sum(scalars, axis=0)
@@ -151,8 +154,8 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                    owner_of_query: Optional[jax.Array] = None,
                    payload: Optional[jax.Array] = None,
                    streamed: Optional[bool] = None,
-                   bq: int = 128, ring_cap: int = 256, w_min: int = 128
-                   ) -> Tuple[jax.Array, dict]:
+                   bq: int = 128, ring_cap: int = 256, w_min: int = 128,
+                   num_valid=None) -> Tuple[jax.Array, dict]:
     """Whole multi-level traversal for one flat query set.
 
     ``dev`` is a single-scene :class:`DeviceOctree`, or a
@@ -176,6 +179,12 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     hit); plans with a cross-slot owner lane are served by the reference
     arm, like the ragged multi-scene frontier, because a tile's queries
     would no longer own their verdict groups exclusively (DESIGN.md §3).
+
+    ``num_valid`` (traced int32, default all Q) marks the live prefix of
+    the pool: slots at and past it never seed the frontier and contribute
+    ZERO work to every counter, so a padded pool traverses bitwise like
+    its unpadded prefix.  The sharded executor pads every shard's local
+    pool to a common width and passes the true per-shard count.
     """
     ragged = isinstance(dev, MultiSceneOctree) or scene_of_query is not None
     assert not (isinstance(dev, MultiSceneOctree)
@@ -193,7 +202,8 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
         return _kernel_whole(obb_c, obb_h, obb_r, dev, capacity,
                              use_spheres, bq, ring_cap, interpret,
                              stream=streamed, payload=payload,
-                             grouped=payload is not None)
+                             grouped=payload is not None,
+                             num_valid=num_valid)
     # DeviceOctree and MultiSceneOctree expose the same three table fields;
     # scene_of_query switches the ref between scalar and per-pair gathers.
     # The streamed-window model only applies where the kernel could run
@@ -209,4 +219,5 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                               stream_bq=bq if model else None,
                               stream_window_rows=(
                                   _window_rows(dev.counts) if model
-                                  else None))
+                                  else None),
+                              num_valid=num_valid)

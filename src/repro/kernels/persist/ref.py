@@ -101,7 +101,8 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                        scene_of_query: Optional[jax.Array] = None,
                        w_min: int = 128, owner_of_query=None, payload=None,
                        stream_bq: Optional[int] = None,
-                       stream_window_rows: Optional[jax.Array] = None):
+                       stream_window_rows: Optional[jax.Array] = None,
+                       num_valid=None):
     """Whole-traversal reference arm; see module docstring for the contract.
 
     Args:
@@ -126,6 +127,13 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         to whole DMA chunks).  The ``meta_rows`` stat then counts the rows
         the per-tile window schedule fetches; without them it stays 0
         (resident layout / ragged multi-scene).
+      num_valid: optional live-prefix query count (int, possibly traced):
+        only slots ``[0, num_valid)`` of the pool seed the frontier; the
+        tail is padding that contributes ZERO work to any counter.  The
+        sharded executor pads every shard's pool to a common width and
+        passes each shard's true count here, which is what makes sharded
+        counters bitwise-equal to single-device (``None`` = all Q slots
+        are live).
     Returns:
       (verdict, stats dict) — the ``_traverse_fused`` contract: (Q,) bool
       collide flags, or the (Q,) ``best`` array for grouped calls.
@@ -250,13 +258,17 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         node0 = jnp.zeros((capacity,), jnp.int32)
     verdict0 = (jnp.full((Q,), PAYLOAD_INF, jnp.int32) if grouped
                 else jnp.zeros((Q,), bool))
+    nv = Q if num_valid is None else num_valid
     st0 = _empty_stats()
     if model_stream:
-        # Every tile is seeded non-empty (num_tiles = ceil(Q / bq)) and
-        # fetches its level-0 window before the first level runs.
-        st0["meta_rows"] = (num_tiles * stream_window_rows[0]).astype(
+        # Every tile holding at least one LIVE query (ceil(nv / bq) of the
+        # ceil(Q / bq) grid tiles; pads sit at the pool's tail) fetches its
+        # level-0 window before the first level runs.
+        nt_live = (jnp.asarray(nv, jnp.int32) + stream_bq - 1) // stream_bq
+        st0["meta_rows"] = (nt_live * stream_window_rows[0]).astype(
             jnp.int32)
-    carry0 = (jnp.int32(0), jnp.minimum(jnp.int32(Q), jnp.int32(capacity)),
+    carry0 = (jnp.int32(0),
+              jnp.minimum(jnp.asarray(nv, jnp.int32), jnp.int32(capacity)),
               q0, node0, verdict0, st0)
     out = jax.lax.while_loop(cond, body, carry0)
     return out[4], out[5]

@@ -1,66 +1,155 @@
-"""Serving launcher: prefill + batched greedy decode with KV caches.
+"""Collision-serving harness: N concurrent planner clients, one engine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --tokens 16
+The service stack (DESIGN.md §6): each synthetic client is a closed-loop
+planner issuing small query sets (``plan_queries`` over a handful of link
+OBBs); a :class:`repro.engine.batcher.RequestBatcher` coalesces whatever
+is in flight into single engine launches — optionally sharded over the
+device mesh (``--shards``) — and each client blocks on its ticket.  The
+harness reports the SLO quantities (:data:`SLO_METRICS`): client-observed
+p50/p99 latency and sustained queries/sec, plus batching effectiveness.
+
+  PYTHONPATH=src python -m repro.launch.serve --clients 8 --requests 32
+  ... --shards 4          # shard the coalesced pool over 4 devices
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config, get_smoke_config
-from repro.models import api
+import jax
+
+from repro.core.geometry import random_obbs
+from repro.core.octree import Octree, build_octree
+from repro.engine.batcher import RequestBatcher, RequestStats, _pad_bucket
+from repro.engine.executor import CollisionEngine, EngineConfig
+from repro.engine.plan import plan_queries
+
+#: SLO quantities the harness reports (drift-guarded against the
+#: DESIGN.md §6 SLO table): client-observed latency percentiles over
+#: ``total_s`` (admission wait + shared engine call) and sustained
+#: throughput over the timed window.
+SLO_METRICS = ("p50_ms", "p99_ms", "qps")
+
+
+def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
+                queries_per_request: int = 12, max_batch: int = 1024,
+                max_wait_ms: float = 2.0, mode: str = "wavefront_fused",
+                shards: Optional[int] = None, seed: int = 0,
+                engine: Optional[CollisionEngine] = None) -> dict:
+    """Drive ``clients`` closed-loop clients, ``requests`` requests each.
+
+    Every request is ``queries_per_request`` random OBBs against the bound
+    scene.  Returns a report dict: the :data:`SLO_METRICS` quantities,
+    requests/sec, batching effectiveness (mean requests and live queries
+    per launch, pad fraction), and the aggregate engine counters.
+    """
+    if engine is None:
+        engine = CollisionEngine(octree, EngineConfig(mode=mode,
+                                                      shards=shards))
+    # Pre-generate every request's OBBs so the timed window measures the
+    # service, not the client-side random number generation.
+    keys = jax.random.split(jax.random.PRNGKey(seed), clients * requests)
+    plans = [plan_queries(random_obbs(k, queries_per_request))
+             for k in keys]
+    stats: List[List[RequestStats]] = [[] for _ in range(clients)]
+    errors: List[BaseException] = []
+
+    # Warm the jit cache outside the timed window: the batcher pads every
+    # pool to a pow2 bucket, so pre-executing one pool per bucket width
+    # the coalesced launches can hit keeps compiles out of the latency
+    # percentiles.
+    top = _pad_bucket(min(max(clients * requests, 1) * queries_per_request,
+                          max_batch + queries_per_request))
+    width = _pad_bucket(1)
+    while width <= top:
+        engine.execute(plan_queries(
+            random_obbs(jax.random.PRNGKey(seed + 1), width)))
+        width <<= 1
+
+    with RequestBatcher(engine, max_batch=max_batch,
+                        max_wait_ms=max_wait_ms) as batcher:
+        batcher.submit(plans[0]).result(timeout=600)   # thread-path warmup
+        launches0 = batcher.num_launches
+
+        def client(ci: int):
+            try:
+                for ri in range(requests):
+                    ticket = batcher.submit(plans[ci * requests + ri])
+                    _, st = ticket.result(timeout=600)
+                    stats[ci].append(st)
+            except BaseException as e:              # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(ci,))
+                   for ci in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        totals = batcher.totals
+        launches = batcher.num_launches - launches0
+    if errors:
+        raise errors[0]
+
+    flat = [s for per_client in stats for s in per_client]
+    lat_ms = np.asarray([s.total_s for s in flat]) * 1e3
+    n_req = len(flat)
+    n_q = n_req * queries_per_request
+    mean_req_per_launch = np.mean([s.batch_requests for s in flat])
+    return {
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "qps": n_q / wall,
+        "rps": n_req / wall,
+        "wall_s": wall,
+        "clients": clients,
+        "requests": n_req,
+        "queries": n_q,
+        "launches": launches,
+        "mean_requests_per_launch": float(mean_req_per_launch),
+        "mean_live_queries_per_launch": n_q / max(launches, 1),
+        "pad_fraction": totals.pad_queries / max(totals.num_queries, 1),
+        "counters": totals,
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4_9b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--points", type=int, default=20000)
+    ap.add_argument("--depth", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="requests per client")
+    ap.add_argument("--queries", type=int, default=12,
+                    help="query OBBs per request")
+    ap.add_argument("--max-batch", type=int, default=1024)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--mode", default="wavefront_fused")
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = (get_config(args.arch) if args.full
-           else get_smoke_config(args.arch))
-    rng = np.random.RandomState(0)
-    B, S = args.batch, args.prompt_len
-    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)))}
-    if cfg.family == "vlm":
-        batch["patch_embeds"] = jnp.asarray(rng.normal(
-            size=(B, cfg.num_patches, cfg.d_model)).astype(np.float32))
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(rng.normal(
-            size=(B, S, cfg.d_model)).astype(np.float32))
-
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
-    prefill = jax.jit(api.make_prefill_fn(cfg, max_len=S + args.tokens + 8))
-    decode = jax.jit(api.make_decode_fn(cfg))
-
-    t0 = time.perf_counter()
-    logits, caches = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-
-    offset = cfg.num_patches if cfg.family == "vlm" else 0
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.tokens - 1):
-        pos = jnp.asarray(S + offset + i, jnp.int32)
-        logits, caches = decode(params, tok, pos, caches)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(out[-1])
-    t_decode = time.perf_counter() - t0
-    toks = np.stack([np.asarray(t) for t in out], 1)
-    print(f"prefill {B}x{S}: {t_prefill*1e3:.1f} ms; "
-          f"decode {args.tokens} steps: {t_decode*1e3:.1f} ms "
-          f"({t_decode/max(args.tokens-1,1)*1e3:.1f} ms/tok)")
-    print("sample:", toks[0][:16].tolist())
+    rs = np.random.RandomState(args.seed)
+    pts = rs.uniform(-1, 1, (args.points, 3)).astype(np.float32)
+    tree = build_octree(pts, depth=args.depth)
+    rep = run_service(
+        tree, clients=args.clients, requests=args.requests,
+        queries_per_request=args.queries, max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms, mode=args.mode, shards=args.shards,
+        seed=args.seed)
+    print(f"served {rep['requests']} requests / {rep['queries']} queries "
+          f"from {rep['clients']} clients in {rep['wall_s']:.2f}s")
+    print(f"latency p50 {rep['p50_ms']:.2f} ms  p99 {rep['p99_ms']:.2f} ms")
+    print(f"throughput {rep['qps']:.0f} queries/s  {rep['rps']:.0f} req/s")
+    print(f"batching: {rep['launches']} launches, "
+          f"{rep['mean_requests_per_launch']:.1f} req/launch, "
+          f"pad fraction {rep['pad_fraction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ and records the roofline-relevant numbers to
 benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun               # all cells
+  PYTHONPATH=src python -m repro.lm.dryrun               # all cells
   ... --arch glm4_9b --shape train_4k --mesh single          # one cell
   ... --force                                                # recompute
 """

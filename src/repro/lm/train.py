@@ -4,7 +4,7 @@ CPU-runnable at smoke scale (the default) and mesh-ready at production
 scale: the same code path lowers for the 256/512-chip meshes in the
 dry-run.
 
-  PYTHONPATH=src python -m repro.launch.train --arch glm4_9b --steps 20
+  PYTHONPATH=src python -m repro.lm.train --arch glm4_9b --steps 20
   ... --resume            # continue from the latest committed checkpoint
 """
 from __future__ import annotations

@@ -271,3 +271,60 @@ def constrain_activations(x: jax.Array, mesh: Mesh,
             x, NamedSharding(mesh, P(F, "model", None)))
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(F, None, None)))
+
+
+# ---------------------------------------------------------------------------
+# Collision service: shard the canonical flat pair pool (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+#: The collision mesh's single axis: the flat query pool is split over it,
+#: the scene octree is replicated on every device.
+COLLISION_AXIS = "shard"
+
+
+def make_collision_mesh(shards: int) -> Mesh:
+    """1-D mesh of ``shards`` devices for sharded collision traversal."""
+    devs = jax.devices()
+    if not 1 <= shards <= len(devs):
+        raise ValueError(
+            f"collision mesh wants {shards} device(s) but the backend "
+            f"exposes {len(devs)}")
+    return Mesh(devs[:shards], (COLLISION_AXIS,))
+
+
+def shard_collision_traversal(fn, mesh: Mesh):
+    """shard_map a single-scene traversal over the collision mesh.
+
+    ``fn(num_valid, c, h, r, dev) -> (verdict, stats)`` is the per-device
+    traversal body; the wrapper maps it over :data:`COLLISION_AXIS` with
+    the (padded) query pool split into equal contiguous blocks and the
+    scene tables replicated, then reduces the stats dict so the caller
+    sees the same values a single-device run would produce:
+
+      * every work counter is summed over shards (traversal of each query
+        is independent, so partitioning the pool partitions the sums —
+        bitwise equality, CI-enforced);
+      * ``overflow`` takes the **global max** over per-shard overflow
+        flags — the executor's escalation loop replays ALL shards at 4x
+        capacity as soon as any one of them spilled, keeping the replay
+        ladder (and therefore the traced capacities) globally coordinated.
+
+    The wrapped callable takes ``(counts (shards,) int32, c, h, r, dev)``
+    and returns the still-sharded verdict plus the reduced stats with a
+    leading shard axis of identical rows (the traversal's ``while_loop``
+    has no shard_map replication rule, so the wrapper runs with
+    ``check_rep=False`` and cannot declare replicated ``P()`` outputs —
+    callers read row 0).
+    """
+    axis = COLLISION_AXIS
+
+    def local(counts, c, h, r, dev):
+        verdict, st = fn(counts[0], c, h, r, dev)
+        red = {k: (jax.lax.pmax(v, axis) if k == "overflow"
+                   else jax.lax.psum(v, axis))[None]
+               for k, v in st.items()}
+        return verdict, red
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+                     out_specs=(P(axis), P(axis)), check_rep=False)

@@ -1,14 +1,18 @@
-"""Docs drift guard: the engine-mode, workload, and metadata-residency
-tables in DESIGN.md §2/§3 and README.md duplicate each other by design
-(one is the architecture doc, one the landing page); these tests keep
-both in lockstep with ``MODES``, the plan layer's ``WORKLOADS``, and the
-persistent megakernel's ``META_LAYOUTS``."""
+"""Docs drift guard: the engine-mode, workload, metadata-residency,
+admission-policy, and SLO tables in DESIGN.md §2/§3/§6 and README.md
+duplicate each other by design (one is the architecture doc, one the
+landing page); these tests keep both in lockstep with ``MODES``, the
+plan layer's ``WORKLOADS``, the persistent megakernel's
+``META_LAYOUTS``, the batcher's ``ADMISSION_KNOBS``, and the serve
+harness's ``SLO_METRICS``."""
 import os
 import re
 
 from repro.core.wavefront import MODES
+from repro.engine.batcher import ADMISSION_KNOBS
 from repro.engine.plan import WORKLOADS
 from repro.kernels.persist.ops import META_LAYOUTS
+from repro.launch.serve import SLO_METRICS
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -20,7 +24,7 @@ def _mode_table_cells(path: str) -> set:
     cells = set()
     with open(os.path.join(_ROOT, path)) as f:
         for line in f:
-            m = re.match(r"\s*\|\s*`([a-z_]+)`\s*\|", line)
+            m = re.match(r"\s*\|\s*`([a-z0-9_]+)`\s*\|", line)
             if m:
                 cells.add(m.group(1))
     return cells
@@ -62,3 +66,19 @@ def test_readme_residency_table_lists_every_meta_layout():
     for layout in META_LAYOUTS:
         assert layout in cells, \
             f"README residency/streaming table is missing `{layout}`"
+
+
+def test_design_serving_section_lists_knobs_and_slos():
+    cells = _mode_table_cells("DESIGN.md")
+    for knob in ADMISSION_KNOBS:
+        assert knob in cells, f"DESIGN.md §6 admission table misses `{knob}`"
+    for metric in SLO_METRICS:
+        assert metric in cells, f"DESIGN.md §6 SLO table misses `{metric}`"
+
+
+def test_readme_service_section_lists_knobs_and_slos():
+    cells = _mode_table_cells("README.md")
+    for knob in ADMISSION_KNOBS:
+        assert knob in cells, f"README admission table misses `{knob}`"
+    for metric in SLO_METRICS:
+        assert metric in cells, f"README SLO table misses `{metric}`"

@@ -20,7 +20,7 @@ from repro.data.robotics import make_scene, scene_trajectories
 from repro.kernels.persist.ops import (META_LAYOUTS, choose_meta_layout,
                                        meta_stream_bytes, meta_table_bytes,
                                        traverse_whole)
-from repro.kernels.persist.ref import frontier_widths, traverse_whole_ref
+from repro.kernels.persist.ref import frontier_widths
 
 WORK_FIELDS = ("nodes_traversed", "leaf_tests", "axis_tests_executed",
                "axis_tests_decoded", "sphere_tests", "frontier_overflow")

@@ -78,7 +78,9 @@ def test_collective_parser_loop_aware():
     script = textwrap.dedent(f"""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import sys; sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
+    import sys
+    sys.path.insert(
+        0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.launch.mesh import use_mesh
