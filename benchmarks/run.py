@@ -668,6 +668,16 @@ def fig_serve(S):
          f"req_per_launch={rep['mean_requests_per_launch']:.1f};"
          f"live_q_per_launch={rep['mean_live_queries_per_launch']:.0f};"
          f"pad_fraction={rep['pad_fraction']:.2f}")
+    # Reliability counters (DESIGN.md §7): all zero on this healthy run —
+    # the row existing is the point (check_regression would flag a chaos-
+    # mode counter leaking into the clean-path service).
+    emit("fig_serve/reliability", 0.0,
+         f"submitted={rep['submitted']};completed={rep['requests']};"
+         f"failed={rep['failed']};rejected={rep['rejected']};"
+         f"retried={rep['retried']};"
+         f"deadline_missed={rep['deadline_missed']};"
+         f"launch_splits={rep['launch_splits']};"
+         f"worker_restarts={rep['worker_restarts']}")
 
 
 # ---------------------------------------------------------------------------

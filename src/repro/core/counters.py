@@ -104,6 +104,15 @@ class Counters:
     #                                     batch coalescing (zero work each —
     #                                     the live-prefix num_valid lane masks
     #                                     them — but they occupy pool width)
+    # Service reliability counters (DESIGN.md §7): accumulated by the
+    # RequestBatcher, reported in the fig_serve SLO rows.
+    rejected: int = 0                   # shed at admission (malformed plan,
+    #                                     full queue, or submit after close)
+    retried: int = 0                    # transient-failure launch retries
+    deadline_missed: int = 0            # failed pre-launch: deadline unmeetable
+    launch_splits: int = 0              # bisect-retry splits isolating a
+    #                                     poisoned request from co-riders
+    worker_restarts: int = 0            # watchdog-detected worker deaths
     wall_time_s: float = 0.0
 
     def merge_exit_codes(self, codes: np.ndarray, valid: np.ndarray) -> None:
@@ -131,6 +140,11 @@ class Counters:
         self.escalations += other.escalations
         self.meta_rows_streamed += other.meta_rows_streamed
         self.pad_queries += other.pad_queries
+        self.rejected += other.rejected
+        self.retried += other.retried
+        self.deadline_missed += other.deadline_missed
+        self.launch_splits += other.launch_splits
+        self.worker_restarts += other.worker_restarts
         self.exit_histogram += other.exit_histogram
         a, b = self.nodes_per_level, other.nodes_per_level
         self.nodes_per_level = [

@@ -15,7 +15,35 @@ against DESIGN.md §6):
 * ``max_batch`` — launch as soon as the coalesced pool holds this many
   query slots (one oversized request still launches alone);
 * ``max_wait_ms`` — never hold the FIRST queued request longer than this
-  before launching, whatever the pool size.
+  before launching, whatever the pool size;
+* ``max_queue`` — bounded admission: a submit that finds this many
+  requests already queued is shed immediately with :class:`Overloaded`
+  instead of growing an unbounded backlog;
+* ``launch_timeout_s`` — liveness bound on one engine call: the launch
+  runs on a monitored thread, and a call that outlives the bound fails
+  its batch with :class:`LaunchStalled` instead of hanging every client;
+* ``max_retries`` — transient launch failures (RESOURCE_EXHAUSTED /
+  simulated OOM) retry up to this many times with exponential backoff,
+  shrinking an oversized pow2 pad bucket toward the exact pool width.
+
+Reliability contract (DESIGN.md §7): every ``submit`` resolves — to a
+verdict, or to a typed :class:`ServiceError` — and a poisoned request
+never fails an innocent co-batched one:
+
+* plans are validated at submit (:func:`repro.engine.plan.validate_plan`)
+  so malformed OBBs die at admission, not inside a shared launch;
+* a launch that still fails **bisect-retries**: the batch splits in half
+  and each half relaunches, recursively, until the poisoned request is
+  isolated and errors alone (``Counters.launch_splits`` counts splits);
+* per-request deadlines (``submit(..., deadline_ms=...)``) shed requests
+  whose deadline cannot be met — queued time plus the EWMA of recent
+  launch exec times already past due — with :class:`DeadlineExceeded`
+  BEFORE wasting a launch on them;
+* a watchdog thread detects a dead worker, fails its unresolved in-flight
+  tickets with :class:`WorkerDied`, and restarts the worker so the
+  service self-heals (``Counters.worker_restarts``);
+* ``close()`` fails everything still queued (or racing the drain) with
+  :class:`BatcherClosed`; submit after close raises the same type.
 
 The coalesced pool pads up to a power-of-two bucket (``pad_pow2``) with
 degenerate OBBs far outside the scene — they fail the root test and die
@@ -26,7 +54,8 @@ reported in ``Counters.pad_queries``.
 Per-request latency accounting (:class:`RequestStats`): ``wait_s`` is
 admission (submit -> launch), ``exec_s`` the shared engine call,
 ``total_s`` their sum — the quantities the serve harness turns into
-p50/p99 SLO rows.
+p50/p99 SLO rows — plus the reliability fields ``retries`` (transient
+relaunches the request rode through) and ``splits`` (bisect depth).
 """
 from __future__ import annotations
 
@@ -41,11 +70,42 @@ import numpy as np
 from repro.core.counters import Counters
 from repro.core.geometry import OBBs
 from repro.engine.executor import CollisionEngine
-from repro.engine.plan import QueryPlan, plan_queries
+from repro.engine.plan import (PlanValidationError, QueryPlan, plan_queries,
+                               validate_plan)
 
 #: Admission-policy knobs of the batcher (drift-guarded against the
 #: DESIGN.md §6 admission table).
-ADMISSION_KNOBS = ("max_batch", "max_wait_ms")
+ADMISSION_KNOBS = ("max_batch", "max_wait_ms", "max_queue",
+                   "launch_timeout_s", "max_retries")
+
+#: Lifecycle of a submitted request's ticket (:attr:`BatchTicket.state`).
+TICKET_STATES = ("queued", "launched", "done")
+
+
+class ServiceError(RuntimeError):
+    """Base of every typed error the service resolves a ticket with."""
+
+
+class BatcherClosed(ServiceError):
+    """The batcher shut down before (or while) this request could launch."""
+
+
+class Overloaded(ServiceError):
+    """Admission queue is full: the request was shed at submit."""
+
+
+class DeadlineExceeded(ServiceError):
+    """The request's deadline could not be met; it was never launched."""
+
+
+class LaunchStalled(ServiceError):
+    """An engine call outlived ``launch_timeout_s``; the batch was failed
+    so no client hangs on a wedged device."""
+
+
+class WorkerDied(ServiceError):
+    """The worker thread died mid-launch; the watchdog failed this ticket
+    and restarted the worker."""
 
 
 @dataclasses.dataclass
@@ -58,23 +118,44 @@ class RequestStats:
     batch_requests: int    # requests coalesced into the launch
     batch_queries: int     # live query slots in the coalesced pool
     pad_queries: int       # dead pow2-bucket pad slots in the pool
+    retries: int = 0       # transient-failure relaunches before success
+    splits: int = 0        # bisect-retry depth the request rode through
 
 
 class BatchTicket:
-    """Handle returned by :meth:`RequestBatcher.submit`."""
+    """Handle returned by :meth:`RequestBatcher.submit`.
+
+    Resolution is idempotent and first-wins: whichever of the worker, the
+    bisect-retry path, or the watchdog resolves the ticket first decides
+    the outcome, so an abandoned stalled launch completing late can never
+    overwrite the error the client already saw.
+    """
 
     def __init__(self):
         self._event = threading.Event()
+        self._lock = threading.Lock()
         self._value: Optional[np.ndarray] = None
         self._stats: Optional[RequestStats] = None
         self._error: Optional[BaseException] = None
+        self._state = "queued"
+
+    @property
+    def state(self) -> str:
+        """``"queued"`` (awaiting admission), ``"launched"`` (riding an
+        engine call), or ``"done"`` (:meth:`result` will not block)."""
+        return self._state
 
     def result(self, timeout: Optional[float] = None
                ) -> Tuple[np.ndarray, RequestStats]:
-        """Block until the batch the request rode in completes; returns
-        (un-flattened verdicts, per-request stats)."""
+        """Block until the request resolves; returns (un-flattened
+        verdicts, per-request stats) or raises the typed error the
+        request failed with.  Safe to call again after a
+        :class:`TimeoutError` — the ticket stays live until resolved.
+        """
         if not self._event.wait(timeout):
-            raise TimeoutError("collision request still queued/in flight")
+            raise TimeoutError(
+                f"collision request not done after {timeout}s "
+                f"(state: {self._state})")
         if self._error is not None:
             raise self._error
         return self._value, self._stats
@@ -82,12 +163,37 @@ class BatchTicket:
     def done(self) -> bool:
         return self._event.is_set()
 
+    # -- resolution (batcher-internal, first call wins) -------------------
+    def _mark_launched(self) -> None:
+        with self._lock:
+            if not self._event.is_set():
+                self._state = "launched"
+
+    def _resolve(self, value, stats: RequestStats) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._value, self._stats = value, stats
+            self._state = "done"
+            self._event.set()
+            return True
+
+    def _fail(self, error: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._error = error
+            self._state = "done"
+            self._event.set()
+            return True
+
 
 @dataclasses.dataclass
 class _Pending:
     plan: QueryPlan
     ticket: BatchTicket
     t_submit: float
+    t_deadline: Optional[float] = None   # absolute perf_counter deadline
 
 
 _STOP = object()
@@ -100,43 +206,91 @@ def _pad_bucket(n: int, floor: int = 64) -> int:
     return b
 
 
+def _is_transient(e: BaseException) -> bool:
+    """Transient = worth retrying the SAME batch: allocator pressure, not
+    a poisoned request.  Matches the runtime's RESOURCE_EXHAUSTED string
+    (real XLA OOMs) and anything flagged ``transient`` (injected ones)."""
+    return bool(getattr(e, "transient", False)) \
+        or "RESOURCE_EXHAUSTED" in str(e)
+
+
 class RequestBatcher:
     """Coalesce concurrent small plans into single engine launches.
 
     ``engine`` is any :class:`repro.engine.executor.CollisionEngine`
     bound to ONE scene — including a sharded one (``cfg.shards``), which
     is how the service stacks continuous batching on top of the device
-    mesh.  Accepts boolean single-scene plans of any workload kind; the
-    verdicts come back through each plan's own ``unflatten`` recipe, so
-    a trajectory client gets per-waypoint flags while an OBB-set client
-    gets per-query booleans out of the same coalesced launch.
+    mesh — or a :class:`repro.engine.faults.FaultyEngine` wrapping one
+    (chaos mode).  Accepts boolean single-scene plans of any workload
+    kind; the verdicts come back through each plan's own ``unflatten``
+    recipe, so a trajectory client gets per-waypoint flags while an OBB
+    client gets per-query booleans out of the same coalesced launch.
     """
 
     def __init__(self, engine: CollisionEngine, max_batch: int = 1024,
-                 max_wait_ms: float = 2.0, pad_pow2: bool = True):
+                 max_wait_ms: float = 2.0, pad_pow2: bool = True,
+                 max_queue: int = 4096,
+                 launch_timeout_s: Optional[float] = None,
+                 max_retries: int = 2, retry_backoff_ms: float = 1.0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
         self.pad_pow2 = pad_pow2
-        #: Aggregate engine counters over every launch (includes pads).
+        self.max_queue = max_queue
+        self.launch_timeout_s = launch_timeout_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_ms / 1e3
+        #: Aggregate engine counters over every launch (includes pads),
+        #: plus the §7 reliability counters (rejected/retried/
+        #: deadline_missed/launch_splits/worker_restarts).
         self.totals = Counters()
         self.num_launches = 0
         self._queue: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._closed = False
-        self._worker = threading.Thread(target=self._run, daemon=True,
-                                        name="collision-batcher")
-        self._worker.start()
+        self._closed_event = threading.Event()
+        # Requests the CURRENT launch is carrying: the watchdog fails the
+        # unresolved ones if the worker dies under them.
+        self._inflight: List[_Pending] = []
+        # EWMA of recent launch exec times: the deadline-shedding estimate.
+        self._exec_ewma: Optional[float] = None
+        self._worker = self._start_worker()
+        self._watchdog = threading.Thread(target=self._watch, daemon=True,
+                                          name="collision-watchdog")
+        self._watchdog.start()
+
+    def _start_worker(self) -> threading.Thread:
+        t = threading.Thread(target=self._run, daemon=True,
+                             name="collision-batcher")
+        t.start()
+        return t
 
     # ------------------------------------------------------------------
-    def submit(self, plan_or_obbs) -> BatchTicket:
+    def submit(self, plan_or_obbs, deadline_ms: Optional[float] = None,
+               validate: bool = True) -> BatchTicket:
         """Enqueue one request; returns a ticket to block on.
 
         Takes a lowered boolean plan, or bare :class:`OBBs` as shorthand
-        for ``plan_queries``.
+        for ``plan_queries``.  ``deadline_ms`` is a client-observed
+        latency budget from NOW: a request the batcher cannot launch in
+        time fails fast with :class:`DeadlineExceeded` instead of riding
+        a launch whose result nobody wants.  ``validate=False`` skips the
+        malformed-plan admission check (trusted in-process callers only;
+        the chaos suite uses it to prove what validation protects
+        against).
+
+        Raises :class:`BatcherClosed` after :meth:`close`,
+        :class:`Overloaded` when the admission queue is full, and
+        :class:`repro.engine.plan.PlanValidationError` for malformed
+        plans — all before the request can touch a shared launch.
         """
+        t_submit = time.perf_counter()
         plan = (plan_queries(plan_or_obbs)
                 if isinstance(plan_or_obbs, OBBs) else plan_or_obbs)
         if plan.grouped:
@@ -148,19 +302,51 @@ class RequestBatcher:
                 "the batcher serves single-scene plans against the "
                 "engine's bound scene")
         if self._closed:
-            raise RuntimeError("batcher is closed")
-        pending = _Pending(plan, BatchTicket(), time.perf_counter())
+            raise BatcherClosed("batcher is closed")
+        if validate:
+            try:
+                validate_plan(plan)
+            except PlanValidationError:
+                with self._lock:
+                    self.totals.rejected += 1
+                raise
+        if self._queue.qsize() >= self.max_queue:
+            with self._lock:
+                self.totals.rejected += 1
+            raise Overloaded(
+                f"admission queue full ({self.max_queue} requests "
+                f"queued); shedding new arrivals")
+        deadline = (None if deadline_ms is None
+                    else t_submit + deadline_ms / 1e3)
+        pending = _Pending(plan, BatchTicket(), t_submit, deadline)
         self._queue.put(pending)
+        if self._closed:
+            # Raced close(): the final drain may already have run past
+            # the queue, so fail the ticket here (first-wins makes a
+            # double fail harmless) and surface the typed error.
+            if pending.ticket._fail(BatcherClosed(
+                    "batcher closed while this request was being "
+                    "submitted")):
+                with self._lock:
+                    self.totals.rejected += 1
+            raise BatcherClosed("batcher is closed")
         return pending.ticket
 
     def close(self, timeout: float = 30.0) -> None:
-        """Drain queued requests, then stop the worker."""
+        """Launch what is already queued, then stop the worker; everything
+        that cannot launch fails with :class:`BatcherClosed` — no ticket
+        is ever silently dropped."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
         self._queue.put(_STOP)
         self._worker.join(timeout)
+        self._closed_event.set()
+        self._watchdog.join(timeout)
+        # Final drain: anything still queued (worker dead/stuck, or a
+        # submit that raced the worker's own drain) fails typed.
+        self._drain_closed()
 
     def __enter__(self):
         return self
@@ -169,10 +355,59 @@ class RequestBatcher:
         self.close()
 
     # ------------------------------------------------------------------
+    def _drain_closed(self) -> None:
+        """Fail every request still in the admission queue: the batcher is
+        closing and they will never launch."""
+        while True:
+            try:
+                p = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if p is _STOP:
+                continue
+            if p.ticket._fail(BatcherClosed(
+                    "batcher closed before this request launched")):
+                with self._lock:
+                    self.totals.rejected += 1
+
+    def _watch(self) -> None:
+        """Liveness watchdog: a worker that dies (an exception escaping
+        the per-launch containment — a real bug, or an injected
+        ``WorkerKill``) leaves its batch's tickets unresolved and every
+        queued client stranded.  Detect it, fail the unresolved in-flight
+        tickets with a diagnosable :class:`WorkerDied`, and restart the
+        worker so queued and future requests keep being served."""
+        while not self._closed_event.wait(0.05):
+            if self._worker.is_alive():
+                continue
+            with self._lock:
+                if self._closed:
+                    return
+                self.totals.worker_restarts += 1
+                inflight, self._inflight = self._inflight, []
+            for p in inflight:
+                p.ticket._fail(WorkerDied(
+                    "collision-batcher worker died mid-launch; the "
+                    "watchdog restarted it — resubmit if the request "
+                    "is still wanted"))
+            self._worker = self._start_worker()
+
+    # ------------------------------------------------------------------
     def _run(self):
+        try:
+            self._run_inner()
+        except BaseException as e:                # noqa: BLE001
+            if not getattr(e, "fatal", False):
+                raise      # real bug: traceback + watchdog restart
+            # Injected worker death (chaos): die quietly — the thread
+            # ending WITHOUT resolving its tickets is the scenario, and
+            # the watchdog is the handler; no traceback spam.
+
+    def _run_inner(self):
         while True:
             first = self._queue.get()
             if first is _STOP:
+                self._drain_closed()
                 return
             batch = [first]
             total = first.plan.num_queries
@@ -191,9 +426,30 @@ class RequestBatcher:
                     break
                 batch.append(nxt)
                 total += nxt.plan.num_queries
-            self._launch(batch)
+            self._admit(batch)
             if stop:
+                self._drain_closed()
                 return
+
+    def _admit(self, batch: List[_Pending]) -> None:
+        """Deadline shedding at launch time: a request whose budget is
+        already spent — or will be by the end of an average engine call —
+        is failed fast, never launched dead."""
+        now = time.perf_counter()
+        est = self._exec_ewma or 0.0
+        live = []
+        for p in batch:
+            if p.t_deadline is not None and now + est > p.t_deadline:
+                with self._lock:
+                    self.totals.deadline_missed += 1
+                p.ticket._fail(DeadlineExceeded(
+                    f"deadline unmeetable: {1e3 * (now - p.t_submit):.1f}ms "
+                    f"queued + ~{1e3 * est:.1f}ms estimated exec exceeds "
+                    f"the {1e3 * (p.t_deadline - p.t_submit):.1f}ms budget"))
+            else:
+                live.append(p)
+        if live:
+            self._launch(live)
 
     def _pad_obbs(self, n: int) -> OBBs:
         """Degenerate pad queries: point-sized OBBs far outside the scene
@@ -206,42 +462,120 @@ class RequestBatcher:
                     rot=np.broadcast_to(np.eye(3, dtype=np.float32),
                                         (n, 3, 3)))
 
-    def _launch(self, batch: List[_Pending]):
-        t_launch = time.perf_counter()
-        try:
-            c = [np.asarray(p.plan.obb_c) for p in batch]
-            h = [np.asarray(p.plan.obb_h) for p in batch]
-            r = [np.asarray(p.plan.obb_r) for p in batch]
-            live = sum(a.shape[0] for a in c)
-            pad = (_pad_bucket(live) - live) if self.pad_pow2 else 0
+    def _call_engine(self, plan: QueryPlan):
+        """One engine execute under the liveness bound: with
+        ``launch_timeout_s`` set the call runs on a monitored thread, and
+        on timeout the batch fails with :class:`LaunchStalled` while the
+        abandoned call finishes (or hangs) on its daemon thread — its
+        late result is discarded by first-wins ticket resolution."""
+        if self.launch_timeout_s is None:
+            return self.engine.execute(plan)
+        box: dict = {}
+
+        def target():
+            try:
+                box["out"] = self.engine.execute(plan)
+            except BaseException as e:            # noqa: BLE001
+                box["err"] = e
+
+        th = threading.Thread(target=target, daemon=True,
+                              name="collision-launch")
+        th.start()
+        th.join(self.launch_timeout_s)
+        if th.is_alive():
+            raise LaunchStalled(
+                f"engine call exceeded launch_timeout_s="
+                f"{self.launch_timeout_s}; failing the batch so no "
+                f"client hangs on a wedged launch")
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
+    def _execute_with_retry(self, batch: List[_Pending]):
+        """Build the coalesced pool and execute it, retrying transient
+        failures with exponential backoff.  An oversized pow2 pad bucket
+        shrinks toward the exact pool width across retries (the
+        RESOURCE_EXHAUSTED response: ask for less).  Returns
+        (verdict, counters, live, pad, retries)."""
+        c = [np.asarray(p.plan.obb_c) for p in batch]
+        h = [np.asarray(p.plan.obb_h) for p in batch]
+        r = [np.asarray(p.plan.obb_r) for p in batch]
+        live = sum(a.shape[0] for a in c)
+        bucket = _pad_bucket(live) if self.pad_pow2 else live
+        retries = 0
+        while True:
+            pad = bucket - live
+            cc, hh, rr = list(c), list(h), list(r)
             if pad:
                 po = self._pad_obbs(pad)
-                c.append(np.asarray(po.center))
-                h.append(np.asarray(po.half))
-                r.append(np.asarray(po.rot))
-            pool = OBBs(center=np.concatenate(c), half=np.concatenate(h),
-                        rot=np.concatenate(r))
-            verdict, counters = self.engine.execute(plan_queries(pool))
+                cc.append(np.asarray(po.center))
+                hh.append(np.asarray(po.half))
+                rr.append(np.asarray(po.rot))
+            pool = OBBs(center=np.concatenate(cc), half=np.concatenate(hh),
+                        rot=np.concatenate(rr))
+            try:
+                verdict, counters = self._call_engine(plan_queries(pool))
+                return verdict, counters, live, pad, retries
+            except BaseException as e:            # noqa: BLE001
+                if not _is_transient(e) or retries >= self.max_retries:
+                    raise
+                retries += 1
+                with self._lock:
+                    self.totals.retried += 1
+                if bucket > live:                 # retry at half width
+                    bucket = max(live, bucket >> 1)
+                time.sleep(self.retry_backoff_s * (1 << (retries - 1)))
+
+    def _launch(self, batch: List[_Pending], depth: int = 0):
+        """Launch one coalesced batch; on failure, bisect-retry so only
+        the poisoned request's ticket errors while innocent co-riders
+        complete (fault isolation, DESIGN.md §7)."""
+        t_launch = time.perf_counter()
+        for p in batch:
+            p.ticket._mark_launched()
+        with self._lock:
+            self._inflight = list(batch)
+        try:
+            verdict, counters, live, pad, retries = \
+                self._execute_with_retry(batch)
             counters.pad_queries += pad
             t_done = time.perf_counter()
+            exec_s = t_done - t_launch
             with self._lock:
                 self.totals.merge(counters)
                 self.num_launches += 1
+                self._exec_ewma = (exec_s if self._exec_ewma is None
+                                   else 0.5 * self._exec_ewma + 0.5 * exec_s)
             off = 0
             for p in batch:
                 q = p.plan.num_queries
                 stats = RequestStats(
                     wait_s=t_launch - p.t_submit,
-                    exec_s=t_done - t_launch,
+                    exec_s=exec_s,
                     total_s=t_done - p.t_submit,
                     batch_requests=len(batch), batch_queries=live,
-                    pad_queries=pad)
-                p.ticket._value = p.plan.unflatten(verdict[off:off + q])
-                p.ticket._stats = stats
-                p.ticket._error = None
-                p.ticket._event.set()
+                    pad_queries=pad, retries=retries, splits=depth)
+                p.ticket._resolve(p.plan.unflatten(verdict[off:off + q]),
+                                  stats)
                 off += q
         except BaseException as e:                    # noqa: BLE001
-            for p in batch:
-                p.ticket._error = e
-                p.ticket._event.set()
+            if getattr(e, "fatal", False):
+                # Simulated (or real) worker death: propagate WITHOUT
+                # resolving tickets — the watchdog's job is to catch
+                # exactly this and fail the in-flight tickets itself.
+                raise
+            if len(batch) == 1 or isinstance(e, LaunchStalled):
+                # A singleton owns its failure; a stall is not
+                # attributable to any one request, so the whole batch
+                # fails typed rather than stalling again per half.
+                for p in batch:
+                    p.ticket._fail(e)
+                return
+            # Bisect-retry: the failure rode in with SOME request; split
+            # the batch and relaunch each half so the poison isolates to
+            # a singleton while everyone else completes.
+            with self._lock:
+                self.totals.launch_splits += 1
+            mid = len(batch) // 2
+            self._launch(batch[:mid], depth + 1)
+            self._launch(batch[mid:], depth + 1)

@@ -44,6 +44,16 @@ from repro.core.sact import PAYLOAD_INF
 WORKLOADS = ("queries", "batch", "scenes", "trajectory", "edges")
 
 
+class PlanValidationError(ValueError):
+    """A plan's OBB pool is malformed (shape/dtype/NaN/inf/degenerate).
+
+    Raised by :func:`validate_plan` — the service's admission check
+    (DESIGN.md §7): a malformed request is rejected at ``submit`` with a
+    message naming the offending field, instead of poisoning a coalesced
+    engine launch it would share with innocent co-batched requests.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
     """One lowered collision query batch (see module docstring)."""
@@ -99,6 +109,56 @@ class QueryPlan:
         if self.reduce_last:
             out = out.any(axis=-1)
         return out
+
+
+def validate_plan(plan: QueryPlan) -> QueryPlan:
+    """Fault-isolation gate: reject malformed OBB pools before they launch.
+
+    Checks every condition under which a plan would corrupt (or crash) a
+    coalesced engine launch — wrong field shapes, non-float32 dtypes,
+    NaN/inf coordinates, non-positive half extents, and lane arrays that
+    do not match the pool — and raises :class:`PlanValidationError` naming
+    the first offending field.  Pure host-side numpy over the (small)
+    request pool; returns the plan unchanged when clean so call sites can
+    chain ``submit(validate_plan(plan))``-style.
+    """
+    q = plan.num_queries
+    fields = (("obb_c", plan.obb_c, (q, 3)), ("obb_h", plan.obb_h, (q, 3)),
+              ("obb_r", plan.obb_r, (q, 3, 3)))
+    for name, arr, want in fields:
+        a = np.asarray(arr)
+        if a.shape != want:
+            raise PlanValidationError(
+                f"plan.{name} has shape {a.shape}, want {want}")
+        if a.dtype != np.float32:
+            raise PlanValidationError(
+                f"plan.{name} has dtype {a.dtype}, want float32 (the "
+                f"engine's pool dtype; cast before submitting)")
+        if not np.isfinite(a).all():
+            bad = int(np.flatnonzero(
+                ~np.isfinite(a).reshape(q, -1).all(1))[0])
+            raise PlanValidationError(
+                f"plan.{name} contains NaN/inf (first bad query slot "
+                f"{bad}); non-finite OBBs poison every SACT test in the "
+                f"coalesced pool")
+    h = np.asarray(plan.obb_h)
+    if not (h > 0).all():
+        bad = int(np.flatnonzero(~(h > 0).all(axis=1))[0])
+        raise PlanValidationError(
+            f"plan.obb_h must be strictly positive (first degenerate "
+            f"query slot {bad}); zero/negative half extents make the "
+            f"separating-axis margins meaningless")
+    for name, lane in (("scene_of_query", plan.scene_of_query),
+                       ("owner_of_query", plan.owner_of_query),
+                       ("payload", plan.payload)):
+        if lane is None:
+            continue
+        a = np.asarray(lane)
+        if a.shape != (q,) or a.dtype != np.int32:
+            raise PlanValidationError(
+                f"plan.{name} must be ({q},) int32, got {a.shape} "
+                f"{a.dtype}")
+    return plan
 
 
 def _flat_obbs(obbs: OBBs) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -181,5 +241,6 @@ def plan_edges(obbs: OBBs, owner: np.ndarray, num_groups: int,
                      owner_of_query=own, num_groups=num_groups, payload=pay)
 
 
-__all__ = ["PAYLOAD_INF", "QueryPlan", "WORKLOADS", "plan_batch",
-           "plan_edges", "plan_queries", "plan_scenes", "plan_trajectory"]
+__all__ = ["PAYLOAD_INF", "PlanValidationError", "QueryPlan", "WORKLOADS",
+           "plan_batch", "plan_edges", "plan_queries", "plan_scenes",
+           "plan_trajectory", "validate_plan"]

@@ -6,10 +6,20 @@ OBBs); a :class:`repro.engine.batcher.RequestBatcher` coalesces whatever
 is in flight into single engine launches — optionally sharded over the
 device mesh (``--shards``) — and each client blocks on its ticket.  The
 harness reports the SLO quantities (:data:`SLO_METRICS`): client-observed
-p50/p99 latency and sustained queries/sec, plus batching effectiveness.
+p50/p99 latency and sustained queries/sec, plus batching effectiveness
+and the reliability counters (:data:`RELIABILITY_METRICS`, DESIGN.md §7).
 
   PYTHONPATH=src python -m repro.launch.serve --clients 8 --requests 32
   ... --shards 4          # shard the coalesced pool over 4 devices
+  ... --chaos             # inject faults; the SLO table must degrade
+                          # gracefully: shed/retried/deadline-missed are
+                          # counted, no ticket hangs, nothing is dropped
+
+Chaos mode wraps the engine in :class:`repro.engine.faults.FaultyEngine`
+(malformed plans, engine exceptions, launch stalls, simulated OOM at the
+``FaultPlan`` rates) and runs every client with a deadline and a launch
+timeout; every submit must still resolve — to a verdict or a typed
+error — which the harness asserts by accounting for all of them.
 """
 from __future__ import annotations
 
@@ -24,9 +34,11 @@ import jax
 
 from repro.core.geometry import random_obbs
 from repro.core.octree import Octree, build_octree
-from repro.engine.batcher import RequestBatcher, RequestStats, _pad_bucket
+from repro.engine.batcher import (RequestBatcher, RequestStats, ServiceError,
+                                  _pad_bucket)
 from repro.engine.executor import CollisionEngine, EngineConfig
-from repro.engine.plan import plan_queries
+from repro.engine.faults import FaultPlan, FaultyEngine, poison_obbs
+from repro.engine.plan import PlanValidationError, plan_queries
 
 #: SLO quantities the harness reports (drift-guarded against the
 #: DESIGN.md §6 SLO table): client-observed latency percentiles over
@@ -34,18 +46,38 @@ from repro.engine.plan import plan_queries
 #: throughput over the timed window.
 SLO_METRICS = ("p50_ms", "p99_ms", "qps")
 
+#: Reliability counters in every report (drift-guarded against the
+#: DESIGN.md §7 reliability table): requests shed at admission, transient
+#: launch retries, pre-launch deadline kills, bisect-retry splits, and
+#: watchdog worker restarts.  All zero on a healthy run.
+RELIABILITY_METRICS = ("rejected", "retried", "deadline_missed",
+                       "launch_splits", "worker_restarts")
+
 
 def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
                 queries_per_request: int = 12, max_batch: int = 1024,
                 max_wait_ms: float = 2.0, mode: str = "wavefront_fused",
                 shards: Optional[int] = None, seed: int = 0,
-                engine: Optional[CollisionEngine] = None) -> dict:
+                engine: Optional[CollisionEngine] = None,
+                deadline_ms: Optional[float] = None,
+                max_queue: int = 4096,
+                launch_timeout_s: Optional[float] = None,
+                max_retries: int = 2,
+                chaos: Optional[FaultPlan] = None) -> dict:
     """Drive ``clients`` closed-loop clients, ``requests`` requests each.
 
     Every request is ``queries_per_request`` random OBBs against the bound
-    scene.  Returns a report dict: the :data:`SLO_METRICS` quantities,
-    requests/sec, batching effectiveness (mean requests and live queries
-    per launch, pad fraction), and the aggregate engine counters.
+    scene.  Returns a report dict: the :data:`SLO_METRICS` quantities over
+    the requests that completed, requests/sec, batching effectiveness
+    (mean requests and live queries per launch, pad fraction), the
+    :data:`RELIABILITY_METRICS` counters, a per-error-type breakdown of
+    failed requests, and the aggregate engine counters.
+
+    With ``chaos`` set, the engine is wrapped in a
+    :class:`repro.engine.faults.FaultyEngine` and each client corrupts a
+    ``malformed_rate`` fraction of its own requests pre-submit; the
+    harness asserts that EVERY submitted request resolved (verdict or
+    typed error) — a hung or silently dropped ticket fails the run.
     """
     if engine is None:
         engine = CollisionEngine(octree, EngineConfig(mode=mode,
@@ -53,15 +85,18 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
     # Pre-generate every request's OBBs so the timed window measures the
     # service, not the client-side random number generation.
     keys = jax.random.split(jax.random.PRNGKey(seed), clients * requests)
-    plans = [plan_queries(random_obbs(k, queries_per_request))
-             for k in keys]
+    reqs = [random_obbs(k, queries_per_request) for k in keys]
     stats: List[List[RequestStats]] = [[] for _ in range(clients)]
+    #: error-type name -> count, over every request that resolved typed.
+    failures: dict = {}
+    fail_lock = threading.Lock()
     errors: List[BaseException] = []
 
     # Warm the jit cache outside the timed window: the batcher pads every
     # pool to a pow2 bucket, so pre-executing one pool per bucket width
     # the coalesced launches can hit keeps compiles out of the latency
-    # percentiles.
+    # percentiles.  Warmup runs on the INNER engine so chaos injection
+    # rates apply only to the timed window.
     top = _pad_bucket(min(max(clients * requests, 1) * queries_per_request,
                           max_batch + queries_per_request))
     width = _pad_bucket(1)
@@ -70,17 +105,41 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
             random_obbs(jax.random.PRNGKey(seed + 1), width)))
         width <<= 1
 
-    with RequestBatcher(engine, max_batch=max_batch,
-                        max_wait_ms=max_wait_ms) as batcher:
-        batcher.submit(plans[0]).result(timeout=600)   # thread-path warmup
+    served = FaultyEngine(engine, chaos) if chaos is not None else engine
+
+    def tally(e: BaseException) -> None:
+        with fail_lock:
+            failures[type(e).__name__] = \
+                failures.get(type(e).__name__, 0) + 1
+
+    with RequestBatcher(served, max_batch=max_batch,
+                        max_wait_ms=max_wait_ms, max_queue=max_queue,
+                        launch_timeout_s=launch_timeout_s,
+                        max_retries=max_retries) as batcher:
+        batcher.submit(plan_queries(reqs[0])).result(timeout=600)
         launches0 = batcher.num_launches
 
         def client(ci: int):
             try:
                 for ri in range(requests):
-                    ticket = batcher.submit(plans[ci * requests + ri])
-                    _, st = ticket.result(timeout=600)
-                    stats[ci].append(st)
+                    obbs = reqs[ci * requests + ri]
+                    if chaos is not None:
+                        kind = chaos.draw_malformed()
+                        if kind is not None:
+                            obbs = poison_obbs(obbs, kind)
+                    try:
+                        ticket = batcher.submit(plan_queries(obbs),
+                                                deadline_ms=deadline_ms)
+                        _, st = ticket.result(timeout=600)
+                        stats[ci].append(st)
+                    except (ServiceError, PlanValidationError) as e:
+                        if chaos is None:
+                            raise        # healthy runs tolerate nothing
+                        tally(e)
+                    except RuntimeError as e:
+                        if chaos is None:
+                            raise
+                        tally(e)         # injected engine faults
             except BaseException as e:              # noqa: BLE001
                 errors.append(e)
 
@@ -98,25 +157,48 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
         raise errors[0]
 
     flat = [s for per_client in stats for s in per_client]
+    n_ok = len(flat)
+    n_failed = sum(failures.values())
+    n_sub = clients * requests
+    # The §7 no-lost-tickets contract: every request either completed or
+    # resolved to a typed error the client saw.
+    assert n_ok + n_failed == n_sub, \
+        f"{n_sub - n_ok - n_failed} requests vanished (hung or dropped)"
     lat_ms = np.asarray([s.total_s for s in flat]) * 1e3
-    n_req = len(flat)
-    n_q = n_req * queries_per_request
-    mean_req_per_launch = np.mean([s.batch_requests for s in flat])
+    n_q = n_ok * queries_per_request
     return {
-        "p50_ms": float(np.percentile(lat_ms, 50)),
-        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "p50_ms": float(np.percentile(lat_ms, 50)) if n_ok else float("nan"),
+        "p99_ms": float(np.percentile(lat_ms, 99)) if n_ok else float("nan"),
         "qps": n_q / wall,
-        "rps": n_req / wall,
+        "rps": n_ok / wall,
         "wall_s": wall,
         "clients": clients,
-        "requests": n_req,
+        "submitted": n_sub,
+        "requests": n_ok,
+        "failed": n_failed,
+        "failures": dict(failures),
         "queries": n_q,
         "launches": launches,
-        "mean_requests_per_launch": float(mean_req_per_launch),
+        "mean_requests_per_launch": float(np.mean(
+            [s.batch_requests for s in flat])) if n_ok else 0.0,
         "mean_live_queries_per_launch": n_q / max(launches, 1),
         "pad_fraction": totals.pad_queries / max(totals.num_queries, 1),
+        "rejected": totals.rejected,
+        "retried": totals.retried,
+        "deadline_missed": totals.deadline_missed,
+        "launch_splits": totals.launch_splits,
+        "worker_restarts": totals.worker_restarts,
         "counters": totals,
     }
+
+
+def default_fault_plan(seed: int = 0) -> FaultPlan:
+    """The ``--chaos`` rates: every §7 failure mode fires on a smoke-sized
+    run, while most launches stay healthy so the SLO percentiles remain
+    meaningful."""
+    return FaultPlan(malformed_rate=0.08, exception_rate=0.06,
+                     oom_rate=0.05, stall_rate=0.02, crash_rate=0.01,
+                     stall_s=2.5, seed=seed)
 
 
 def main() -> None:
@@ -133,7 +215,24 @@ def main() -> None:
     ap.add_argument("--mode", default="wavefront_fused")
     ap.add_argument("--shards", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget (typed rejection)")
+    ap.add_argument("--launch-timeout-s", type=float, default=None,
+                    help="liveness bound on one engine call")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject faults (FaultPlan) and report graceful "
+                         "degradation; implies a deadline and launch "
+                         "timeout unless given explicitly")
     args = ap.parse_args()
+
+    chaos = default_fault_plan(args.seed) if args.chaos else None
+    deadline_ms = args.deadline_ms
+    launch_timeout_s = args.launch_timeout_s
+    if args.chaos:
+        if deadline_ms is None:
+            deadline_ms = 2000.0
+        if launch_timeout_s is None:
+            launch_timeout_s = 1.0
 
     rs = np.random.RandomState(args.seed)
     pts = rs.uniform(-1, 1, (args.points, 3)).astype(np.float32)
@@ -142,14 +241,26 @@ def main() -> None:
         tree, clients=args.clients, requests=args.requests,
         queries_per_request=args.queries, max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms, mode=args.mode, shards=args.shards,
-        seed=args.seed)
-    print(f"served {rep['requests']} requests / {rep['queries']} queries "
-          f"from {rep['clients']} clients in {rep['wall_s']:.2f}s")
+        seed=args.seed, deadline_ms=deadline_ms,
+        launch_timeout_s=launch_timeout_s, chaos=chaos)
+    print(f"served {rep['requests']}/{rep['submitted']} requests "
+          f"/ {rep['queries']} queries from {rep['clients']} clients "
+          f"in {rep['wall_s']:.2f}s")
     print(f"latency p50 {rep['p50_ms']:.2f} ms  p99 {rep['p99_ms']:.2f} ms")
     print(f"throughput {rep['qps']:.0f} queries/s  {rep['rps']:.0f} req/s")
     print(f"batching: {rep['launches']} launches, "
           f"{rep['mean_requests_per_launch']:.1f} req/launch, "
           f"pad fraction {rep['pad_fraction']:.2f}")
+    print(f"reliability: rejected {rep['rejected']}  "
+          f"retried {rep['retried']}  "
+          f"deadline_missed {rep['deadline_missed']}  "
+          f"launch_splits {rep['launch_splits']}  "
+          f"worker_restarts {rep['worker_restarts']}")
+    if rep["failed"]:
+        kinds = ", ".join(f"{k}={v}" for k, v in
+                          sorted(rep["failures"].items()))
+        print(f"failed typed (no hangs, no drops): {rep['failed']} "
+              f"[{kinds}]")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,20 @@
 """Docs drift guard: the engine-mode, workload, metadata-residency,
-admission-policy, and SLO tables in DESIGN.md §2/§3/§6 and README.md
-duplicate each other by design (one is the architecture doc, one the
-landing page); these tests keep both in lockstep with ``MODES``, the
-plan layer's ``WORKLOADS``, the persistent megakernel's
-``META_LAYOUTS``, the batcher's ``ADMISSION_KNOBS``, and the serve
-harness's ``SLO_METRICS``."""
+admission-policy, SLO, and reliability tables in DESIGN.md §2/§3/§6/§7
+and README.md duplicate each other by design (one is the architecture
+doc, one the landing page); these tests keep both in lockstep with
+``MODES``, the plan layer's ``WORKLOADS``, the persistent megakernel's
+``META_LAYOUTS``, the batcher's ``ADMISSION_KNOBS``, the serve
+harness's ``SLO_METRICS``/``RELIABILITY_METRICS``, and the fault
+harness's ``FAILURE_MODES``."""
 import os
 import re
 
 from repro.core.wavefront import MODES
 from repro.engine.batcher import ADMISSION_KNOBS
+from repro.engine.faults import FAILURE_MODES
 from repro.engine.plan import WORKLOADS
 from repro.kernels.persist.ops import META_LAYOUTS
-from repro.launch.serve import SLO_METRICS
+from repro.launch.serve import RELIABILITY_METRICS, SLO_METRICS
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -82,3 +84,20 @@ def test_readme_service_section_lists_knobs_and_slos():
         assert knob in cells, f"README admission table misses `{knob}`"
     for metric in SLO_METRICS:
         assert metric in cells, f"README SLO table misses `{metric}`"
+
+
+def test_design_reliability_section_lists_failure_modes_and_counters():
+    cells = _mode_table_cells("DESIGN.md")
+    for mode in FAILURE_MODES:
+        assert mode in cells, \
+            f"DESIGN.md §7 failure-mode table misses `{mode}`"
+    for metric in RELIABILITY_METRICS:
+        assert metric in cells, \
+            f"DESIGN.md §7 reliability-counters table misses `{metric}`"
+
+
+def test_readme_reliability_section_lists_counters():
+    cells = _mode_table_cells("README.md")
+    for metric in RELIABILITY_METRICS:
+        assert metric in cells, \
+            f"README service-reliability table misses `{metric}`"
