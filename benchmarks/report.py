@@ -1,6 +1,9 @@
-"""Generate the §Dry-run / §Roofline markdown tables from dry-run JSONs.
+"""Generate the §Dry-run / §Roofline markdown tables from dry-run JSONs,
+plus the metadata-traffic table from bench results.json artifacts.
 
   PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/results/dryrun]
+  PYTHONPATH=src python -m benchmarks.report --sections bench \\
+      [--bench-dir benchmarks/results/smoke]
 
 Markdown goes to stdout; EXPERIMENTS.md embeds the output.
 """
@@ -79,19 +82,55 @@ def dryrun_table(recs):
               f"{r['peak_mem_per_chip']/2**30:.1f} GiB |")
 
 
+def _derived_fields(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def bench_table(path: str):
+    """Streamed-metadata traffic across bench rows (fig_bigscene /
+    fig_compress): wall, rows fetched, and the priced
+    ``meta_bytes_streamed`` per row family."""
+    if not os.path.isfile(path):
+        print(f"\n### Metadata traffic — no bench artifacts at {path}\n")
+        return
+    rows = json.load(open(path))
+    print("\n### Metadata traffic (streamed layout rows, "
+          "`Counters.meta_bytes_streamed`)\n")
+    print("| bench row | wall/call | layout | meta rows streamed | "
+          "meta bytes streamed | vs fp32 |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        d = _derived_fields(r.get("derived", ""))
+        if "meta_bytes_streamed" not in d:
+            continue
+        print(f"| {r['name']} | {fmt_s(r['us_per_call'] / 1e6)} | "
+              f"{d.get('layout', '-')} | {d.get('meta_rows_streamed', '-')} | "
+              f"{d['meta_bytes_streamed']} | {d.get('bytes_vs_fp32', '-')} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default=os.path.join(
         os.path.dirname(__file__), "results", "dryrun"))
+    ap.add_argument("--bench-dir", default=os.path.join(
+        os.path.dirname(__file__), "results", "smoke"))
     ap.add_argument("--sections", default="roofline,dryrun")
     args = ap.parse_args()
-    recs = load(args.dir)
     secs = args.sections.split(",")
-    if "roofline" in secs:
-        roofline_table(recs, "single")
-        roofline_table(recs, "multi")
-    if "dryrun" in secs:
-        dryrun_table(recs)
+    if "roofline" in secs or "dryrun" in secs:
+        recs = load(args.dir)
+        if "roofline" in secs:
+            roofline_table(recs, "single")
+            roofline_table(recs, "multi")
+        if "dryrun" in secs:
+            dryrun_table(recs)
+    if "bench" in secs:
+        bench_table(os.path.join(args.bench_dir, "results.json"))
 
 
 if __name__ == "__main__":

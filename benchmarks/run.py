@@ -37,6 +37,7 @@ from repro.core.fps import (farthest_point_sampling, random_sampling,
                             sampling_spread)
 from repro.core.geometry import OBBs
 from repro.core.octree import build_octree
+from repro.core.quantize import META_FORMATS
 from repro.core.wavefront import (CollisionEngine, EngineConfig,
                                   traversal_cache_info)
 from repro.data.robotics import (ENVIRONMENTS, make_mpaccel_scenario,
@@ -59,7 +60,7 @@ SMOKE_SCALE = {"points": 4096, "trajs": 2, "wps": 6, "depth": 4,
                "serve_clients": 4, "serve_requests": 8, "serve_queries": 12,
                "serve_max_wait_ms": 4.0}
 SMOKE_BENCHES = ("fig11", "fig15", "table4", "batched", "ragged",
-                 "fig_edges", "fig_bigscene", "fig_serve")
+                 "fig_edges", "fig_bigscene", "fig_compress", "fig_serve")
 
 _scene_cache = {}
 
@@ -613,8 +614,11 @@ def fig_bigscene(S):
     for tag, tree in trees.items():
         obbs = random_obbs(jax.random.PRNGKey(11), M)
         fused = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+        # fp32 pin: this figure isolates the LAYOUT switch (PR 5 baseline);
+        # fig_compress sweeps the row formats on the same scenes.
         persist = CollisionEngine(tree, EngineConfig(
-            mode="wavefront_persistent", vmem_budget=budget))
+            mode="wavefront_persistent", vmem_budget=budget,
+            meta_format="fp32"))
         col_f, _ = fused.query(obbs)                  # compile + reference
         col_p, cp = persist.query(obbs)
         assert (np.asarray(col_p) == np.asarray(col_f)).all(), tag
@@ -629,6 +633,7 @@ def fig_bigscene(S):
         emit(f"fig_bigscene/{tag}/persistent", walls["persist"] * 1e6,
              f"queries={M};layout={persist.meta_layout};"
              f"meta_rows_streamed={cp.meta_rows_streamed};"
+             f"meta_bytes_streamed={cp.meta_bytes_streamed};"
              f"window_bytes={meta_stream_bytes(n_max)};"
              f"overflow={cp.frontier_overflow};"
              f"speedup_vs_fused={speedups[-1]:.2f}x")
@@ -638,6 +643,76 @@ def fig_bigscene(S):
          f"bigscene_over_budget="
          f"{table_bytes['big']/max(budget, 1):.1f}x;"
          f"mode_stays=wavefront_persistent")
+
+
+# ---------------------------------------------------------------------------
+# fig_compress — metadata row-format sweep (DESIGN.md §3/§4): streamed
+# traversal on the fig_bigscene over-budget scene at fp32 vs bf16 vs u8
+# rows.  Verdicts must be bitwise-identical; u8 must stream >= 3x fewer
+# metadata bytes (it streams exactly 4x fewer: the row COUNT is
+# format-independent and only the row width changes) at no wall cost.
+# CI requires this row family (--require fig_compress).
+# ---------------------------------------------------------------------------
+
+def fig_compress(S):
+    from repro.core.geometry import random_obbs
+    from repro.kernels.persist.ops import (META_FORMAT_BYTES,
+                                           meta_stream_bytes,
+                                           meta_table_bytes)
+    rs = np.random.RandomState(5)
+    depth = min(S["depth"] + 1, 8)
+    M = max(S["trajs"] * S["wps"], 32)
+    # The fig_bigscene over-budget scene: 6x points at depth+1, budget set
+    # to the small (1x) cloud's fp32 table so this one always streams.
+    small = build_octree(
+        rs.uniform(-1, 1, (S["points"], 3)).astype(np.float32), depth=depth,
+        scene_lo=np.full(3, -1.0, np.float32), scene_size=2.0)
+    tree = build_octree(
+        rs.uniform(-1, 1, (6 * S["points"], 3)).astype(np.float32),
+        depth=depth, scene_lo=np.full(3, -1.0, np.float32), scene_size=2.0)
+    budget = meta_table_bytes(depth, max(len(l.codes) for l in small.levels))
+    n_max = max(len(l.codes) for l in tree.levels)
+    obbs = random_obbs(jax.random.PRNGKey(11), M)
+    ref_v, _ = CollisionEngine(
+        tree, EngineConfig(mode="wavefront_fused")).query(obbs)
+    stats, walls_by_fmt = {}, {}
+    for fmt in META_FORMATS:
+        eng = CollisionEngine(tree, EngineConfig(
+            mode="wavefront_persistent", vmem_budget=budget,
+            stream_meta=True, meta_format=fmt))
+        assert eng.meta_layout == "streamed", fmt
+        v, c = eng.query(obbs)                        # compile + reference
+        assert (np.asarray(v) == np.asarray(ref_v)).all(), fmt
+        assert c.meta_bytes_streamed == \
+            c.meta_rows_streamed * META_FORMAT_BYTES[fmt], fmt
+        stats[fmt] = c
+        walls_by_fmt[fmt] = eng
+    walls = time_group(
+        {fmt: (lambda e=eng: e.query(obbs))
+         for fmt, eng in walls_by_fmt.items()}, repeats=7)
+    for fmt in META_FORMATS:
+        c = stats[fmt]
+        emit(f"fig_compress/{fmt}", walls[fmt] * 1e6,
+             f"queries={M};depth={depth};layout=streamed;"
+             f"meta_rows_streamed={c.meta_rows_streamed};"
+             f"meta_bytes_streamed={c.meta_bytes_streamed};"
+             f"window_bytes={meta_stream_bytes(n_max, fmt)};"
+             f"nodes={c.nodes_traversed};"
+             f"bytes_vs_fp32="
+             f"{stats['fp32'].meta_bytes_streamed / max(c.meta_bytes_streamed, 1):.2f}x")
+    # Scene capacity per VMEM byte under the RESIDENT layout scales
+    # inversely with row width: rows-per-budget at each format.
+    cap = {fmt: budget // ((depth + 1) * META_FORMAT_BYTES[fmt])
+           for fmt in META_FORMATS}
+    emit("fig_compress/headline", 0.0,
+         f"u8_bytes_reduction="
+         f"{stats['fp32'].meta_bytes_streamed / max(stats['u8'].meta_bytes_streamed, 1):.2f}x;"
+         f"rows_equal={int(stats['fp32'].meta_rows_streamed == stats['u8'].meta_rows_streamed)};"
+         f"verdicts=bitwise_identical;"
+         f"scene_per_vmem_byte_u8_vs_fp32={cap['u8'] / max(cap['fp32'], 1):.2f}x;"
+         f"wall_u8_over_fp32={walls['u8'] / max(walls['fp32'], 1e-9):.2f}x")
+    assert stats["fp32"].meta_bytes_streamed \
+        >= 3 * stats["u8"].meta_bytes_streamed, "u8 must cut bytes >= 3x"
 
 
 # ---------------------------------------------------------------------------
@@ -724,6 +799,7 @@ BENCHES = {
     "ragged": ragged_scenes,
     "fig_edges": fig_edges,
     "fig_bigscene": fig_bigscene,
+    "fig_compress": fig_compress,
     "fig_serve": fig_serve,
     "roofline": roofline_table,
 }

@@ -48,12 +48,18 @@ every pair of every level — the closest TPU analogue of the paper's
 conditional returns never leaving the core.  Under the STREAMED layout
 (scenes past the VMEM residency budget, DESIGN.md §3) the metadata table
 stays in HBM and each query tile double-buffers per-level row windows
-instead; that traffic is explicit, not amortized:
-  per fetched metadata row ([code, full, start, mask] int32) = 16 B
+instead; that traffic is explicit, not amortized, and priced at the
+metadata row FORMAT's packed width (repro.core.quantize):
+  per fetched fp32 row ([code, full, start, mask] int32)     = 16 B
+  per fetched bf16 row (topo word + 10-bit fixed-point xyz)  =  8 B
+  per fetched u8 row (single topo+octant word)               =  4 B
 ``Counters.meta_rows_streamed`` counts the rows the window schedule
 fetched (level extents rounded up to whole DMA chunks, once per tile per
-level the tile's frontier visits; 0 under the resident layout), and
-``BYTES_META_STREAM`` prices them.
+level the tile's frontier visits; 0 under the resident layout) — the row
+COUNT is format-independent, so compression divides the streamed bytes by
+exactly 2x/4x.  ``BYTES_META_STREAM`` / ``BYTES_META_STREAM_BF16`` /
+``BYTES_META_STREAM_U8`` price the rows, and the product lands in
+``Counters.meta_bytes_streamed``.
 
 Payload lanes (swept-edge / first-hit plans, see ``repro.engine.plan``):
 a grouped plan carries extra int32 lanes per query slot — the owner lane
@@ -77,6 +83,8 @@ BYTES_FUSED_STEP = 40
 BYTES_PERSIST_QUERY = 16
 BYTES_PERSIST_SPILL = 24
 BYTES_META_STREAM = 16
+BYTES_META_STREAM_BF16 = 8
+BYTES_META_STREAM_U8 = 4
 BYTES_PAYLOAD_LANE = 4
 BYTES_SHADER_HANDOFF = 128
 NUM_EXIT_CODES = 18
@@ -100,6 +108,7 @@ class Counters:
     frontier_overflow: int = 0          # entries dropped at capacity (should be 0)
     escalations: int = 0                # overflow replays before a clean run
     meta_rows_streamed: int = 0         # HBM metadata rows DMA'd (streamed layout)
+    meta_bytes_streamed: int = 0        # rows x the format's packed row width
     pad_queries: int = 0                # dead pool slots added by sharding /
     #                                     batch coalescing (zero work each —
     #                                     the live-prefix num_valid lane masks
@@ -139,6 +148,7 @@ class Counters:
         self.frontier_overflow += other.frontier_overflow
         self.escalations += other.escalations
         self.meta_rows_streamed += other.meta_rows_streamed
+        self.meta_bytes_streamed += other.meta_bytes_streamed
         self.pad_queries += other.pad_queries
         self.rejected += other.rejected
         self.retried += other.retried

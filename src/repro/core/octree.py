@@ -34,8 +34,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.geometry import AABBs
+from repro.core.quantize import (GRID_BITS, META_FORMATS, pack_geom_bf16,
+                                 pack_topo_bf16, pack_topo_u8)
 
 MAX_DEPTH = 10  # 30 bits of Morton code
+# The bf16 geometry word packs cell coordinates on the 2**GRID_BITS leaf
+# grid; that is exact precisely because no tree is deeper than the grid.
+assert GRID_BITS == MAX_DEPTH, "packed-geometry grid must match MAX_DEPTH"
 PAD_CODE = np.uint32(0xFFFFFFFF)  # > any 30-bit Morton code; keeps rows sorted
 #: Row-alignment quantum of the level-major device tables.  Every padded
 #: level row (``DeviceOctree`` / ``MultiSceneOctree``) is a whole number of
@@ -144,6 +149,43 @@ class Octree:
         return self.node_aabbs(self.depth)
 
 
+def _pack_node_meta(codes: np.ndarray, full: np.ndarray,
+                    child_start: np.ndarray, child_mask: np.ndarray,
+                    meta_format: str) -> np.ndarray:
+    """Pack per-level channel matrices into the gather-optimized row table.
+
+    Inputs are the padded ``(L, n_max)`` channel matrices (``codes``
+    uint32 with :data:`PAD_CODE` tails); output is the ``(L, n_max,
+    words)`` int32 ``node_meta`` table for ``meta_format`` (see
+    :mod:`repro.core.quantize` for the row encodings).  Pad rows pack to
+    zero words in the compressed formats — they are only ever gathered
+    by invalid (masked) lanes, and PAD_CODE's coordinates would overflow
+    the 10-bit geometry fields.
+    """
+    if meta_format not in META_FORMATS:
+        raise ValueError(f"unknown meta_format {meta_format!r}; "
+                         f"allowed: {', '.join(META_FORMATS)}")
+    if meta_format == "fp32":
+        return np.stack([codes.view(np.int32), full.astype(np.int32),
+                         child_start, child_mask], axis=-1)
+    pad = codes == PAD_CODE
+    full_p = np.where(pad, False, full)
+    start_p = np.where(pad, 0, child_start)
+    mask_p = np.where(pad, 0, child_mask)
+    if meta_format == "u8":
+        octant = (codes & np.uint32(7)).astype(np.int32)
+        w = pack_topo_u8(full_p, np.where(pad, 0, octant), start_p, mask_p)
+        return w[..., None]
+    w0 = pack_topo_bf16(full_p, start_p, mask_p)
+    w1 = np.zeros_like(w0)
+    for level in range(codes.shape[0]):
+        xyz = np.stack(morton_decode(codes[level]), axis=-1)
+        w1[level] = np.where(pad[level], 0,
+                             pack_geom_bf16(np.where(pad[level, :, None], 0,
+                                                     xyz), level))
+    return np.stack([w0, w1], axis=-1)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class DeviceOctree:
@@ -169,23 +211,30 @@ class DeviceOctree:
     # replacing the per-candidate ``searchsorted`` over 8x-expanded codes.
     child_start: jax.Array  # (..., depth+1, n_max) int32
     child_mask: jax.Array   # (..., depth+1, n_max) int32 (low 8 bits used)
-    # Gather-optimized packed view [code, full, child_start, child_mask]:
-    # the fused traversal step reads all per-node metadata in ONE (cap, 4)
-    # gather per level instead of four row gathers.
-    node_meta: jax.Array    # (..., depth+1, n_max, 4) int32
+    # Gather-optimized packed row table: the CSR traversal arms read all
+    # per-node metadata in ONE (cap, words) gather per level instead of
+    # four row gathers.  ``meta_format`` picks the row encoding
+    # (repro.core.quantize): "fp32" = [code, full, child_start,
+    # child_mask] 4 x int32; "bf16" = [topology word, geometry word];
+    # "u8" = [topology word] (lanes carry their own Morton code).  The
+    # unpacked channel planes above are retained in every format — the
+    # non-CSR arms and the fused step's code re-gather read them.
+    node_meta: jax.Array    # (..., depth+1, n_max, words) int32
     depth: int             # static leaf level (shared across stacked scenes)
+    meta_format: str = "fp32"  # static row encoding of ``node_meta``
 
     def tree_flatten(self):
         return ((self.codes, self.full, self.counts, self.cell_sizes,
                  self.scene_lo, self.child_start, self.child_mask,
-                 self.node_meta), self.depth)
+                 self.node_meta), (self.depth, self.meta_format))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, depth=aux)
+        depth, meta_format = aux
+        return cls(*children, depth=depth, meta_format=meta_format)
 
 
-def device_octree(tree: Octree) -> DeviceOctree:
+def device_octree(tree: Octree, meta_format: str = "fp32") -> DeviceOctree:
     """Pad the ragged level lists of ``tree`` into rectangular device arrays.
 
     Rows are additionally padded to the :data:`META_ROW_ALIGN` quantum
@@ -193,6 +242,12 @@ def device_octree(tree: Octree) -> DeviceOctree:
     row, and the per-level row extents live in ``counts`` — together these
     make the streamed metadata windows of the persistent megakernel
     contiguous fixed-chunk gathers.
+
+    ``meta_format`` picks the packed ``node_meta`` row encoding
+    (:data:`repro.core.quantize.META_FORMATS`); packing raises if the
+    scene's child pointers overflow a compressed format's field width
+    (the executor's chooser gates on :func:`~repro.core.quantize.
+    format_eligible` so it never asks for an overflowing format).
     """
     n_max = align_rows(max(len(l.codes) for l in tree.levels))
     L = tree.depth + 1
@@ -209,8 +264,7 @@ def device_octree(tree: Octree) -> DeviceOctree:
         child_start[l, :n] = lvl.child_start
         child_mask[l, :n] = lvl.child_mask
     cells = np.asarray([tree.cell_size(l) for l in range(L)], np.float32)
-    meta = np.stack([codes.view(np.int32), full.astype(np.int32),
-                     child_start, child_mask], axis=-1)
+    meta = _pack_node_meta(codes, full, child_start, child_mask, meta_format)
     return DeviceOctree(codes=jnp.asarray(codes), full=jnp.asarray(full),
                         counts=jnp.asarray(counts),
                         cell_sizes=jnp.asarray(cells),
@@ -218,7 +272,7 @@ def device_octree(tree: Octree) -> DeviceOctree:
                         child_start=jnp.asarray(child_start),
                         child_mask=jnp.asarray(child_mask),
                         node_meta=jnp.asarray(meta),
-                        depth=tree.depth)
+                        depth=tree.depth, meta_format=meta_format)
 
 
 def stack_device_octrees(trees: List[Octree]) -> DeviceOctree:
@@ -281,11 +335,12 @@ class MultiSceneOctree:
     flat index ``s`` of the level-0 row.
     """
 
-    node_meta: jax.Array   # (depth+1, n_max, 4) int32 [code, full, start, mask]
+    node_meta: jax.Array   # (depth+1, n_max, words) int32 packed rows
     counts: jax.Array      # (depth+1,) int32 total nodes per level
     cell_sizes: jax.Array  # (S, depth+1) float32 per-scene cell edge
     scene_lo: jax.Array    # (S, 3) float32
     depth: int             # static shared leaf level
+    meta_format: str = "fp32"  # static row encoding (repro.core.quantize)
 
     @property
     def num_scenes(self) -> int:
@@ -293,25 +348,34 @@ class MultiSceneOctree:
 
     def tree_flatten(self):
         return ((self.node_meta, self.counts, self.cell_sizes,
-                 self.scene_lo), self.depth)
+                 self.scene_lo), (self.depth, self.meta_format))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, depth=aux)
+        depth, meta_format = aux
+        return cls(*children, depth=depth, meta_format=meta_format)
 
 
-def concat_device_octrees(trees: List[Octree]) -> MultiSceneOctree:
+def concat_device_octrees(trees: List[Octree],
+                          meta_format: str = "fp32") -> MultiSceneOctree:
     """Concatenate scenes into one flat per-level CSR table (see
     :class:`MultiSceneOctree`).  All trees must share a depth; node counts
-    may differ arbitrarily — no per-scene padding happens."""
+    may differ arbitrarily — no per-scene padding happens.
+
+    ``meta_format`` packs the flat rows like :func:`device_octree` does
+    (codes stay scene-local, child pointers are rebased to flat indices
+    BEFORE packing, so the compressed pointer fields must hold the
+    concatenated level widths)."""
     assert trees, "need at least one octree"
     depth = trees[0].depth
     assert all(t.depth == depth for t in trees), "scene depths must match"
     L = depth + 1
     totals = [sum(len(t.levels[l].codes) for t in trees) for l in range(L)]
     n_max = align_rows(max(totals))
-    meta = np.zeros((L, n_max, 4), np.int32)
-    meta[:, :, 0] = PAD_CODE.view(np.int32)
+    codes = np.full((L, n_max), PAD_CODE, np.uint32)
+    full = np.zeros((L, n_max), bool)
+    child_start = np.zeros((L, n_max), np.int32)
+    child_mask = np.zeros((L, n_max), np.int32)
     for l in range(L):
         off = 0
         off_next = np.cumsum(
@@ -320,19 +384,40 @@ def concat_device_octrees(trees: List[Octree]) -> MultiSceneOctree:
         for s, t in enumerate(trees):
             lvl = t.levels[l]
             n = len(lvl.codes)
-            meta[l, off:off + n, 0] = lvl.codes.view(np.int32)
-            meta[l, off:off + n, 1] = lvl.full.astype(np.int32)
+            codes[l, off:off + n] = lvl.codes
+            full[l, off:off + n] = lvl.full
             if l < depth:   # rebase child pointers into the flat next row
-                meta[l, off:off + n, 2] = lvl.child_start + off_next[s]
-                meta[l, off:off + n, 3] = lvl.child_mask
+                child_start[l, off:off + n] = lvl.child_start + off_next[s]
+                child_mask[l, off:off + n] = lvl.child_mask
             off += n
+    meta = _pack_node_meta(codes, full, child_start, child_mask, meta_format)
     cells = np.asarray([[t.cell_size(l) for l in range(L)] for t in trees],
                        np.float32)
     los = np.stack([np.asarray(t.scene_lo, np.float32) for t in trees])
     return MultiSceneOctree(node_meta=jnp.asarray(meta),
                             counts=jnp.asarray(totals, jnp.int32),
                             cell_sizes=jnp.asarray(cells),
-                            scene_lo=jnp.asarray(los), depth=depth)
+                            scene_lo=jnp.asarray(los), depth=depth,
+                            meta_format=meta_format)
+
+
+def node_centers_from_xyz(xyz: jax.Array, scene_lo: jax.Array,
+                          cell_size) -> Tuple[jax.Array, jax.Array]:
+    """Integer cell coords (K, 3) at a level -> (centers, halves) (K, 3).
+
+    The shared float formula of every traversal arm: identical int
+    coordinates give bitwise-identical geometry, which is what lets the
+    compressed metadata formats (whose decode reproduces the SAME ints
+    the Morton path would) keep verdicts and counters bitwise-equal.
+    """
+    xyz = xyz.astype(jnp.float32)
+    cell = jnp.asarray(cell_size, jnp.float32)
+    if cell.ndim:
+        cell = cell[..., None]
+    lo = scene_lo if scene_lo.ndim > 1 else scene_lo[None, :]
+    center = lo + (xyz + 0.5) * cell
+    half = jnp.broadcast_to(cell / 2.0, center.shape)
+    return center, half
 
 
 def node_centers_from_codes(codes: jax.Array, scene_lo: jax.Array,
@@ -343,14 +428,8 @@ def node_centers_from_codes(codes: jax.Array, scene_lo: jax.Array,
     per-code (K,) array — the ragged multi-scene frontier gathers both per
     pair, single-scene traversals pass the scalars.
     """
-    xyz = jnp_morton_decode(codes).astype(jnp.float32)
-    cell = jnp.asarray(cell_size, jnp.float32)
-    if cell.ndim:
-        cell = cell[..., None]
-    lo = scene_lo if scene_lo.ndim > 1 else scene_lo[None, :]
-    center = lo + (xyz + 0.5) * cell
-    half = jnp.broadcast_to(cell / 2.0, center.shape)
-    return center, half
+    return node_centers_from_xyz(jnp_morton_decode(codes), scene_lo,
+                                 cell_size)
 
 
 def build_octree(points: np.ndarray, depth: int = 6,

@@ -48,7 +48,8 @@ import numpy as np
 
 from repro.core import sact as sact_mod
 from repro.core.counters import (BYTES_FUSED_STEP, BYTES_FUSED_TEST,
-                                 BYTES_META_STREAM, BYTES_PAYLOAD_LANE,
+                                 BYTES_META_STREAM, BYTES_META_STREAM_BF16,
+                                 BYTES_META_STREAM_U8, BYTES_PAYLOAD_LANE,
                                  BYTES_PERSIST_QUERY, BYTES_PERSIST_SPILL,
                                  BYTES_SHADER_HANDOFF, BYTES_UNFUSED_TEST,
                                  NUM_EXIT_CODES, Counters)
@@ -57,6 +58,7 @@ from repro.core.octree import (MAX_DEPTH, DeviceOctree, Octree,
                                concat_device_octrees, device_octree,
                                lookup_children, node_centers_from_codes,
                                stack_device_octrees)
+from repro.core.quantize import META_FORMATS
 from repro.core.sact import (NUM_AXES, PAYLOAD_INF, SactResult,
                              payload_min_update)
 from repro.engine.plan import QueryPlan, plan_batch, plan_queries, plan_scenes
@@ -90,6 +92,12 @@ class EngineConfig:
     # False = force the resident block).
     vmem_budget: int = DEFAULT_VMEM_BUDGET
     stream_meta: Optional[bool] = None
+    # Node-metadata row format for the CSR modes (DESIGN.md §3): None =
+    # the layout/format chooser (fp32 when resident fits, else the
+    # narrowest eligible compressed format when streaming); "fp32" /
+    # "bf16" / "u8" pin it.  Verdicts and work counters are bitwise
+    # format-independent; only bytes streamed and VMEM footprint move.
+    meta_format: Optional[str] = None
     # Sharded execution (DESIGN.md §6): split the flat pair pool over a
     # 1-D device mesh of this many devices via shard_map.  None =
     # single-device; any int (including 1) routes through the sharded
@@ -109,6 +117,16 @@ class EngineConfig:
                     f"({', '.join(DEVICE_MODES)}), not {self.mode!r}")
             if self.shards < 1:
                 raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.meta_format is not None:
+            if self.meta_format not in META_FORMATS:
+                raise ValueError(
+                    f"unknown meta_format {self.meta_format!r}; allowed: "
+                    f"{', '.join(META_FORMATS)}")
+            if self.mode not in CSR_MODES:
+                raise ValueError(
+                    f"meta_format={self.meta_format!r} needs a CSR mode "
+                    f"({', '.join(CSR_MODES)}), not {self.mode!r}: only the "
+                    "CSR frontiers decode packed metadata rows")
 
     @property
     def early_exit(self) -> bool:
@@ -383,7 +401,8 @@ _TRACE_COUNTS: dict = {}
 
 @functools.lru_cache(maxsize=None)
 def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
-                  use_pallas, use_pallas_traverse, streamed: bool = False):
+                  use_pallas, use_pallas_traverse, streamed: bool = False,
+                  meta_format: str = "fp32"):
     """One jit-compiled traversal per (mode, batch kind, capacity, statics).
 
     The LRU gives every (mode, capacity, ...) configuration a *stable
@@ -392,12 +411,16 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
     constructions on same-shaped scenes — neither retraces.  See
     :func:`traversal_cache_info` for the observability hook tests use.
 
-    ``streamed`` is the persistent megakernel's metadata-residency layout
-    (the executor's estimator picks it per engine, so the choice is part
-    of this cache key like every other static).
+    ``streamed`` / ``meta_format`` are the persistent megakernel's
+    metadata-residency layout and packed row format (the executor's
+    chooser picks them per engine, so the choice is part of this cache
+    key like every other static — ``meta_format`` also rides the device
+    tree's pytree aux, which is what actually drives the traced decode;
+    keying it here keeps the cache observability honest when the same
+    engine shape flips format).
     """
     key = (mode, batch, capacity, use_spheres, use_pallas,
-           use_pallas_traverse, streamed)
+           use_pallas_traverse, streamed, meta_format)
 
     def base(c, h, r, d, soq=None, owner=None, payload=None):
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
@@ -489,7 +512,8 @@ def traversal_cache_info() -> dict:
 
 
 def _stats_to_counters(st, mode: str, replays: int = 0,
-                       extra_lanes: int = 0) -> Counters:
+                       extra_lanes: int = 0,
+                       meta_format: str = "fp32") -> Counters:
     st = jax.device_get(st)
     c = Counters()
 
@@ -511,6 +535,11 @@ def _stats_to_counters(st, mode: str, replays: int = 0,
     c.exit_histogram += hist.reshape(-1, hist.shape[-1]).sum(axis=0)
     if "meta_rows" in st:
         c.meta_rows_streamed = tot("meta_rows")
+    # Streamed rows are priced at the packed row format's width (the row
+    # COUNT is format-independent — see counters.py).
+    row_bytes = {"fp32": BYTES_META_STREAM, "bf16": BYTES_META_STREAM_BF16,
+                 "u8": BYTES_META_STREAM_U8}[meta_format]
+    c.meta_bytes_streamed = c.meta_rows_streamed * row_bytes
     # Bytes models (see counters.py): per-level arms move the frontier
     # through HBM every level; the persistent megakernel only moves each
     # query's seed in / verdict out, plus the streamed layout's metadata
@@ -522,7 +551,7 @@ def _stats_to_counters(st, mode: str, replays: int = 0,
         seeds = int(per[0]) if per.size else 0
         c.bytes_moved = (seeds * (BYTES_PERSIST_QUERY + extra)
                          + c.frontier_overflow * BYTES_PERSIST_SPILL
-                         + c.meta_rows_streamed * BYTES_META_STREAM)
+                         + c.meta_bytes_streamed)
     elif mode == "wavefront_fused":
         c.bytes_moved = c.nodes_traversed * (BYTES_FUSED_STEP + extra)
     else:
@@ -617,7 +646,13 @@ class CollisionEngine:
         self._scene_lo = jnp.asarray(self.octree.scene_lo)
         self._level_codes = [jnp.asarray(l.codes) for l in self.octree.levels]
         self._level_full = [jnp.asarray(l.full) for l in self.octree.levels]
-        self._dev: Optional[DeviceOctree] = None
+        self._dev: dict = {}               # packed device tables by format
+        # The layout/format choice depends on the bound scene's size
+        # class, so a rebind must re-run the chooser: a scene grown past
+        # a residency or format-eligibility boundary would otherwise keep
+        # a stale (layout, format) decision — and with it a stale cache
+        # key — from the smaller scene.
+        self._meta_choice = None
         # Per-scene total node counts: the memo-key scene signature.
         self._scene_sig = tuple(
             sum(len(l.codes) for l in t.levels) for t in self.octrees)
@@ -628,24 +663,53 @@ class CollisionEngine:
         self._cap_memo = {k: v for k, v in self._cap_memo.items()
                           if k[-1] == self._scene_sig}
 
+    def _device_tree(self, fmt: str) -> DeviceOctree:
+        """Padded level arrays packed in ``fmt``, cached per format."""
+        if fmt not in self._dev:
+            self._dev[fmt] = device_octree(self.octree, meta_format=fmt)
+        return self._dev[fmt]
+
     @property
     def device_tree(self) -> DeviceOctree:
-        """Padded level arrays for the device-resident engine (lazy)."""
-        if self._dev is None:
-            self._dev = device_octree(self.octree)
-        return self._dev
+        """Packed level arrays for the device-resident engine (lazy); the
+        CSR modes get this engine's chosen row format, the Morton-code
+        frontier (``mode="wavefront"``) always fp32 (it never reads the
+        packed rows, but shares the table builder)."""
+        fmt = self.meta_format if self.cfg.mode in CSR_MODES else "fp32"
+        return self._device_tree(fmt)
+
+    def _choose_meta(self):
+        """Run (and memoize) the layout x format chooser for this scene."""
+        if self._meta_choice is None:
+            n_max = max(len(l.codes) for l in self.octree.levels)
+            layout = (None if self.cfg.stream_meta is None else
+                      ("streamed" if self.cfg.stream_meta else "resident"))
+            self._meta_choice = choose_meta_layout(
+                self.octree.depth, n_max, self.cfg.vmem_budget,
+                fmt=self.cfg.meta_format, layout=layout)
+        return self._meta_choice
 
     @property
     def meta_layout(self) -> str:
         """Persistent-megakernel metadata residency for this engine's
         scene: ``"resident"`` or ``"streamed"`` (DESIGN.md §3).  Driven by
-        the residency estimator against ``cfg.vmem_budget`` unless
+        the layout/format chooser against ``cfg.vmem_budget`` unless
         ``cfg.stream_meta`` pins it; feeds the traversal cache key."""
-        if self.cfg.stream_meta is not None:
-            return "streamed" if self.cfg.stream_meta else "resident"
-        n_max = max(len(l.codes) for l in self.octree.levels)
-        return choose_meta_layout(self.octree.depth, n_max,
-                                  self.cfg.vmem_budget)
+        return self._choose_meta().layout
+
+    @property
+    def meta_format(self) -> str:
+        """Packed node-metadata row format for this engine's scene
+        ("fp32" | "bf16" | "u8", DESIGN.md §3).  ``cfg.meta_format`` pins
+        it; otherwise the chooser's pick for the persistent megakernel,
+        and fp32 for every other mode (the fused arm decodes any format
+        but only compresses when asked — its table is never the VMEM
+        bound)."""
+        if self.cfg.meta_format is not None:
+            return self.cfg.meta_format
+        if self.cfg.persistent:
+            return self._choose_meta().fmt
+        return "fp32"
 
     def _capacity(self, num_queries: int) -> int:
         counts = [len(l.codes) for l in self.octree.levels]
@@ -703,12 +767,13 @@ class CollisionEngine:
 
     # ------------------------------------------------------------------
     def _run(self, capacity: int, batch: str = "single",
-             streamed: bool = False):
+             streamed: bool = False, meta_format: str = "fp32"):
         """Cached jit-compiled traversal for this engine's config."""
         return _traversal_fn(self.cfg.mode, batch, capacity,
                              self.cfg.use_spheres,
                              self.cfg.use_pallas_compact,
-                             self.cfg.use_pallas_traverse, streamed)
+                             self.cfg.use_pallas_traverse, streamed,
+                             meta_format)
 
     def _exec_device(self, plan: QueryPlan):
         cfg = self.cfg
@@ -757,9 +822,11 @@ class CollisionEngine:
                     plan.obb_r.reshape(S, M, 3, 3), dev),
                 M, worst, cfg, start=self._cap_memo.get(memo_key))
         else:
+            fmt = self.meta_format if cfg.mode in CSR_MODES else "fp32"
             memo_key = ("single", Q, plan.grouped, self._scene_sig)
             verdict, st, cap, replays = _escalate(
-                lambda cap: self._run(cap, streamed=streamed)(
+                lambda cap: self._run(cap, streamed=streamed,
+                                      meta_format=fmt)(
                     plan.obb_c, plan.obb_h, plan.obb_r, self.device_tree,
                     None, owner, payload),
                 Q, self._capacity(Q), cfg,
@@ -767,8 +834,14 @@ class CollisionEngine:
         self._cap_memo[memo_key] = cap
         lanes = ((plan.owner_of_query is not None)
                  + (plan.payload is not None))
+        # Ragged multi-scene tables are built fp32 (compressing the flat
+        # concat table is the DESIGN.md §3 follow-up), so only the
+        # single-scene path prices a compressed format.
+        fmt = (self.meta_format
+               if plan.num_scenes == 1 and cfg.mode in CSR_MODES
+               else "fp32")
         counters = _stats_to_counters(st, cfg.mode, replays,
-                                      extra_lanes=lanes)
+                                      extra_lanes=lanes, meta_format=fmt)
         verdict = np.asarray(jax.device_get(verdict))
         if plan.grouped:
             # Grouped verdicts are computed in a Q-sized buffer (owner ids
@@ -792,8 +865,8 @@ class CollisionEngine:
         v1 serves single-scene boolean plans; ragged multi-scene pools
         and owner/payload lanes stay single-device (their frontiers are
         not partitioned by query slot).  The streamed metadata layout is
-        per-device-tile, so sharded runs pin the resident layout to keep
-        ``meta_rows`` partition-invariant.
+        per-device-tile, so sharded runs pin the resident fp32 layout to
+        keep ``meta_rows`` partition-invariant.
         """
         cfg = self.cfg
         shards = cfg.shards
@@ -818,7 +891,10 @@ class CollisionEngine:
             lambda cap: _sharded_traversal_fn(
                 cfg.mode, cap, cfg.use_spheres, cfg.use_pallas_compact,
                 cfg.use_pallas_traverse, False, shards)(
-                    counts, obb_c, obb_h, obb_r, self.device_tree),
+                    # Sharded runs pin the resident fp32 table (see the
+                    # docstring): per-device window traffic would break
+                    # the partition-invariance of ``meta_rows``.
+                    counts, obb_c, obb_h, obb_r, self._device_tree("fp32")),
             Q, self._capacity(Q), cfg, start=self._cap_memo.get(memo_key))
         self._cap_memo[memo_key] = cap
         counters = _stats_to_counters(st, cfg.mode, replays)

@@ -35,11 +35,18 @@ queries, and each grid step owns its tile's traversal end to end:
      are *not* silently traversed: verdicts are exact iff the overflow
      count is zero.
 
-Node metadata comes in one of two **layouts** (``stream`` static flag,
-picked by the executor's residency estimator — DESIGN.md §3):
+Node metadata comes in one of two **layouts** (``stream`` static flag) x
+three row **formats** (``meta_fmt`` static: fp32 = 16 B, bf16 = 8 B,
+u8 = 4 B rows — :mod:`repro.core.quantize`), picked by the executor's
+layout/format chooser (DESIGN.md §3).  The compressed formats decode
+in-register via :func:`repro.kernels.persist.ref.decode_meta_rows` (shared
+with the ref arm, so geometry and topology are bitwise-identical); the u8
+format adds a third frontier lane carrying each lane's own Morton code,
+since its rows store only the node's octant:
 
-* ``resident`` — the whole ``(depth+1, n_max, 4)`` table is a VMEM block,
-  bounding scene size at roughly VMEM / 16 B / (depth+1) nodes;
+* ``resident`` — the whole ``(depth+1, n_max, words)`` table is a VMEM
+  block, bounding scene size at roughly VMEM / row bytes / (depth+1)
+  nodes;
 * ``streamed`` — the table stays in HBM (``pltpu.ANY``) and the kernel
   **double-buffers per-level row windows** through a ping/pong VMEM
   scratch pair: while level ``l`` runs its SACT+expand+compact out of slot
@@ -53,9 +60,11 @@ picked by the executor's residency estimator — DESIGN.md §3):
   at the paper's depth-7 operating point (524k-point clouds); fixed-size
   sub-level windows decoupling scratch from the widest level are the
   recorded follow-up (ROADMAP).  Rows fetched are counted into
-  the ``meta_rows`` scalar (the
-  :data:`repro.core.counters.BYTES_META_STREAM` bytes-model term), with
-  the jnp ref arm modeling the identical per-tile window schedule.
+  the ``meta_rows`` scalar, priced by the bytes model at the format's row
+  width (:data:`repro.core.counters.BYTES_META_STREAM` and its
+  ``_BF16`` / ``_U8`` siblings), with the jnp ref arm modeling the
+  identical per-tile window schedule.  The row *count* per format is
+  unchanged — compression divides the streamed bytes by exactly 2x/4x.
 
 Because queries are partitioned across tiles and a pair's whole subtree
 stays in its query's tile, the early-exit coupling (a decided query
@@ -97,9 +106,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.counters import NUM_EXIT_CODES
-from repro.core.octree import META_ROW_ALIGN, jnp_morton_decode
+from repro.core.octree import META_ROW_ALIGN
+from repro.core.quantize import META_FORMAT_WORDS
 from repro.core.sact import PAYLOAD_INF, axis_tests_from_exit
-from repro.kernels.persist.ref import csr_child_slots
+from repro.kernels.persist.ref import csr_child_slots, decode_meta_rows
 # _EPS shared with every SACT arm: the bitwise identity across engines
 # depends on all of them using the same epsilon and op order.
 from repro.kernels.sact.kernel import _EPS, NUM_AXES, sact_tile
@@ -112,13 +122,25 @@ except ImportError:  # pragma: no cover
 
 def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
                    payload_ref, collide_ref, perlevel_ref, hist_ref,
-                   scalars_ref, ring_ref, fq_scr, fn_scr, meta_scr=None,
-                   dma_sem=None, *, num_queries: int, bq: int, fcap: int,
-                   depth: int, n_max: int, ring_cap: int, use_spheres: bool,
-                   stream: bool):
+                   scalars_ref, ring_ref, *scratch, num_queries: int, bq: int,
+                   fcap: int, depth: int, n_max: int, ring_cap: int,
+                   use_spheres: bool, stream: bool, meta_fmt: str):
+    # Scratch order mirrors make_persist_call's scratch_shapes: frontier
+    # query/node slot pairs always; a third frontier lane (each lane's own
+    # Morton code) under the u8 format, whose rows store only the octant;
+    # window scratch + DMA semaphores under the streamed layout.
+    fq_scr, fn_scr = scratch[0], scratch[1]
+    nscr = 2
+    fp_scr = None
+    if meta_fmt == "u8":
+        fp_scr = scratch[nscr]
+        nscr += 1
+    if stream:
+        meta_scr, dma_sem = scratch[nscr], scratch[nscr + 1]
     t = pl.program_id(0)
     L = depth + 1
     W = META_ROW_ALIGN
+    vpf = META_FORMAT_WORDS[meta_fmt]
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, fcap), 1).reshape((fcap,))
     q_base = t * bq
     # Live-prefix mask: the SMEM valid count (<= the static num_queries
@@ -156,7 +178,7 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
         def _():
             _window("start", 0, 0)
     else:
-        meta_flat = meta_ref[...].reshape(L * n_max, 4)
+        meta_flat = meta_ref[...].reshape(L * n_max, vpf)
 
     def level_body(level, carry):
         (n_live, best_vec, per_level, hist, leaf, axis_exec, sphere,
@@ -164,6 +186,8 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
         slot = jax.lax.rem(level, 2)
         q = jnp.where(slot == 0, fq_scr[0, :], fq_scr[1, :])
         idx = jnp.where(slot == 0, fn_scr[0, :], fn_scr[1, :])
+        pcode = (jnp.where(slot == 0, fp_scr[0, :], fp_scr[1, :])
+                 if meta_fmt == "u8" else None)
         valid = lane < n_live
 
         # ---- one metadata gather per lane (code, full, CSR cols) ------
@@ -194,10 +218,8 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
             meta = jnp.take(meta_flat,
                             level * n_max + jnp.clip(idx, 0, n_max - 1),
                             axis=0)
-        codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
-        full_l = meta[:, 1] != 0
-        child_start = meta[:, 2]
-        child_mask = meta[:, 3]
+        xyz_i, full_l, child_start, child_mask, code_own = decode_meta_rows(
+            meta, meta_fmt, level, pcode)
 
         # ---- gather query boxes from the tile's own OBB block ---------
         # (queries never cross tiles, so lane query ids are tile-local)
@@ -208,9 +230,9 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
         oh = [rows[:, 3 + i] for i in range(3)]
         R = [[rows[:, 6 + 3 * i + k] for k in range(3)] for i in range(3)]
 
-        # ---- node AABB from Morton code, in-register ------------------
+        # ---- node AABB from decoded cell coords, in-register ----------
         cell = jnp.take(scal, 3 + level)
-        xyz = jnp_morton_decode(codes).astype(jnp.float32)
+        xyz = xyz_i.astype(jnp.float32)
         node_c = [scal[i] + (xyz[:, i] + 0.5) * cell for i in range(3)]
         node_h = cell * 0.5
 
@@ -286,6 +308,12 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
         fq_scr[1, :] = jnp.where(nxt == 1, q_next, fq_scr[1, :])
         fn_scr[0, :] = jnp.where(nxt == 0, i_next, fn_scr[0, :])
         fn_scr[1, :] = jnp.where(nxt == 1, i_next, fn_scr[1, :])
+        if meta_fmt == "u8":
+            # Children inherit this lane's own code as their pcode.
+            p_next = jnp.zeros((fcap,), jnp.int32).at[tgt].set(
+                jnp.repeat(code_own, 8), mode="drop")
+            fp_scr[0, :] = jnp.where(nxt == 0, p_next, fp_scr[0, :])
+            fp_scr[1, :] = jnp.where(nxt == 1, p_next, fp_scr[1, :])
         return (jnp.minimum(n_new, fcap), best_vec, per_level, hist,
                 leaf, axis_exec, sphere, overflow, spilled, cursor, ring,
                 meta_rows, n_live)
@@ -293,6 +321,8 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
     # Seed frontier (slot 0): one (query, root) pair per query of the tile.
     fq_scr[0, :] = jnp.where(lane < n_q, q_base + lane, 0)
     fn_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
+    if meta_fmt == "u8":
+        fp_scr[0, :] = jnp.zeros((fcap,), jnp.int32)  # root's own code is 0
 
     meta_rows0 = (jnp.where(n_q > 0, nchunk_ref[0] * W, 0).astype(jnp.int32)
                   if stream else jnp.int32(0))
@@ -320,7 +350,8 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
 
 def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
                       depth: int, n_max: int, ring_cap: int,
-                      use_spheres: bool, interpret: bool, stream: bool):
+                      use_spheres: bool, interpret: bool, stream: bool,
+                      meta_fmt: str = "fp32"):
     """Build the whole-traversal pallas_call.
 
     Inputs: scal (3 + depth+1,) f32 SMEM [scene_lo xyz, per-level cells];
@@ -328,9 +359,11 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
     resident layout); live query count (1,) int32 SMEM (the pool's
     live prefix — pad slots past it never seed, see the sharded
     executor); OBB table (num_tiles * bq, 15) f32, blocked per tile;
-    node_meta (depth+1, n_max, 4) int32 — a resident VMEM block, or an
-    HBM-space (``pltpu.ANY``) table streamed through the ping/pong window
-    scratch when ``stream``; payload (num_tiles * bq,) int32 per-query
+    node_meta (depth+1, n_max, words) int32 packed per ``meta_fmt``
+    (fp32: 4 words, bf16: 2, u8: 1 — :mod:`repro.core.quantize`) — a
+    resident VMEM block, or an HBM-space (``pltpu.ANY``) table streamed
+    through the ping/pong window scratch when ``stream`` (the DMA
+    machinery is format-agnostic: only the row width changes); payload (num_tiles * bq,) int32 per-query
     payload lane (all zeros for boolean plans).  Outputs per query tile:
     ``best`` payload words (bq,) int32 (``PAYLOAD_INF`` = query never hit;
     0 = a boolean hit), valid counts per level, exit histogram, packed work
@@ -343,21 +376,24 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
         assert n_max % META_ROW_ALIGN == 0, \
             "streamed node_meta needs META_ROW_ALIGN-aligned rows"
     L = depth + 1
+    vpf = META_FORMAT_WORDS[meta_fmt]
     kernel = functools.partial(
         persist_kernel, num_queries=num_queries, bq=bq, fcap=fcap,
         depth=depth, n_max=n_max, ring_cap=ring_cap,
-        use_spheres=use_spheres, stream=stream)
+        use_spheres=use_spheres, stream=stream, meta_fmt=meta_fmt)
     meta_spec = (pl.BlockSpec(memory_space=pltpu.ANY) if stream
-                 else pl.BlockSpec((L, n_max, 4), lambda t: (0, 0, 0)))
+                 else pl.BlockSpec((L, n_max, vpf), lambda t: (0, 0, 0)))
     scratch = [
         pltpu.VMEM((2, fcap), jnp.int32),    # frontier queries (2 slots)
         pltpu.VMEM((2, fcap), jnp.int32),    # frontier node indices
     ]
+    if meta_fmt == "u8":
+        scratch.append(pltpu.VMEM((2, fcap), jnp.int32))  # own-code lane
     if stream:
         scratch += [
             # meta window ping/pong pair, flat: slot s = rows
             # [s * n_max, (s + 1) * n_max)
-            pltpu.VMEM((2 * n_max, 4), jnp.int32),
+            pltpu.VMEM((2 * n_max, vpf), jnp.int32),
             pltpu.SemaphoreType.DMA((2,)),          # per-slot window DMAs
         ]
     return pl.pallas_call(

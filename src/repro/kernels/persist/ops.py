@@ -8,22 +8,29 @@ contract of :func:`repro.engine.executor._traverse_fused` — identical
 ``(collide, stats)`` including every work counter — so the engine's
 escalation policy and counter plumbing are mode-agnostic.
 
-**Metadata residency layouts.**  The megakernel holds node metadata in
-one of two layouts (:data:`META_LAYOUTS`, DESIGN.md §3):
+**Metadata residency layouts x row formats.**  The megakernel holds node
+metadata in one of two layouts (:data:`META_LAYOUTS`, DESIGN.md §3):
 
-* ``resident`` — the whole ``(depth+1, n_max, 4)`` table is a VMEM block
-  (:func:`meta_table_bytes`); fastest when it fits.
+* ``resident`` — the whole ``(depth+1, n_max, words)`` table is a VMEM
+  block (:func:`meta_table_bytes`); fastest when it fits.
 * ``streamed`` — the table stays in HBM and per-level row windows are
   double-buffered through a ping/pong VMEM scratch pair
   (:func:`meta_stream_bytes` resident bytes; the fetched rows are counted
-  into the ``meta_rows`` stat → ``Counters.meta_rows_streamed`` →
-  :data:`repro.core.counters.BYTES_META_STREAM`).
+  into the ``meta_rows`` stat → ``Counters.meta_rows_streamed`` → priced
+  at the format's row width).
+
+Rows come in one of three formats (:data:`repro.core.quantize.META_FORMATS`:
+fp32 = 16 B, bf16 = 8 B, u8 = 4 B — see :mod:`repro.core.quantize` for the
+encodings and the soundness argument).  The format is a property of the
+packed :class:`DeviceOctree` (``dev.meta_format``); both arms decode it
+in-register and verdicts/counters are bitwise format-independent.
 
 ``traverse_whole(streamed=None)`` picks the layout with
-:func:`choose_meta_layout` against :data:`DEFAULT_VMEM_BUDGET`; the
-engine's executor makes the same choice per (mode, statics) traversal
-cache key and passes it down explicitly (``EngineConfig.stream_meta`` /
-``vmem_budget`` override it).
+:func:`choose_meta_layout` against :data:`DEFAULT_VMEM_BUDGET` (pinning
+the tree's own format); the engine's executor runs the full
+layout x format chooser per (mode, statics) traversal cache key and
+passes both down explicitly (``EngineConfig.stream_meta`` /
+``meta_format`` / ``vmem_budget`` override it).
 
 The ragged multi-scene frontier (``scene_of_query`` + a
 :class:`repro.core.octree.MultiSceneOctree` flat table) is served by the
@@ -35,14 +42,16 @@ multi-scene table is the follow-up (DESIGN.md §3).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.counters import BYTES_META_STREAM
+from repro.core.counters import (BYTES_META_STREAM, BYTES_META_STREAM_BF16,
+                                 BYTES_META_STREAM_U8)
 from repro.core.octree import (MAX_DEPTH, META_ROW_ALIGN, DeviceOctree,
                                MultiSceneOctree, align_rows)
+from repro.core.quantize import META_FORMATS, format_eligible
 from repro.core.sact import PAYLOAD_INF
 from repro.kernels.persist.ref import traverse_whole_ref
 from repro.kernels.sact.ops import pack_obbs
@@ -56,6 +65,13 @@ META_LAYOUTS = ("resident", "streamed")
 #: traffic model's ``BYTES_META_STREAM`` so the two can never drift.
 META_BYTES_PER_ROW = BYTES_META_STREAM
 
+#: Bytes per packed row by format, aliased to the traffic-model constants
+#: (:mod:`repro.core.quantize` defines the encodings; fp32 = 4 int32
+#: words, bf16 = 2, u8 = 1).
+META_FORMAT_BYTES = {"fp32": BYTES_META_STREAM,
+                     "bf16": BYTES_META_STREAM_BF16,
+                     "u8": BYTES_META_STREAM_U8}
+
 #: Default VMEM budget for the resident node-metadata table.  Real TPU
 #: cores have ~16 MiB of VMEM; the megakernel also needs its frontier
 #: scratch, the per-tile OBB block, and (streamed) the window pair, so
@@ -65,12 +81,12 @@ META_BYTES_PER_ROW = BYTES_META_STREAM
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
 
-def meta_table_bytes(depth: int, n_max: int) -> int:
+def meta_table_bytes(depth: int, n_max: int, fmt: str = "fp32") -> int:
     """VMEM bytes of the RESIDENT node-metadata table (aligned rows)."""
-    return (depth + 1) * align_rows(n_max) * META_BYTES_PER_ROW
+    return (depth + 1) * align_rows(n_max) * META_FORMAT_BYTES[fmt]
 
 
-def meta_stream_bytes(n_max: int) -> int:
+def meta_stream_bytes(n_max: int, fmt: str = "fp32") -> int:
     """VMEM bytes of the STREAMED layout's ping/pong window pair.
 
     A window covers a whole level's occupied extent, so the pair is sized
@@ -80,18 +96,67 @@ def meta_stream_bytes(n_max: int) -> int:
     scratch from the widest level entirely) are the recorded follow-up
     (ROADMAP).
     """
-    return 2 * align_rows(n_max) * META_BYTES_PER_ROW
+    return 2 * align_rows(n_max) * META_FORMAT_BYTES[fmt]
+
+
+class MetaChoice(NamedTuple):
+    """A point in the {resident, streamed} x {fp32, bf16, u8} plan space."""
+    layout: str
+    fmt: str
 
 
 def choose_meta_layout(depth: int, n_max: int,
-                       budget: int = DEFAULT_VMEM_BUDGET) -> str:
-    """Residency estimator: ``"resident"`` iff the whole table fits
-    ``budget``, else ``"streamed"`` — always the smaller footprint
-    (:func:`meta_stream_bytes` <= :func:`meta_table_bytes`), so it is the
-    best available layout even when the widest level alone strains the
-    budget (see :func:`meta_stream_bytes` on that bound)."""
-    return ("resident" if meta_table_bytes(depth, n_max) <= budget
-            else "streamed")
+                       budget: int = DEFAULT_VMEM_BUDGET,
+                       fmt: Optional[str] = None,
+                       layout: Optional[str] = None) -> MetaChoice:
+    """Layout/format chooser over {resident, streamed} x {fp32, bf16, u8}.
+
+    ``fmt`` / ``layout`` pin one or both axes (``None`` = free).  Rules:
+
+    * **Format preference runs widest-first for residency** (fp32 > bf16 >
+      u8): compression is only taken when it buys residency the wider
+      format cannot afford — a table that fits in fp32 stays fp32 (zero
+      decode cost, no reason to compress).
+    * **Streamed rows are narrowest-first** (u8 > bf16 > fp32): once the
+      table streams, row width is pure HBM traffic, so the narrowest
+      *eligible* format wins.
+    * **Eligibility** (:func:`repro.core.quantize.format_eligible`) caps
+      compressed formats by their CSR ``child_start`` field width (bf16:
+      23 bits, u8: 20); fp32 is always eligible.
+
+    Pinning an ineligible ``fmt`` raises ``ValueError`` (a packed table
+    with overflowed pointers cannot exist); a free search only visits
+    eligible formats, so the fallback is always sound.
+    """
+    if fmt is not None and fmt not in META_FORMATS:
+        raise ValueError(f"unknown meta_format {fmt!r}; "
+                         f"allowed: {META_FORMATS}")
+    if layout is not None and layout not in META_LAYOUTS:
+        raise ValueError(f"unknown meta layout {layout!r}; "
+                         f"allowed: {META_LAYOUTS}")
+    if fmt is not None and not format_eligible(fmt, n_max):
+        raise ValueError(
+            f"meta_format {fmt!r} cannot index {n_max} rows per level "
+            "(CSR child_start field overflow)")
+    widest = [f for f in META_FORMATS if format_eligible(f, n_max)]
+    narrowest = widest[::-1]
+    if fmt is not None:
+        if layout is None:
+            layout = ("resident"
+                      if meta_table_bytes(depth, n_max, fmt) <= budget
+                      else "streamed")
+        return MetaChoice(layout, fmt)
+    if layout == "resident":
+        for f in widest:
+            if meta_table_bytes(depth, n_max, f) <= budget:
+                return MetaChoice("resident", f)
+        return MetaChoice("resident", "fp32")   # nothing fits; pinned anyway
+    if layout == "streamed":
+        return MetaChoice("streamed", narrowest[0])
+    for f in widest:
+        if meta_table_bytes(depth, n_max, f) <= budget:
+            return MetaChoice("resident", f)
+    return MetaChoice("streamed", narrowest[0])
 
 
 def _use_pallas_default() -> bool:
@@ -133,7 +198,8 @@ def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     nvalid = jnp.reshape(jnp.asarray(M if num_valid is None else num_valid,
                                      jnp.int32), (1,))
     call = make_persist_call(M, num_tiles, bq, capacity, dev.depth, n_max,
-                             ring_cap, use_spheres, interpret, stream)
+                             ring_cap, use_spheres, interpret, stream,
+                             meta_fmt=getattr(dev, "meta_format", "fp32"))
     words, per_level, hist, scalars, _ring = call(scal, nchunks, nvalid,
                                                   obb, meta, pay)
     best = words.reshape(-1)[:M]
@@ -193,7 +259,8 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     kernel_ok = not ragged and owner_of_query is None
     if streamed is None:
         streamed = (not ragged) and choose_meta_layout(
-            dev.depth, dev.codes.shape[-1]) == "streamed"
+            dev.depth, dev.codes.shape[-1],
+            fmt=getattr(dev, "meta_format", "fp32")).layout == "streamed"
     if use_pallas is None:
         use_pallas = _use_pallas_default() and kernel_ok
     if interpret is None:
@@ -220,4 +287,10 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                               stream_window_rows=(
                                   _window_rows(dev.counts) if model
                                   else None),
-                              num_valid=num_valid)
+                              num_valid=num_valid,
+                              meta_format=getattr(dev, "meta_format",
+                                                  "fp32"),
+                              # MultiSceneOctree carries no codes plane;
+                              # it is fp32-only (executor pins it), and
+                              # only u8 decode needs the plane.
+                              codes=getattr(dev, "codes", None))

@@ -57,7 +57,10 @@ import jax.numpy as jnp
 
 from repro.core import sact as sact_mod
 from repro.core.counters import NUM_EXIT_CODES
-from repro.core.octree import MAX_DEPTH, node_centers_from_codes
+from repro.core.octree import (MAX_DEPTH, jnp_morton_decode,
+                               node_centers_from_xyz)
+from repro.core.quantize import (BF16_START_BITS, GRID_BITS, META_FORMATS,
+                                 U8_START_BITS)
 from repro.core.sact import NUM_AXES, PAYLOAD_INF, payload_min_update
 
 
@@ -87,6 +90,53 @@ def csr_child_slots(child_mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return occupied, offs
 
 
+def decode_meta_rows(meta, meta_format: str, level, pcode=None):
+    """In-register dequantize of gathered packed metadata rows.
+
+    Shared by the jnp ref arm and the Pallas megakernel (identical jnp
+    ops on the same int words -> bitwise-identical geometry and
+    topology across formats).  ``meta`` is the (w, words) int32 gather
+    for one level; ``pcode`` is the frontier's carried parent-code lane
+    (u8 format only — the row stores just the child's octant).
+
+    Returns ``(xyz, full, child_start, child_mask, code_own)`` where
+    ``xyz`` is (w, 3) int32 cell coordinates at ``level`` and
+    ``code_own`` the lane's own Morton code (int32; only meaningful —
+    and only used — under ``meta_format="u8"``, where children inherit
+    it as their ``pcode``).
+    """
+    if meta_format == "fp32":
+        codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
+        full_l = meta[:, 1] != 0
+        child_start = meta[:, 2]
+        child_mask = meta[:, 3]
+        return (jnp_morton_decode(codes), full_l, child_start, child_mask,
+                jnp.zeros(meta.shape[:1], jnp.int32))
+    w0 = meta[:, 0]
+    # Topology word: full << 31 | [octant << 28 |] child_start << 8 | mask.
+    # w0 >> k is an arithmetic shift (sign-extends when full is set); the
+    # field masks strip the extension bits.
+    full_l = w0 < 0
+    child_mask = w0 & 0xFF
+    if meta_format == "bf16":
+        child_start = (w0 >> 8) & ((1 << BF16_START_BITS) - 1)
+        w1 = meta[:, 1]
+        # Geometry word: 3 x 10-bit leaf-grid coords; a level-l cell
+        # coordinate is the field shifted back down (exact by packing).
+        shift = jnp.int32(GRID_BITS) - level
+        xyz = jnp.stack([((w1 >> 20) & 0x3FF) >> shift,
+                         ((w1 >> 10) & 0x3FF) >> shift,
+                         (w1 & 0x3FF) >> shift], axis=-1)
+        return xyz, full_l, child_start, child_mask, \
+            jnp.zeros(meta.shape[:1], jnp.int32)
+    assert meta_format == "u8" and pcode is not None, \
+        f"unknown meta_format {meta_format!r}; allowed: {META_FORMATS}"
+    child_start = (w0 >> 8) & ((1 << U8_START_BITS) - 1)
+    code_own = (pcode << 3) | ((w0 >> 28) & 7)
+    xyz = jnp_morton_decode(code_own.astype(jnp.uint32))
+    return xyz, full_l, child_start, child_mask, code_own
+
+
 def _empty_stats():
     return dict(
         nodes=jnp.int32(0), leaf=jnp.int32(0), axis_exec=jnp.int32(0),
@@ -102,13 +152,21 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                        w_min: int = 128, owner_of_query=None, payload=None,
                        stream_bq: Optional[int] = None,
                        stream_window_rows: Optional[jax.Array] = None,
-                       num_valid=None):
+                       num_valid=None, meta_format: str = "fp32",
+                       codes: Optional[jax.Array] = None):
     """Whole-traversal reference arm; see module docstring for the contract.
 
     Args:
-      node_meta: (depth+1, n_max, 4) int32 CSR metadata rows
-        ([code, full, child_start, child_mask]); single-scene
+      node_meta: (depth+1, n_max, words) int32 packed CSR metadata rows
+        (fp32: [code, full, child_start, child_mask]; bf16/u8: the
+        compressed layouts of :mod:`repro.core.quantize`); single-scene
         ``DeviceOctree.node_meta`` or the flat ``MultiSceneOctree`` table.
+      meta_format: row encoding of ``node_meta`` ("fp32" | "bf16" | "u8");
+        must match the packing the table was built with.  Under "u8" the
+        row stores only the node's octant: the kernel carries an extra
+        own-Morton-code frontier lane, while this ref gathers the same
+        bits from ``codes`` (required then) — the retained
+        ``DeviceOctree.codes`` plane.
       cell_sizes: (depth+1,) f32, or (S, depth+1) when ragged.
       scene_lo: (3,) f32, or (S, 3) when ragged.
       scene_of_query: (Q,) int32 scene id per flat query, or None for a
@@ -140,6 +198,8 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
     """
     Q = obb_c.shape[0]
     n_max = node_meta.shape[-2]
+    assert meta_format != "u8" or codes is not None, \
+        "u8 rows need the codes plane to reconstruct lane geometry"
     ragged = scene_of_query is not None
     grouped = owner_of_query is not None or payload is not None
     model_stream = stream_window_rows is not None
@@ -155,14 +215,24 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         def branch(level, n_live, q_idx, node_idx, verdict, st):
             q = q_idx[:w]
             idx = node_idx[:w]
+            idx_c = jnp.clip(idx, 0, n_max - 1)
             valid = lane_w < n_live
             meta_row = jax.lax.dynamic_index_in_dim(node_meta, level,
                                                     keepdims=False)
-            meta = meta_row[jnp.clip(idx, 0, n_max - 1)]        # (w, 4)
-            codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
-            full_l = meta[:, 1] != 0
-            child_start = meta[:, 2]
-            child_mask = meta[:, 3]
+            meta = meta_row[idx_c]                              # (w, words)
+            if meta_format == "u8":
+                # The kernel carries an own-Morton-code frontier lane (it
+                # cannot reach the codes plane under streaming); the ref
+                # gathers the lane's code from the retained plane instead —
+                # same bits ((pcode << 3) | octant reconstructs the gathered
+                # code exactly), no capacity-sized carry or scatter.
+                pcode = (jax.lax.dynamic_index_in_dim(
+                    codes, level, keepdims=False)[idx_c].astype(jnp.int32)
+                    >> 3)
+            else:
+                pcode = None
+            xyz, full_l, child_start, child_mask, code_own = decode_meta_rows(
+                meta, meta_format, level, pcode)
             is_leaf = level == depth
 
             if ragged:
@@ -174,7 +244,7 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                 cell = jax.lax.dynamic_index_in_dim(cell_sizes, level,
                                                     keepdims=False)
                 lo = scene_lo
-            node_c, node_h = node_centers_from_codes(codes, lo, cell)
+            node_c, node_h = node_centers_from_xyz(xyz, lo, cell)
             res = sact_mod.sact_frontier_staged(
                 obb_c[q], obb_h[q], obb_r[q], node_c, node_h, valid,
                 use_spheres=use_spheres)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.octree import DeviceOctree, node_centers_from_codes
+from repro.core.quantize import BF16_START_BITS, U8_START_BITS
 from repro.core.sact import (SactResult, axis_tests_from_exit,
                              mask_frontier_result, payload_min_update,
                              sact_frontier_staged)
@@ -108,12 +109,25 @@ def traverse_step(obb_c, obb_h, obb_r, dev: DeviceOctree, level, n_live,
     cell = level_row(dev.cell_sizes)
     n_max = dev.codes.shape[-1]
     idx_c = jnp.clip(node_idx, 0, n_max - 1)
-    # One (cap, 4) gather for all per-node metadata (code, full, CSR cols).
+    # One (cap, words) gather for all per-node metadata.  Compressed
+    # formats (repro.core.quantize) pack topology into word 0; geometry
+    # comes from the retained per-level code plane, which the fused arm
+    # keeps resident anyway (the Pallas verdict kernel takes codes as an
+    # input), so the decode adds no gathers.
+    fmt = getattr(dev, "meta_format", "fp32")
     meta = level_row(dev.node_meta)[idx_c]
-    codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
-    full_l = meta[:, 1] != 0
-    child_start = meta[:, 2]
-    child_mask = meta[:, 3]
+    if fmt == "fp32":
+        codes = jax.lax.bitcast_convert_type(meta[:, 0], jnp.uint32)
+        full_l = meta[:, 1] != 0
+        child_start = meta[:, 2]
+        child_mask = meta[:, 3]
+    else:
+        w0 = meta[:, 0]
+        full_l = w0 < 0
+        child_mask = w0 & 0xFF
+        start_bits = BF16_START_BITS if fmt == "bf16" else U8_START_BITS
+        child_start = (w0 >> 8) & ((1 << start_bits) - 1)
+        codes = level_row(dev.codes)[idx_c]
     is_leaf = level == depth
 
     if use_pallas:

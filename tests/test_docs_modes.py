@@ -3,7 +3,8 @@ admission-policy, SLO, and reliability tables in DESIGN.md §2/§3/§6/§7
 and README.md duplicate each other by design (one is the architecture
 doc, one the landing page); these tests keep both in lockstep with
 ``MODES``, the plan layer's ``WORKLOADS``, the persistent megakernel's
-``META_LAYOUTS``, the batcher's ``ADMISSION_KNOBS``, the serve
+``META_LAYOUTS``, the quantizer's ``META_FORMATS``, the batcher's
+``ADMISSION_KNOBS``, the serve
 harness's ``SLO_METRICS``/``RELIABILITY_METRICS``, and the fault
 harness's ``FAILURE_MODES``."""
 import os
@@ -12,6 +13,7 @@ import re
 from repro.core.wavefront import MODES
 from repro.engine.batcher import ADMISSION_KNOBS
 from repro.engine.faults import FAILURE_MODES
+from repro.core.quantize import META_FORMATS
 from repro.engine.plan import WORKLOADS
 from repro.kernels.persist.ops import META_LAYOUTS
 from repro.launch.serve import RELIABILITY_METRICS, SLO_METRICS
@@ -68,6 +70,20 @@ def test_readme_residency_table_lists_every_meta_layout():
     for layout in META_LAYOUTS:
         assert layout in cells, \
             f"README residency/streaming table is missing `{layout}`"
+
+
+def test_design_format_table_lists_every_meta_format():
+    cells = _mode_table_cells("DESIGN.md")
+    for fmt in META_FORMATS:
+        assert fmt in cells, \
+            f"DESIGN.md §3 META_FORMATS table misses `{fmt}`"
+
+
+def test_readme_format_table_lists_every_meta_format():
+    cells = _mode_table_cells("README.md")
+    for fmt in META_FORMATS:
+        assert fmt in cells, \
+            f"README compressed-metadata table is missing `{fmt}`"
 
 
 def test_design_serving_section_lists_knobs_and_slos():

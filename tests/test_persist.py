@@ -263,17 +263,21 @@ def test_bigscene_streamed_engine_bitwise_vs_fused():
     # a table-sized budget, streamed below it — or the test is not
     # exercising the streamed arm at all.
     budget = table // 4
-    assert choose_meta_layout(tree.depth, n_max, budget) == "streamed"
-    assert choose_meta_layout(tree.depth, n_max, table) == "resident"
+    # (fmt pinned to fp32: the free chooser would instead COMPRESS its way
+    # back under this budget — resident u8 — which test_quantize covers)
+    assert choose_meta_layout(tree.depth, n_max, budget,
+                              fmt="fp32").layout == "streamed"
+    assert choose_meta_layout(tree.depth, n_max, table,
+                              fmt="fp32").layout == "resident"
     obbs = random_obbs(jax.random.PRNGKey(5), 24)
     ref_col, ref_c = CollisionEngine(
         tree, EngineConfig(mode="wavefront_fused")).query(obbs)
     engines = {
         "kernel": EngineConfig(mode="wavefront_persistent",
-                               vmem_budget=budget,
+                               vmem_budget=budget, meta_format="fp32",
                                use_pallas_traverse=True),
         "ref": EngineConfig(mode="wavefront_persistent",
-                            vmem_budget=budget),
+                            vmem_budget=budget, meta_format="fp32"),
     }
     counters = {}
     for name, cfg in engines.items():
@@ -297,9 +301,10 @@ def test_residency_estimator_and_override():
     tree = _slab_scene()
     n_max = max(len(l.codes) for l in tree.levels)
     table = meta_table_bytes(tree.depth, n_max)
-    assert choose_meta_layout(tree.depth, n_max, budget=table) == "resident"
-    assert choose_meta_layout(tree.depth, n_max,
-                              budget=table - 1) == "streamed"
+    assert choose_meta_layout(tree.depth, n_max, budget=table,
+                              fmt="fp32").layout == "resident"
+    assert choose_meta_layout(tree.depth, n_max, budget=table - 1,
+                              fmt="fp32").layout == "streamed"
     assert set(META_LAYOUTS) == {"resident", "streamed"}
     # the streamed ping/pong pair is sized to the WIDEST level: exactly
     # (depth+1)/2x smaller than the resident table, not unbounded —
