@@ -49,11 +49,19 @@ def main() -> int:
 
     base = load_rows(args.baseline)
     new = load_rows(args.new)
+    # A crashed bench leaves a single "<family>/ERROR" row in the artifact
+    # (benchmarks.run's keep-going handler); it must NOT satisfy --require,
+    # or a required family that crashed every run would pass vacuously.
+    live = {name for name in new if not name.endswith("/ERROR")}
     missing = [p for p in args.require
-               if not any(name.startswith(p) for name in new)]
+               if not any(name.startswith(p) for name in live)]
     for prefix in missing:
+        errored = sorted(n for n in new if n.startswith(prefix)
+                         and n.endswith("/ERROR"))
+        why = (f"bench crashed (row {errored[0]!r})" if errored
+               else "required bench family absent")
         print(f"::error title=bench missing::no '{prefix}*' rows in "
-              f"{args.new} (required bench family absent)")
+              f"{args.new} ({why})")
     shared = sorted(set(base) & set(new))
     regressions, failures = [], []
     for name in shared:

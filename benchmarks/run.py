@@ -501,26 +501,48 @@ def ragged_scenes(S):
     trees_s, stack_s = scene_set([small] * 3)             # small-only batch
     trees_m, stack_m = scene_set([small] * 3 + [S["points"]])   # + one big
 
-    # Both CSR modes alias to the same ragged flat-frontier implementation
-    # inside query_batched_scenes, so one ragged arm suffices.
+    # The persistent arms force the Pallas kernel (interpret off-TPU): the
+    # ragged mixed-size batch streams per-scene sub-extent windows, and
+    # ragged_streamed additionally pins the streamed layout so the format
+    # chooser picks a compressed row format.  Both must stay on the kernel
+    # arm (ref_arm_fallbacks == 0) — no silent jnp-ref downgrade.
     arms = {
         "padded_wavefront": EngineConfig(mode="wavefront"),
-        "ragged_persistent": EngineConfig(mode="wavefront_persistent"),
+        "ragged_persistent": EngineConfig(mode="wavefront_persistent",
+                                          use_pallas_traverse=True),
+        "ragged_streamed": EngineConfig(mode="wavefront_persistent",
+                                        use_pallas_traverse=True,
+                                        stream_meta=True),
     }
-    walls = {}
+    walls, verdicts, counters = {}, {}, {}
     for name, cfg in arms.items():
         for tag, (trees, stack) in (("small", (trees_s, stack_s)),
                                     ("mixed", (trees_m, stack_m))):
-            query_batched_scenes(trees, stack, cfg)       # warm/compile
+            col, c = query_batched_scenes(trees, stack, cfg)  # warm/compile
+            verdicts[(name, tag)] = np.asarray(col)
+            counters[(name, tag)] = c
             walls[(name, tag)] = time_group(
                 {"q": lambda t=trees, st=stack, c=cfg:
                  query_batched_scenes(t, st, c)}, repeats=7)["q"]
     for name in arms:
+        for tag in ("small", "mixed"):
+            assert (verdicts[(name, tag)]
+                    == verdicts[("padded_wavefront", tag)]).all(), (name, tag)
+            if name != "padded_wavefront":
+                assert counters[(name, tag)].ref_arm_fallbacks == 0, \
+                    f"ragged/{name}/{tag} fell back to the jnp ref arm"
         t_small, t_mixed = walls[(name, "small")], walls[(name, "mixed")]
+        c = counters[(name, "mixed")]
         # padding evidence: how much does ONE big scene inflate the batch?
         emit(f"ragged/{name}", t_mixed * 1e6,
              f"small_batch_us={t_small*1e6:.0f};"
-             f"big_scene_cost={t_mixed/max(t_small, 1e-9):.2f}x")
+             f"big_scene_cost={t_mixed/max(t_small, 1e-9):.2f}x;"
+             f"nodes={c.nodes_traversed};"
+             f"meta_rows_streamed={c.meta_rows_streamed};"
+             f"meta_bytes_streamed={c.meta_bytes_streamed};"
+             f"ref_arm_fallbacks={c.ref_arm_fallbacks}")
+    assert counters[("ragged_streamed", "mixed")].meta_rows_streamed > 0, \
+        "ragged_streamed must stream metadata windows"
     t_pad, t_rag = (walls[("padded_wavefront", "mixed")],
                     walls[("ragged_persistent", "mixed")])
     pad_infl = (walls[("padded_wavefront", "mixed")]
@@ -552,18 +574,49 @@ def fig_edges(S):
     qt = np.clip(qf + rs.uniform(-0.35, 0.35, (E, 7)).astype(np.float32),
                  jlo, jhi)
     base = sc.robot_base
-    engine = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+    # The CCD figure runs the persistent megakernel arm: owner-group tiling
+    # puts each segment's links (and each edge's racing sub-intervals) in
+    # one tile, and the in-kernel payload min-fold retires sibling lanes
+    # the moment a group's verdict lands.  use_pallas_traverse=True forces
+    # the Pallas kernel even off-TPU (interpret mode) — this figure must
+    # never silently downgrade to the jnp ref arm (ref_arm_fallbacks gate).
+    engine = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_persistent", use_pallas_traverse=True))
+    # No-early-exit baseline (fig11's staged_noexit arm, the paper's
+    # TTA-style machine): same bisection rounds, but every lane traverses
+    # to frontier exhaustion — no in-traversal exit of any kind.
+    noexit = CollisionEngine(tree, EngineConfig(mode="staged_noexit"))
     wps = jnp.asarray(edge_waypoints(qf, qt, R))
 
     res = check_edges(engine, qf, qt, resolution=R, base_pos=base)   # warm
     flags, cd = check_trajectories(engine, wps, base_pos=base)       # warm
+    res_nx = check_edges(noexit, qf, qt, resolution=R, base_pos=base)
+    # Owner-only ablation: same kernel engine, but owner groups / payload
+    # minima reduce on the host AFTER boolean traversals (per-query exits
+    # stay) — isolates the in-kernel owner-group early exit alone.
+    res_ne = check_edges(engine, qf, qt, resolution=R, base_pos=base,
+                         in_traversal_exit=False)
     dense = np.asarray(flags).any(axis=1)
     assert (~dense | res.collide).all(), "swept must upper-bound dense"
-    cs = res.counters
+    for ab in (res_nx, res_ne):
+        assert (ab.collide == res.collide).all() and \
+            (ab.first_hit == res.first_hit).all(), \
+            "no-exit ablation changed CCD verdicts"
+    cs, cn, cx = res.counters, res_ne.counters, res_nx.counters
+    assert cs.ref_arm_fallbacks == 0 and cd.ref_arm_fallbacks == 0, \
+        "fig_edges must run the Pallas kernel arm (ref-arm fallback seen)"
+    exit_ratio = cx.nodes_traversed / max(cs.nodes_traversed, 1)
+    owner_ratio = cn.nodes_traversed / max(cs.nodes_traversed, 1)
+    assert exit_ratio >= 1.5, \
+        f"in-kernel early exit saved only {exit_ratio:.2f}x nodes " \
+        f"({cx.nodes_traversed} no-exit vs {cs.nodes_traversed}), want 1.5x"
     walls = time_group(
         {"dense": lambda: check_trajectories(engine, wps, base_pos=base),
          "swept": lambda: check_edges(engine, qf, qt, resolution=R,
-                                      base_pos=base)}, repeats=5)
+                                      base_pos=base),
+         "noexit": lambda: check_edges(noexit, qf, qt, resolution=R,
+                                       base_pos=base)},
+        repeats=3)
     n_wp = E * (R + 1)
     emit("fig_edges/dense_waypoints", walls["dense"] * 1e6,
          f"edges={E};res={R};waypoints={n_wp};"
@@ -574,14 +627,23 @@ def fig_edges(S):
          f"edges={E};res={R};axis_exec={cs.axis_tests_executed};"
          f"nodes={cs.nodes_traversed};"
          f"colliding_edges={int(res.collide.sum())};"
-         f"mean_first_hit={float(hits.mean()) if hits.size else -1:.3f}")
+         f"mean_first_hit={float(hits.mean()) if hits.size else -1:.3f};"
+         f"ref_arm_fallbacks={cs.ref_arm_fallbacks}")
+    emit("fig_edges/owner_tiled", walls["swept"] * 1e6,
+         f"edges={E};res={R};arm=persistent_kernel;"
+         f"nodes_with_exit={cs.nodes_traversed};"
+         f"nodes_no_exit={cx.nodes_traversed};"
+         f"in_kernel_exit_node_saving={exit_ratio:.2f}x;"
+         f"owner_exit_only_saving={owner_ratio:.2f}x;"
+         f"ref_arm_fallbacks={cs.ref_arm_fallbacks}")
     emit("fig_edges/headline", 0.0,
          f"axis_tests_dense_over_swept="
          f"{cd.axis_tests_executed / max(cs.axis_tests_executed, 1):.2f}x;"
          f"nodes_dense_over_swept="
          f"{cd.nodes_traversed / max(cs.nodes_traversed, 1):.2f}x;"
          f"wall_dense_over_swept="
-         f"{walls['dense'] / max(walls['swept'], 1e-9):.2f}x")
+         f"{walls['dense'] / max(walls['swept'], 1e-9):.2f}x;"
+         f"nodes_noexit_over_exit={exit_ratio:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -615,13 +677,18 @@ def fig_bigscene(S):
         obbs = random_obbs(jax.random.PRNGKey(11), M)
         fused = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
         # fp32 pin: this figure isolates the LAYOUT switch (PR 5 baseline);
-        # fig_compress sweeps the row formats on the same scenes.
+        # fig_compress sweeps the row formats on the same scenes.  The
+        # kernel arm is forced (interpret off-TPU): past the residency
+        # budget the megakernel streams fixed-size sub-level windows
+        # instead of downgrading to the jnp ref arm.
         persist = CollisionEngine(tree, EngineConfig(
             mode="wavefront_persistent", vmem_budget=budget,
-            meta_format="fp32"))
+            meta_format="fp32", use_pallas_traverse=True))
         col_f, _ = fused.query(obbs)                  # compile + reference
         col_p, cp = persist.query(obbs)
         assert (np.asarray(col_p) == np.asarray(col_f)).all(), tag
+        assert cp.ref_arm_fallbacks == 0, \
+            f"fig_bigscene/{tag} fell back to the jnp ref arm"
         walls = time_group({"fused": lambda: fused.query(obbs),
                             "persist": lambda: persist.query(obbs)},
                            repeats=7)
@@ -636,6 +703,7 @@ def fig_bigscene(S):
              f"meta_bytes_streamed={cp.meta_bytes_streamed};"
              f"window_bytes={meta_stream_bytes(n_max)};"
              f"overflow={cp.frontier_overflow};"
+             f"ref_arm_fallbacks={cp.ref_arm_fallbacks};"
              f"speedup_vs_fused={speedups[-1]:.2f}x")
     emit("fig_bigscene/headline", 0.0,
          f"geomean_speedup_vs_fused="

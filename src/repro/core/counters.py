@@ -113,6 +113,13 @@ class Counters:
     #                                     batch coalescing (zero work each —
     #                                     the live-prefix num_valid lane masks
     #                                     them — but they occupy pool width)
+    ref_arm_fallbacks: int = 0          # persistent-mode plans the executor
+    #                                     routed to the jnp ref arm instead of
+    #                                     the Pallas kernel (capability gap,
+    #                                     e.g. an owner group past MAX_TILE_BQ;
+    #                                     each is also logged with the plan
+    #                                     shape — MUST stay 0 in the kernel
+    #                                     figure benches)
     # Service reliability counters (DESIGN.md §7): accumulated by the
     # RequestBatcher, reported in the fig_serve SLO rows.
     rejected: int = 0                   # shed at admission (malformed plan,
@@ -150,6 +157,7 @@ class Counters:
         self.meta_rows_streamed += other.meta_rows_streamed
         self.meta_bytes_streamed += other.meta_bytes_streamed
         self.pad_queries += other.pad_queries
+        self.ref_arm_fallbacks += other.ref_arm_fallbacks
         self.rejected += other.rejected
         self.retried += other.retried
         self.deadline_missed += other.deadline_missed

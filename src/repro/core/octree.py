@@ -336,9 +336,18 @@ class MultiSceneOctree:
     """
 
     node_meta: jax.Array   # (depth+1, n_max, words) int32 packed rows
+    codes: jax.Array       # (depth+1, n_max) uint32 scene-local Morton codes
     counts: jax.Array      # (depth+1,) int32 total nodes per level
     cell_sizes: jax.Array  # (S, depth+1) float32 per-scene cell edge
     scene_lo: jax.Array    # (S, 3) float32
+    # Per-scene sub-extents of the concatenated level rows: scene ``s``'s
+    # nodes at level ``l`` occupy flat indices [scene_off[s, l],
+    # scene_off[s, l] + scene_counts[s, l]).  The persistent megakernel's
+    # streamed window schedule uses these to fetch only the windows a
+    # tile's scene can touch (per-scene windows), so one huge scene in a
+    # ragged batch no longer forces the whole concatenated row resident.
+    scene_off: jax.Array     # (S, depth+1) int32 flat row offset per scene
+    scene_counts: jax.Array  # (S, depth+1) int32 occupied nodes per scene
     depth: int             # static shared leaf level
     meta_format: str = "fp32"  # static row encoding (repro.core.quantize)
 
@@ -347,8 +356,9 @@ class MultiSceneOctree:
         return self.cell_sizes.shape[0]
 
     def tree_flatten(self):
-        return ((self.node_meta, self.counts, self.cell_sizes,
-                 self.scene_lo), (self.depth, self.meta_format))
+        return ((self.node_meta, self.codes, self.counts, self.cell_sizes,
+                 self.scene_lo, self.scene_off, self.scene_counts),
+                (self.depth, self.meta_format))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -394,10 +404,16 @@ def concat_device_octrees(trees: List[Octree],
     cells = np.asarray([[t.cell_size(l) for l in range(L)] for t in trees],
                        np.float32)
     los = np.stack([np.asarray(t.scene_lo, np.float32) for t in trees])
+    per_scene = np.asarray([[len(t.levels[l].codes) for l in range(L)]
+                            for t in trees], np.int32)       # (S, L)
+    offs = (np.cumsum(per_scene, axis=0) - per_scene).astype(np.int32)
     return MultiSceneOctree(node_meta=jnp.asarray(meta),
+                            codes=jnp.asarray(codes),
                             counts=jnp.asarray(totals, jnp.int32),
                             cell_sizes=jnp.asarray(cells),
-                            scene_lo=jnp.asarray(los), depth=depth,
+                            scene_lo=jnp.asarray(los),
+                            scene_off=jnp.asarray(offs),
+                            scene_counts=jnp.asarray(per_scene), depth=depth,
                             meta_format=meta_format)
 
 

@@ -73,7 +73,8 @@ def check_trajectories(engine: CollisionEngine, waypoints: jax.Array,
 
 
 def check_edges(engine: CollisionEngine, q_from: jax.Array, q_to: jax.Array,
-                resolution: int = 16, base_pos=None) -> EdgeCheckResult:
+                resolution: int = 16, base_pos=None,
+                in_traversal_exit: bool = True) -> EdgeCheckResult:
     """Swept-edge (CCD) validation of E planning-graph edges.
 
     Each edge ``q_from[e] -> q_to[e]`` (joint space, linear interpolation)
@@ -87,7 +88,8 @@ def check_edges(engine: CollisionEngine, q_from: jax.Array, q_to: jax.Array,
     halves segments down to width 1).
     """
     first_hit, collide, counters = sweep_edges(
-        engine, q_from, q_to, resolution=resolution, base_pos=base_pos)
+        engine, q_from, q_to, resolution=resolution, base_pos=base_pos,
+        in_traversal_exit=in_traversal_exit)
     return EdgeCheckResult(first_hit=first_hit, collide=collide,
                            counters=counters)
 

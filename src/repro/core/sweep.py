@@ -115,9 +115,11 @@ def swept_obbs(corners: np.ndarray, rot: np.ndarray, edge: np.ndarray,
                 rot=jnp.asarray(r_mid.reshape(n, 3, 3), jnp.float32))
 
 
-def _segment_hits(engine, obbs: OBBs, n_seg: int) -> Tuple[np.ndarray, object]:
+def _segment_hits(engine, obbs: OBBs, n_seg: int,
+                  in_traversal_exit: bool = True
+                  ) -> Tuple[np.ndarray, object]:
     """One coarse refinement round: per-segment any-link hit flags."""
-    if engine.cfg.device_resident:
+    if engine.cfg.device_resident and in_traversal_exit:
         owner = np.repeat(np.arange(n_seg, dtype=np.int32), NUM_LINKS)
         best, c = engine.execute(plan_edges(obbs, owner, n_seg))
         return best < PAYLOAD_INF, c
@@ -125,8 +127,9 @@ def _segment_hits(engine, obbs: OBBs, n_seg: int) -> Tuple[np.ndarray, object]:
     return collide.reshape(n_seg, NUM_LINKS).any(axis=1), c
 
 
-def _first_hits(engine, obbs: OBBs, edge: np.ndarray,
-                lo: np.ndarray) -> Tuple[np.ndarray, object]:
+def _first_hits(engine, obbs: OBBs, edge: np.ndarray, lo: np.ndarray,
+                in_traversal_exit: bool = True
+                ) -> Tuple[np.ndarray, object]:
     """One payload round over width-1 segments: per-edge first hit.
 
     ``edge`` may repeat (several sub-intervals of one edge race in one
@@ -134,7 +137,7 @@ def _first_hits(engine, obbs: OBBs, edge: np.ndarray,
     ``np.unique(edge)`` order, ``PAYLOAD_INF`` where nothing hit.
     """
     uniq, local = np.unique(edge, return_inverse=True)
-    if engine.cfg.device_resident:
+    if engine.cfg.device_resident and in_traversal_exit:
         owner = np.repeat(local.astype(np.int32), NUM_LINKS)
         payload = np.repeat(lo.astype(np.int32), NUM_LINKS)
         got, c = engine.execute(
@@ -148,7 +151,8 @@ def _first_hits(engine, obbs: OBBs, edge: np.ndarray,
 
 
 def sweep_edges(engine, q_from, q_to, resolution: int = 16,
-                base_pos=None) -> Tuple[np.ndarray, np.ndarray, Counters]:
+                base_pos=None, in_traversal_exit: bool = True
+                ) -> Tuple[np.ndarray, np.ndarray, Counters]:
     """Batched first-hit validation of E joint-space edges (see module doc).
 
     Returns ``(first_hit (E,) float32, collide (E,) bool, counters)``:
@@ -157,6 +161,13 @@ def sweep_edges(engine, q_from, q_to, resolution: int = 16,
     edges), and ``counters`` aggregates the work of every refinement
     round — the number the fig_edges benchmark compares against dense
     waypoint sampling at the same resolution.
+
+    ``in_traversal_exit=False`` is the ablation arm: every round takes the
+    ungrouped ``plan_queries`` path and reduces owner groups / payload
+    minima on the host, so sibling lanes keep traversing after a group's
+    verdict is already decided — identical verdicts, strictly more nodes
+    visited.  The fig_edges benchmark compares node counts between the two
+    arms to price the in-kernel owner early exit.
     """
     q_from = np.asarray(q_from, np.float32)
     q_to = np.asarray(q_to, np.float32)
@@ -201,7 +212,8 @@ def sweep_edges(engine, q_from, q_to, resolution: int = 16,
             fe = np.asarray(fe, np.int32)
             flo = np.asarray(flo, np.int32)
             got, c = _first_hits(
-                engine, swept_obbs(corners, rot, fe, flo, flo + 1), fe, flo)
+                engine, swept_obbs(corners, rot, fe, flo, flo + 1), fe, flo,
+                in_traversal_exit=in_traversal_exit)
             total.merge(c)
             uniq = np.unique(fe)
             hit = got < PAYLOAD_INF
@@ -212,7 +224,8 @@ def sweep_edges(engine, q_from, q_to, resolution: int = 16,
             clo = np.asarray(clo, np.int32)
             chi = np.asarray(chi, np.int32)
             hits, c = _segment_hits(
-                engine, swept_obbs(corners, rot, ce, clo, chi), len(ce))
+                engine, swept_obbs(corners, rot, ce, clo, chi), len(ce),
+                in_traversal_exit=in_traversal_exit)
             total.merge(c)
             for e, lo, hi in zip(ce[hits], clo[hits], chi[hits]):
                 mid = (lo + hi) // 2

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import time
 import weakref
 from typing import List, Optional, Sequence, Tuple, Union
@@ -63,9 +64,13 @@ from repro.core.sact import (NUM_AXES, PAYLOAD_INF, SactResult,
                              payload_min_update)
 from repro.engine.plan import QueryPlan, plan_batch, plan_queries, plan_scenes
 from repro.kernels.compact.ops import compact_pairs
-from repro.kernels.persist.ops import (DEFAULT_VMEM_BUDGET,
-                                       choose_meta_layout, traverse_whole)
+from repro.kernels.persist.ops import (DEFAULT_VMEM_BUDGET, build_tile_map,
+                                       choose_meta_layout,
+                                       persist_kernel_unsupported,
+                                       traverse_whole)
 from repro.kernels.traverse.ops import traverse_step
+
+logger = logging.getLogger(__name__)
 
 MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
          "wavefront", "wavefront_fused", "wavefront_persistent")
@@ -398,6 +403,9 @@ def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
 #: trace time, so a key whose count stays 1 proved its cache hits.
 _TRACE_COUNTS: dict = {}
 
+#: Sentinel for "use the config's value" in per-call overrides.
+_UNSET = object()
+
 
 @functools.lru_cache(maxsize=None)
 def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
@@ -422,17 +430,24 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
     key = (mode, batch, capacity, use_spheres, use_pallas,
            use_pallas_traverse, streamed, meta_format)
 
-    def base(c, h, r, d, soq=None, owner=None, payload=None):
+    def base(c, h, r, d, soq=None, owner=None, payload=None, tiles=None):
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
-        if mode == "wavefront_persistent" or soq is not None:
+        if mode == "wavefront_persistent" or soq is not None or \
+                tiles is not None:
             # Whole-traversal megakernel / live-prefix ref; the ragged
-            # multi-scene flat frontier (soq given) also lands here for
-            # every CSR mode.
+            # multi-scene flat frontier (soq or a pre-built tile map)
+            # also lands here for every CSR mode.  Only the persistent
+            # mode may take the megakernel arm — the fused mode's ragged
+            # pool is ref-served so its counters stay the per-level
+            # arm's (its own Pallas kernel is the per-level step).
             return traverse_whole(c, h, r, d, capacity,
                                   use_spheres=use_spheres,
-                                  use_pallas=use_pallas_traverse,
+                                  use_pallas=(use_pallas_traverse
+                                              if mode == "wavefront_persistent"
+                                              else False),
                                   scene_of_query=soq, owner_of_query=owner,
-                                  payload=payload, streamed=streamed)
+                                  payload=payload, streamed=streamed,
+                                  tiles=tiles)
         if mode == "wavefront_fused":
             return _traverse_fused(c, h, r, d, capacity, use_spheres,
                                    use_pallas, use_pallas_traverse,
@@ -443,8 +458,9 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
     if batch == "single":
         fn = base
     elif batch == "scenes":      # padded stacked scenes (legacy vmap path)
-        def fn(c, h, r, d, soq=None, owner=None, payload=None):
-            assert soq is None and owner is None and payload is None, \
+        def fn(c, h, r, d, soq=None, owner=None, payload=None, tiles=None):
+            assert soq is None and owner is None and payload is None \
+                and tiles is None, \
                 "the padded-scenes vmap path has no scene/owner/payload lanes"
             return jax.vmap(lambda cc, hh, rr, dd: base(cc, hh, rr, dd))(
                 c, h, r, d)
@@ -594,15 +610,15 @@ _TABLE_CACHE: dict = {}
 _TABLE_CACHE_MAX = 8
 
 
-def _scene_tables(octrees: List[Octree], padded: bool):
-    key = (padded, tuple(id(t) for t in octrees))
+def _scene_tables(octrees: List[Octree], padded: bool, fmt: str = "fp32"):
+    key = (padded, fmt, tuple(id(t) for t in octrees))
     hit = _TABLE_CACHE.get(key)
     if hit is not None:
         refs, tables = hit
         if all(r() is t for r, t in zip(refs, octrees)):
             return tables
     tables = (stack_device_octrees(octrees) if padded
-              else concat_device_octrees(octrees))
+              else concat_device_octrees(octrees, meta_format=fmt))
     while len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
         _TABLE_CACHE.pop(next(iter(_TABLE_CACHE)))
     _TABLE_CACHE[key] = ([weakref.ref(t) for t in octrees], tables)
@@ -679,9 +695,17 @@ class CollisionEngine:
         return self._device_tree(fmt)
 
     def _choose_meta(self):
-        """Run (and memoize) the layout x format chooser for this scene."""
+        """Run (and memoize) the layout x format chooser for this engine's
+        scene(s).  Multi-scene engines size the CONCATENATED flat table
+        (per-level totals across scenes) — the table the CSR modes
+        actually hold — so ragged batches stream and compress on the same
+        budget rules as single scenes."""
         if self._meta_choice is None:
-            n_max = max(len(l.codes) for l in self.octree.levels)
+            n_levels = max(len(t.levels) for t in self.octrees)
+            n_max = max(
+                sum(len(t.levels[l].codes) if l < len(t.levels) else 0
+                    for t in self.octrees)
+                for l in range(n_levels))
             layout = (None if self.cfg.stream_meta is None else
                       ("streamed" if self.cfg.stream_meta else "resident"))
             self._meta_choice = choose_meta_layout(
@@ -767,32 +791,78 @@ class CollisionEngine:
 
     # ------------------------------------------------------------------
     def _run(self, capacity: int, batch: str = "single",
-             streamed: bool = False, meta_format: str = "fp32"):
-        """Cached jit-compiled traversal for this engine's config."""
+             streamed: bool = False, meta_format: str = "fp32",
+             use_pallas_traverse=_UNSET):
+        """Cached jit-compiled traversal for this engine's config.
+
+        ``use_pallas_traverse`` overrides the config's setting (the
+        persistent executor resolves arm routing per plan — capability
+        fallbacks pin the ref arm for that plan only)."""
+        upt = (self.cfg.use_pallas_traverse
+               if use_pallas_traverse is _UNSET else use_pallas_traverse)
         return _traversal_fn(self.cfg.mode, batch, capacity,
                              self.cfg.use_spheres,
                              self.cfg.use_pallas_compact,
-                             self.cfg.use_pallas_traverse, streamed,
-                             meta_format)
+                             upt, streamed, meta_format)
 
     def _exec_device(self, plan: QueryPlan):
         cfg = self.cfg
         Q = plan.num_queries
         owner, payload = plan.owner_of_query, plan.payload
+        fmt = self.meta_format if cfg.mode in CSR_MODES else "fp32"
         # Metadata residency is picked here, per (mode, statics) cache
         # key, so paper-scale scenes run the persistent megakernel with
-        # streamed windows instead of needing a different mode.  The
-        # ragged multi-scene table and cross-slot owner (swept-edge)
-        # plans are ref-served with the table resident, so they neither
-        # stream nor model the window traffic (owner-group tiling and
-        # ragged streaming are the DESIGN.md §3 follow-ups).
-        streamed = (cfg.persistent and plan.num_scenes == 1
-                    and plan.owner_of_query is None
-                    and self.meta_layout == "streamed")
+        # streamed windows instead of needing a different mode — for
+        # EVERY plan shape: ragged multi-scene batches and cross-slot
+        # owner (swept-edge) plans are owner-group tiled onto the same
+        # kernel (per-scene sub-level windows key each tile's schedule
+        # to its own scene), so they stream and compress like single
+        # scenes.
+        streamed = cfg.persistent and self.meta_layout == "streamed"
+        # Kernel-arm routing (persistent mode): the only ref-arm routes
+        # left are named capability gaps — counted in
+        # ``Counters.ref_arm_fallbacks`` and logged with the plan shape,
+        # never silent.
+        kernel_arm = (cfg.use_pallas_traverse
+                      if cfg.use_pallas_traverse is not None
+                      else jax.default_backend() == "tpu")
+        fallback_reason = None
+        if cfg.persistent:
+            fallback_reason = persist_kernel_unsupported(
+                owner, plan.scene_of_query)
+            if fallback_reason is not None:
+                if kernel_arm:
+                    logger.debug(
+                        "persistent plan %s routed to the ref arm: %s",
+                        plan.shape_tag, fallback_reason)
+                kernel_arm = False
+        upt = kernel_arm if cfg.persistent else cfg.use_pallas_traverse
+        # Plans whose verdict groups or scenes cross query-tile
+        # boundaries run as an owner-group tiled pool (pre-built here,
+        # eagerly — the tile map needs concrete ids — and passed through
+        # jit as arrays); capability fallbacks keep the untiled legacy
+        # ref routing.
+        tiled = (cfg.persistent and fallback_reason is None
+                 and (plan.num_scenes > 1 or owner is not None))
+        tiles = None
+        if tiled:
+            tm = build_tile_map(
+                Q, 128,
+                None if plan.scene_of_query is None
+                else np.asarray(plan.scene_of_query),
+                None if owner is None else np.asarray(owner))
+            perm = np.maximum(tm.perm, 0)
+            run_args = (jnp.asarray(plan.obb_c)[perm],
+                        jnp.asarray(plan.obb_h)[perm],
+                        jnp.asarray(plan.obb_r)[perm])
+            owner_t = None if owner is None else jnp.asarray(owner)[perm]
+            payload_t = (None if payload is None
+                         else jnp.asarray(payload)[perm])
+            tiles = jax.tree.map(jnp.asarray, tm.tiles)
         if plan.num_scenes > 1 and cfg.mode in CSR_MODES:
             # Ragged flat frontier: one pool of (scene, query, CSR node)
             # triples over the concatenated multi-scene table.
-            multi = _scene_tables(self.octrees, padded=False)
+            multi = _scene_tables(self.octrees, padded=False, fmt=fmt)
             per_scene = Q // plan.num_scenes
             worst = min(
                 sum(frontier_capacity_bound([len(l.codes) for l in t.levels],
@@ -800,11 +870,19 @@ class CollisionEngine:
                     for t in self.octrees),
                 max(cfg.max_frontier, Q))
             memo_key = ("csr_scenes", Q, plan.grouped, self._scene_sig)
+            if tiled:
+                run = lambda cap: self._run(
+                    cap, streamed=streamed, meta_format=fmt,
+                    use_pallas_traverse=upt)(
+                        *run_args, multi, None, owner_t, payload_t, tiles)
+            else:
+                run = lambda cap: self._run(
+                    cap, streamed=streamed, meta_format=fmt,
+                    use_pallas_traverse=upt)(
+                        plan.obb_c, plan.obb_h, plan.obb_r, multi,
+                        plan.scene_of_query, owner, payload)
             verdict, st, cap, replays = _escalate(
-                lambda cap: self._run(cap)(
-                    plan.obb_c, plan.obb_h, plan.obb_r, multi,
-                    plan.scene_of_query, owner, payload),
-                Q, worst, cfg, start=self._cap_memo.get(memo_key))
+                run, Q, worst, cfg, start=self._cap_memo.get(memo_key))
         elif plan.num_scenes > 1:
             # mode="wavefront" keeps the legacy padded-vmap path (its
             # frontier carries Morton codes, not CSR indices) for A/B.
@@ -822,26 +900,29 @@ class CollisionEngine:
                     plan.obb_r.reshape(S, M, 3, 3), dev),
                 M, worst, cfg, start=self._cap_memo.get(memo_key))
         else:
-            fmt = self.meta_format if cfg.mode in CSR_MODES else "fp32"
             memo_key = ("single", Q, plan.grouped, self._scene_sig)
+            if tiled:
+                run = lambda cap: self._run(
+                    cap, streamed=streamed, meta_format=fmt,
+                    use_pallas_traverse=upt)(
+                        *run_args, self.device_tree, None, owner_t,
+                        payload_t, tiles)
+            else:
+                run = lambda cap: self._run(
+                    cap, streamed=streamed, meta_format=fmt,
+                    use_pallas_traverse=upt)(
+                        plan.obb_c, plan.obb_h, plan.obb_r,
+                        self.device_tree, None, owner, payload)
             verdict, st, cap, replays = _escalate(
-                lambda cap: self._run(cap, streamed=streamed,
-                                      meta_format=fmt)(
-                    plan.obb_c, plan.obb_h, plan.obb_r, self.device_tree,
-                    None, owner, payload),
-                Q, self._capacity(Q), cfg,
+                run, Q, self._capacity(Q), cfg,
                 start=self._cap_memo.get(memo_key))
         self._cap_memo[memo_key] = cap
         lanes = ((plan.owner_of_query is not None)
                  + (plan.payload is not None))
-        # Ragged multi-scene tables are built fp32 (compressing the flat
-        # concat table is the DESIGN.md §3 follow-up), so only the
-        # single-scene path prices a compressed format.
-        fmt = (self.meta_format
-               if plan.num_scenes == 1 and cfg.mode in CSR_MODES
-               else "fp32")
         counters = _stats_to_counters(st, cfg.mode, replays,
                                       extra_lanes=lanes, meta_format=fmt)
+        if cfg.persistent and fallback_reason is not None:
+            counters.ref_arm_fallbacks = 1
         verdict = np.asarray(jax.device_get(verdict))
         if plan.grouped:
             # Grouped verdicts are computed in a Q-sized buffer (owner ids

@@ -99,6 +99,19 @@ class QueryPlan:
     def obbs(self) -> OBBs:
         return OBBs(center=self.obb_c, half=self.obb_h, rot=self.obb_r)
 
+    @property
+    def shape_tag(self) -> str:
+        """One-line plan-shape descriptor for logs and fallback reports
+        (``Counters.ref_arm_fallbacks``): names the workload and every
+        lane that shapes arm routing, so a downgrade is never anonymous.
+        """
+        lanes = [l for l, v in (("scene", self.scene_of_query),
+                                ("owner", self.owner_of_query),
+                                ("payload", self.payload))
+                 if v is not None]
+        return (f"{self.kind}[Q={self.num_queries} S={self.num_scenes} "
+                f"G={self.groups} lanes={'+'.join(lanes) or 'none'}]")
+
     def unflatten(self, flat) -> np.ndarray:
         """Map flat group verdicts back to the front-end's native shape.
 

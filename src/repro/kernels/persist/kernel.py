@@ -7,7 +7,7 @@ returns, never spilling intermediates.  The per-level fused step
 (:mod:`repro.kernels.traverse`) still launches one kernel per octree level
 and round-trips the compacted frontier through HBM between levels; this
 kernel removes that last HBM round trip.  The grid walks tiles of ``bq``
-queries, and each grid step owns its tile's traversal end to end:
+pool slots, and each grid step owns its tile's traversal end to end:
 
   1. the tile's frontier lives in a **double-buffered VMEM scratch** pair
      ``(2, fcap)`` of (query, CSR node index) lanes — level ``l`` reads
@@ -35,6 +35,28 @@ queries, and each grid step owns its tile's traversal end to end:
      are *not* silently traversed: verdicts are exact iff the overflow
      count is zero.
 
+**Owner-group tiling.**  The host packs the pool so every verdict group
+(all pairs sharing an ``owner_of_query`` — e.g. the segment lanes of one
+swept CCD edge) lands in ONE tile (:func:`repro.kernels.persist.ops.
+build_tile_map`).  The per-tile ``owner_local`` input names each slot's
+group by the group's first slot in the tile (``-1`` = pad slot; live slots
+form each tile's prefix).  The payload min-fold and its early-exit gate
+then run on the GROUP one-hot: a terminal hit folds the lane's payload
+into ``best[owner]``, and a lane stays live only while its payload could
+still beat **its group's** best — so one segment's first hit retires its
+sibling lanes *in-kernel*, the per-edge first-hit early exit of
+swept-edge CCD.  Identity owners (``owner_local = slot``) reproduce the
+per-query boolean/payload kernel bit-for-bit.
+
+**Ragged multi-scene batches** run on the same flat CSR table
+(:class:`repro.core.octree.MultiSceneOctree`): tiles are scene-exclusive
+(the tile map never mixes scenes in a tile), the per-tile ``scene_of_tile``
+id picks the scene's origin/cell-size row of the flat ``scal`` table and
+its rows of the per-scene level sub-extent tables (``scene_off`` /
+``scene_counts``), and the tile's frontier seeds at the scene's root (flat
+node index ``s`` of the level-0 row).  Child pointers are pre-rebased to
+flat indices, so the walk itself is scene-blind.
+
 Node metadata comes in one of two **layouts** (``stream`` static flag) x
 three row **formats** (``meta_fmt`` static: fp32 = 16 B, bf16 = 8 B,
 u8 = 4 B rows — :mod:`repro.core.quantize`), picked by the executor's
@@ -47,52 +69,44 @@ since its rows store only the node's octant:
 * ``resident`` — the whole ``(depth+1, n_max, words)`` table is a VMEM
   block, bounding scene size at roughly VMEM / row bytes / (depth+1)
   nodes;
-* ``streamed`` — the table stays in HBM (``pltpu.ANY``) and the kernel
-  **double-buffers per-level row windows** through a ping/pong VMEM
-  scratch pair: while level ``l`` runs its SACT+expand+compact out of slot
-  ``l % 2``, the DMA for level ``l + 1``'s window (the occupied row extent
-  of that level, :data:`repro.core.octree.META_ROW_ALIGN`-row chunks) is
-  already in flight into slot ``(l + 1) % 2``.  Windows are keyed on the
-  levels the tile's frontier actually visits: a drained frontier stops the
-  prefetch chain, and every started window is waited exactly once before
-  its level reads it.  VMEM residency drops from ``(depth+1) * n_max``
-  rows to ``2 * n_max`` — ``(depth+1)/2``x more scene per VMEM byte, 4x
-  at the paper's depth-7 operating point (524k-point clouds); fixed-size
-  sub-level windows decoupling scratch from the widest level are the
-  recorded follow-up (ROADMAP).  Rows fetched are counted into
-  the ``meta_rows`` scalar, priced by the bytes model at the format's row
-  width (:data:`repro.core.counters.BYTES_META_STREAM` and its
-  ``_BF16`` / ``_U8`` siblings), with the jnp ref arm modeling the
-  identical per-tile window schedule.  The row *count* per format is
+* ``streamed`` — the table stays in HBM (``pltpu.ANY``) and each level is
+  iterated through **fixed-size sub-level windows** of ``wsub`` rows over
+  the tile's scene sub-extent, double-buffered through a ping/pong VMEM
+  scratch pair of ``wsub + 8`` rows each: while window ``w``'s lanes run
+  their SACT out of one slot, the DMA for the tile's NEXT live window is
+  already in flight into the other (windows no lane points into are
+  skipped entirely).  The fetched span of a window is **row-exact**: the
+  occupied extent clipped to the window and rounded out to whole 8-row
+  DMA chunks (a 128-row chunk tier + an 8-row remainder tier), so a
+  shallow level costs 8 fetched rows, not a full
+  :data:`repro.core.octree.META_ROW_ALIGN` window.  VMEM scratch is
+  ``2 * (wsub + 8)`` rows — decoupled from ``n_max`` entirely, so
+  arbitrarily wide levels stream through constant VMEM.  Rows fetched are
+  counted into the ``meta_rows`` scalar, priced by the bytes model at the
+  format's row width (:data:`repro.core.counters.BYTES_META_STREAM` and
+  its ``_BF16`` / ``_U8`` siblings), with the jnp ref arm modeling the
+  identical per-(tile, window) schedule.  The row *count* per format is
   unchanged — compression divides the streamed bytes by exactly 2x/4x.
 
-Because queries are partitioned across tiles and a pair's whole subtree
-stays in its query's tile, the early-exit coupling (a decided query
-retires all its pairs) is tile-local, and on every clean (overflow-free)
-run the union of per-tile work is *bitwise* the work of the global-frontier
-fused arm: same pairs per level, same exit codes, same counters (summed
-over tiles).  Overflow accounting, however, is per-tile: each tile owns
-``fcap`` VMEM lanes, so with multiple tiles the aggregate frontier room is
-``num_tiles * fcap`` and a frontier that overflows the ref's single global
-pool may fit here (or vice versa under heavy skew).  Each backend
-escalates against its *own* overflow count until clean, after which the
-counters agree again; only the clamped regime (pinned
-``frontier_capacity`` / ``max_frontier``), where verdicts under-approximate
-by contract, may drop different pairs per backend.
+Because pool slots are partitioned across tiles and a verdict group's
+pairs never cross tiles, the early-exit coupling (a decided group retires
+all its pairs) is tile-local, and on every clean (overflow-free) run the
+union of per-tile work is *bitwise* the work of the global-frontier ref
+arm: same pairs per level, same exit codes, same counters (summed over
+tiles and windows — the min-fold is order-free and every per-lane SACT
+result depends only on its own lane).  Overflow accounting, however, is
+per-tile: each tile owns ``fcap`` VMEM lanes, so with multiple tiles the
+aggregate frontier room is ``num_tiles * fcap`` and a frontier that
+overflows the ref's single global pool may fit here (or vice versa under
+heavy skew).  Each backend escalates against its *own* overflow count
+until clean, after which the counters agree again; only the clamped
+regime (pinned ``frontier_capacity`` / ``max_frontier``), where verdicts
+under-approximate by contract, may drop different pairs per backend.
 
 Per-query HBM traffic collapses to: seed pair in, one verdict word out,
 plus spill traffic — the bytes model of
 :data:`repro.core.counters.BYTES_PERSIST_QUERY` — plus, under the
 streamed layout, the metadata window traffic above.
-
-The frontier carries a **payload lane** (:mod:`repro.engine.plan`): each
-query's int32 payload rides its pairs, a terminal hit folds it into the
-per-query ``best`` with a min (the verdict word), and a pair stays live
-only while its payload could still beat its query's best.  All-zero
-payloads reproduce the boolean engine bit-for-bit.  Cross-slot owner
-lanes (per-EDGE first hit across a swept edge's segments) are served by
-the reference arm: queries would no longer own their verdict groups
-tile-exclusively — tiling by owner group is the follow-up (DESIGN.md §3).
 
 On the CPU CI matrix the kernel (both layouts, including the DMA window
 machinery) runs under ``interpret=True`` on small scenes.
@@ -120,11 +134,11 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
-                   payload_ref, collide_ref, perlevel_ref, hist_ref,
-                   scalars_ref, ring_ref, *scratch, num_queries: int, bq: int,
-                   fcap: int, depth: int, n_max: int, ring_cap: int,
-                   use_spheres: bool, stream: bool, meta_fmt: str):
+def persist_kernel(scal_ref, off_ref, cnt_ref, sot_ref, nvalid_ref, obb_ref,
+                   meta_ref, payload_ref, owner_ref, collide_ref,
+                   perlevel_ref, hist_ref, scalars_ref, ring_ref, *scratch,
+                   bq: int, fcap: int, depth: int, n_max: int, ring_cap: int,
+                   use_spheres: bool, stream: bool, meta_fmt: str, wsub: int):
     # Scratch order mirrors make_persist_call's scratch_shapes: frontier
     # query/node slot pairs always; a third frontier lane (each lane's own
     # Morton code) under the u8 format, whose rows store only the octant;
@@ -139,50 +153,67 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
         meta_scr, dma_sem = scratch[nscr], scratch[nscr + 1]
     t = pl.program_id(0)
     L = depth + 1
-    W = META_ROW_ALIGN
+    WS = wsub + 8                       # window scratch rows per slot
     vpf = META_FORMAT_WORDS[meta_fmt]
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, fcap), 1).reshape((fcap,))
     q_base = t * bq
-    # Live-prefix mask: the SMEM valid count (<= the static num_queries
-    # pool width) excludes the sharded executor's pad slots — a fully
-    # padded tile seeds an empty frontier and contributes zero work.
-    n_q = jnp.clip(nvalid_ref[0] - q_base, 0, bq)
+    s = sot_ref[t]                      # this tile's scene id
+    own_tile = owner_ref[...]           # (bq,) local owner slot, -1 = pad
+    # Live-prefix mask: live slots form each tile's prefix (the tile map
+    # pads at tile tails) AND sit before the SMEM valid count (the sharded
+    # executor's pool-tail pads) — a fully padded tile seeds an empty
+    # frontier and contributes zero work.
+    n_q = jnp.minimum(jnp.sum(jnp.where(own_tile >= 0, 1, 0)),
+                      jnp.clip(nvalid_ref[0] - q_base, 0, bq))
 
-    scal = scal_ref[...]                       # [scene_lo(3), cells(L)]
-    obb_tile = obb_ref[...]                    # (bq, 15) this tile's queries
-    pay_tile = payload_ref[...]                # (bq,) payload lane per query
+    sb = s * (3 + L)                    # this scene's row of the flat scal
+    obb_tile = obb_ref[...]             # (bq, 15) this tile's queries
+    pay_tile = payload_ref[...]         # (bq,) payload lane per query
     iota_q = jax.lax.broadcasted_iota(jnp.int32, (1, bq), 1).reshape((bq,))
     iota_hist = jax.lax.broadcasted_iota(
         jnp.int32, (1, NUM_EXIT_CODES), 1).reshape((NUM_EXIT_CODES,))
+    inf = jnp.int32(PAYLOAD_INF)
 
     if stream:
-        # ---- HBM->VMEM metadata window DMA (ping/pong scratch pair) ----
-        # A level's window is its occupied row extent, issued as
-        # ``nchunk_ref[level]`` back-to-back W-row copies on the slot's
-        # semaphore; wait_window re-derives the same descriptors so every
+        # ---- HBM->VMEM sub-level window DMA (ping/pong scratch pair) ----
+        # Window ``w`` of this tile's scene covers flat rows
+        # [off + w*wsub, off + w*wsub + min(wsub, cnt - w*wsub)); the DMA
+        # span rounds that out to whole 8-row chunks and is issued as a
+        # 128-row chunk tier plus an 8-row remainder tier on the slot's
+        # semaphore.  The wait op re-derives the same descriptors so every
         # started chunk is waited exactly once.
-        def _window(op, level, slot):
-            def chunk(k, _):
+        def _win_dma(op, level, w, slot):
+            off = off_ref[s * L + level]
+            cnt = cnt_ref[s * L + level]
+            g_lo = off + w * wsub
+            occ = jnp.clip(cnt - w * wsub, 0, wsub)
+            win_lo = (g_lo // 8) * 8
+            span = (-(-(g_lo + occ) // 8)) * 8 - win_lo
+            base = slot * WS
+            n128 = span // 128
+
+            def chunk128(k, c):
                 dma = pltpu.make_async_copy(
-                    meta_ref.at[level, pl.ds(k * W, W)],
-                    meta_scr.at[pl.ds(slot * n_max + k * W, W)],
+                    meta_ref.at[level, pl.ds(win_lo + k * 128, 128)],
+                    meta_scr.at[pl.ds(base + k * 128, 128)],
                     dma_sem.at[slot])
                 (dma.start if op == "start" else dma.wait)()
-                return _
-            jax.lax.fori_loop(0, nchunk_ref[level], chunk, 0)
+                return c
+            jax.lax.fori_loop(0, n128, chunk128, 0)
 
-        # Seed: level-0 window.  Gated on the tile holding queries so the
-        # level-0 wait gate (prev_live = n_q) pairs with it exactly — an
-        # empty tile must not leave a DMA in flight at kernel end.
-        @pl.when(n_q > 0)
-        def _():
-            _window("start", 0, 0)
-    else:
-        meta_flat = meta_ref[...].reshape(L * n_max, vpf)
+            def chunk8(k, c):
+                r0 = n128 * 128 + k * 8
+                dma = pltpu.make_async_copy(
+                    meta_ref.at[level, pl.ds(win_lo + r0, 8)],
+                    meta_scr.at[pl.ds(base + r0, 8)],
+                    dma_sem.at[slot])
+                (dma.start if op == "start" else dma.wait)()
+                return c
+            jax.lax.fori_loop(0, jax.lax.rem(span, 128) // 8, chunk8, 0)
 
     def level_body(level, carry):
         (n_live, best_vec, per_level, hist, leaf, axis_exec, sphere,
-         overflow, spilled, cursor, ring, meta_rows, prev_live) = carry
+         overflow, spilled, cursor, ring, meta_rows) = carry
         slot = jax.lax.rem(level, 2)
         q = jnp.where(slot == 0, fq_scr[0, :], fq_scr[1, :])
         idx = jnp.where(slot == 0, fn_scr[0, :], fn_scr[1, :])
@@ -190,100 +221,154 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
                  if meta_fmt == "u8" else None)
         valid = lane < n_live
 
-        # ---- one metadata gather per lane (code, full, CSR cols) ------
-        if stream:
-            # Wait for this level's window (started while the previous
-            # level computed), then put the NEXT level's window in flight
-            # before any SACT work — the copy overlaps the whole level.
-            @pl.when(prev_live > 0)
-            def _():
-                _window("wait", level, slot)
-
-            nxt_live = (level < depth) & (n_live > 0)
-
-            @pl.when(nxt_live)
-            def _():
-                _window("start", level + 1, 1 - slot)
-
-            meta_rows = meta_rows + jnp.where(
-                nxt_live,
-                nchunk_ref[jnp.minimum(level + 1, depth)] * W, 0)
-            # One offset gather out of the active window half — the same
-            # flat-gather idiom as the resident path, never selecting the
-            # half an in-flight prefetch DMA is writing.
-            meta = jnp.take(meta_scr[...],
-                            slot * n_max + jnp.clip(idx, 0, n_max - 1),
-                            axis=0)
-        else:
-            meta = jnp.take(meta_flat,
-                            level * n_max + jnp.clip(idx, 0, n_max - 1),
-                            axis=0)
-        xyz_i, full_l, child_start, child_mask, code_own = decode_meta_rows(
-            meta, meta_fmt, level, pcode)
-
-        # ---- gather query boxes from the tile's own OBB block ---------
-        # (queries never cross tiles, so lane query ids are tile-local)
+        # ---- per-level query-side gathers (constant across windows) ---
+        # (pool slots never cross tiles, so lane query ids are tile-local)
         q_onehot = (q - q_base)[:, None] == iota_q[None, :]       # (fcap, bq)
         rows = jnp.dot(q_onehot.astype(jnp.float32), obb_tile,
                        preferred_element_type=jnp.float32)        # (fcap, 15)
         oc = [rows[:, i] for i in range(3)]
         oh = [rows[:, 3 + i] for i in range(3)]
         R = [[rows[:, 6 + 3 * i + k] for k in range(3)] for i in range(3)]
+        pay_lane = jnp.sum(jnp.where(q_onehot, pay_tile[None, :], 0), axis=1)
+        # The verdict-group one-hot: folds and gates address the lane's
+        # OWNER slot, so sibling lanes of one group share one best cell.
+        # Identity owners make this the per-query one-hot of old.
+        own_lane = jnp.sum(jnp.where(q_onehot, own_tile[None, :], 0), axis=1)
+        o_onehot = own_lane[:, None] == iota_q[None, :]           # (fcap, bq)
 
-        # ---- node AABB from decoded cell coords, in-register ----------
-        cell = jnp.take(scal, 3 + level)
-        xyz = xyz_i.astype(jnp.float32)
-        node_c = [scal[i] + (xyz[:, i] + 0.5) * cell for i in range(3)]
+        cell = scal_ref[sb + 3 + level]
         node_h = cell * 0.5
 
-        # ---- two-phase staged SACT (shared tile formulas) -------------
-        tt = [oc[i] - node_c[i] for i in range(3)]
-        A = [[jnp.abs(R[i][k]) + _EPS for k in range(3)] for i in range(3)]
-        collide_l, exit_code = sact_tile(tt, R, A, [node_h] * 3, oh,
-                                         use_spheres=use_spheres)
+        def sact_window(meta, in_w, best_cur):
+            """One SACT + fold + stash pass over the lanes of one gather.
 
-        is_term = full_l | (level == depth)
-        overlap = collide_l & valid
-        term_hit = overlap & is_term
+            Per-lane results depend only on the lane's own inputs (the
+            edge-stage skip in :func:`sact_tile` can only *run more* work
+            when extra undecided lanes share the call, never change a
+            decided lane), so partitioning a level's lanes across windows
+            leaves every per-lane quantity — and therefore every summed
+            counter and the order-free min-fold — bitwise-identical to one
+            whole-level pass.
+            """
+            xyz_i, full_l, child_start, child_mask, code_own = \
+                decode_meta_rows(meta, meta_fmt, level, pcode)
+            xyz = xyz_i.astype(jnp.float32)
+            node_c = [scal_ref[sb + i] + (xyz[:, i] + 0.5) * cell
+                      for i in range(3)]
+            tt = [oc[i] - node_c[i] for i in range(3)]
+            A = [[jnp.abs(R[i][k]) + _EPS for k in range(3)]
+                 for i in range(3)]
+            collide_l, exit_code = sact_tile(tt, R, A, [node_h] * 3, oh,
+                                             use_spheres=use_spheres)
+            is_term = full_l | (level == depth)
+            overlap = collide_l & in_w
+            term_hit = overlap & is_term
+            # Terminal hits fold the lane's payload into its GROUP's best.
+            fold = jnp.minimum(best_cur, jnp.min(
+                jnp.where(term_hit[:, None] & o_onehot, pay_lane[:, None],
+                          inf), axis=0))
+            term_valid = jnp.where(in_w & is_term, 1, 0)
+            d_leaf = jnp.sum(term_valid)
+            d_axis = jnp.sum(
+                jnp.where(in_w, axis_tests_from_exit(exit_code), 0))
+            d_hist = jnp.sum(
+                jnp.where((exit_code[:, None] == iota_hist[None, :])
+                          & (term_valid[:, None] != 0), 1, 0), axis=0)
+            # Expansion candidates stash: a zero mask == not a candidate.
+            cand_mask = jnp.where(overlap & ~is_term, child_mask, 0)
+            return fold, d_leaf, d_axis, d_hist, cand_mask, child_start, \
+                code_own
 
-        # ---- per-query payload-lane best, tile-local (queries never
-        # cross tiles): a terminal hit folds the lane's payload in with a
-        # min — the one-hot re-derivation of sact.payload_min_update —
-        # and a lane stays live only while its payload could still beat
-        # its query's best (boolean early exit == all-zero payloads).
-        inf = jnp.int32(PAYLOAD_INF)
-        pay_lane = jnp.sum(jnp.where(q_onehot, pay_tile[None, :], 0), axis=1)
-        best_vec = jnp.minimum(best_vec, jnp.min(
-            jnp.where(term_hit[:, None] & q_onehot, pay_lane[:, None], inf),
-            axis=0))
-        best_lane = jnp.min(jnp.where(q_onehot, best_vec[None, :], inf),
+        if stream:
+            off_l = off_ref[s * L + level]
+            cnt_l = cnt_ref[s * L + level]
+            nwin = -(-n_max // wsub)            # static window-index bound
+            big = jnp.int32(nwin)
+            win_lane = jnp.where(valid, (idx - off_l) // wsub, big)
+            w0 = jnp.min(win_lane)
+
+            @pl.when(w0 < big)
+            def _():
+                _win_dma("start", level, w0, 0)
+
+            def wbody(w, wc):
+                (k, fold, leaf_a, axis_a, hist_a, st_mask, st_start,
+                 st_code, rows_a) = wc
+                in_w = valid & (win_lane == w)
+                has_w = jnp.sum(jnp.where(in_w, 1, 0)) > 0
+                ks = jax.lax.rem(k, 2)
+
+                @pl.when(has_w)
+                def _():
+                    _win_dma("wait", level, w, ks)
+
+                # Put the tile's NEXT live window in flight into the other
+                # slot before any SACT work — the copy overlaps the pass.
+                nxt = jnp.min(jnp.where(valid & (win_lane > w), win_lane,
+                                        big))
+
+                @pl.when(has_w & (nxt < big))
+                def _():
+                    _win_dma("start", level, nxt, 1 - ks)
+
+                g_lo = off_l + w * wsub
+                win_lo = (g_lo // 8) * 8
+                local = jnp.clip(idx - win_lo, 0, WS - 1)
+                meta = jnp.take(meta_scr[...], ks * WS + local, axis=0)
+                f, d_leaf, d_axis, d_hist, cm, cs, co = sact_window(
+                    meta, in_w, fold)
+                occ = jnp.clip(cnt_l - w * wsub, 0, wsub)
+                span = (-(-(g_lo + occ) // 8)) * 8 - win_lo
+                return (k + jnp.where(has_w, 1, 0), f,
+                        leaf_a + d_leaf, axis_a + d_axis, hist_a + d_hist,
+                        jnp.where(in_w, cm, st_mask),
+                        jnp.where(in_w, cs, st_start),
+                        jnp.where(in_w, co, st_code),
+                        rows_a + jnp.where(has_w, span, 0))
+
+            wmax = jnp.max(jnp.where(valid, win_lane + 1, 0))
+            z = jnp.zeros((fcap,), jnp.int32)
+            (_, best_vec, d_leaf, d_axis, d_hist, st_mask, st_start,
+             st_code, d_rows) = jax.lax.fori_loop(
+                0, wmax, wbody,
+                (jnp.int32(0), best_vec, jnp.int32(0), jnp.int32(0),
+                 jnp.zeros((NUM_EXIT_CODES,), jnp.int32), z, z, z,
+                 jnp.int32(0)))
+            meta_rows = meta_rows + d_rows
+        else:
+            meta = jnp.take(meta_flat,
+                            level * n_max + jnp.clip(idx, 0, n_max - 1),
+                            axis=0)
+            (best_vec, d_leaf, d_axis, d_hist, st_mask, st_start,
+             st_code) = sact_window(meta, valid, best_vec)
+
+        # ---- group-best gate + work accounting (fused-arm formulas) ---
+        best_lane = jnp.min(jnp.where(o_onehot, best_vec[None, :], inf),
                             axis=1)
-
-        # ---- work accounting (formulas of the fused arm, bitwise) -----
         n_valid = jnp.sum(valid.astype(jnp.int32))
-        term_valid = jnp.where(valid & is_term, 1, 0)
-        leaf = leaf + jnp.sum(term_valid)
-        axis_exec = axis_exec + jnp.sum(
-            jnp.where(valid, axis_tests_from_exit(exit_code), 0))
+        leaf = leaf + d_leaf
+        axis_exec = axis_exec + d_axis
         sphere = sphere + (2 * n_valid if use_spheres else 0)
         per_level = per_level + jnp.where(
             jax.lax.broadcasted_iota(jnp.int32, (1, L), 1).reshape((L,))
             == level, n_valid, 0)
-        hist = hist + jnp.sum(
-            jnp.where((exit_code[:, None] == iota_hist[None, :])
-                      & (term_valid[:, None] != 0), 1, 0), axis=0)
+        hist = hist + d_hist
 
         # ---- in-register CSR expansion + compaction -------------------
-        expand = overlap & ~is_term & (pay_lane < best_lane)
-        occupied, offs = csr_child_slots(child_mask)
+        # A lane expands iff it stashed a candidate mask (overlap & ~term;
+        # a real candidate's mask is never 0 — a non-full internal node
+        # has at least one occupied child) and its payload could still
+        # beat its group's best AFTER this level's folds.
+        expand = (st_mask != 0) & (pay_lane < best_lane)
+        occupied, offs = csr_child_slots(st_mask)
         n_child = jnp.where(expand,
-                            jax.lax.population_count(child_mask), 0)
+                            jax.lax.population_count(st_mask), 0)
         base = jnp.cumsum(n_child) - n_child
         n_new = jnp.sum(n_child)
         live = expand[:, None] & occupied                          # (fcap, 8)
         pos = base[:, None] + offs
         q_rep = jnp.repeat(q, 8)
-        cand = (child_start[:, None] + offs).reshape(-1)
+        cand = (st_start[:, None] + offs).reshape(-1)
         tgt = jnp.where(live, pos, fcap).reshape(-1)
         q_next = jnp.zeros((fcap,), jnp.int32).at[tgt].set(q_rep,
                                                            mode="drop")
@@ -311,21 +396,25 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
         if meta_fmt == "u8":
             # Children inherit this lane's own code as their pcode.
             p_next = jnp.zeros((fcap,), jnp.int32).at[tgt].set(
-                jnp.repeat(code_own, 8), mode="drop")
+                jnp.repeat(st_code, 8), mode="drop")
             fp_scr[0, :] = jnp.where(nxt == 0, p_next, fp_scr[0, :])
             fp_scr[1, :] = jnp.where(nxt == 1, p_next, fp_scr[1, :])
         return (jnp.minimum(n_new, fcap), best_vec, per_level, hist,
                 leaf, axis_exec, sphere, overflow, spilled, cursor, ring,
-                meta_rows, n_live)
+                meta_rows)
 
-    # Seed frontier (slot 0): one (query, root) pair per query of the tile.
+    if not stream:
+        meta_flat = meta_ref[...].reshape(L * n_max, vpf)
+
+    # Seed frontier (slot 0): one (query, scene root) pair per live slot of
+    # the tile.  Scene s's root sits at flat index s of the level-0 row
+    # (0 for a single scene).
     fq_scr[0, :] = jnp.where(lane < n_q, q_base + lane, 0)
-    fn_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
+    fn_scr[0, :] = jnp.where(lane < n_q, s, 0)
     if meta_fmt == "u8":
-        fp_scr[0, :] = jnp.zeros((fcap,), jnp.int32)  # root's own code is 0
+        # Scene-local codes: every scene's root code is 0.
+        fp_scr[0, :] = jnp.zeros((fcap,), jnp.int32)
 
-    meta_rows0 = (jnp.where(n_q > 0, nchunk_ref[0] * W, 0).astype(jnp.int32)
-                  if stream else jnp.int32(0))
     carry0 = (jnp.minimum(n_q, fcap),
               jnp.full((bq,), PAYLOAD_INF, jnp.int32),
               jnp.zeros((L,), jnp.int32),
@@ -333,10 +422,10 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
               jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
               jnp.int32(0), jnp.int32(0),
               jnp.zeros((ring_cap, 2), jnp.int32),
-              meta_rows0, n_q)
+              jnp.int32(0))
     (_, best_vec, per_level, hist, leaf, axis_exec, sphere, overflow,
-     spilled, _, ring, meta_rows, _) = jax.lax.fori_loop(0, L, level_body,
-                                                         carry0)
+     spilled, _, ring, meta_rows) = jax.lax.fori_loop(0, L, level_body,
+                                                      carry0)
 
     collide_ref[...] = best_vec.reshape(1, bq)
     perlevel_ref[...] = per_level.reshape(1, L)
@@ -348,39 +437,47 @@ def persist_kernel(scal_ref, nchunk_ref, nvalid_ref, obb_ref, meta_ref,
     ring_ref[...] = ring.reshape(1, ring_cap, 2)
 
 
-def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
-                      depth: int, n_max: int, ring_cap: int,
-                      use_spheres: bool, interpret: bool, stream: bool,
-                      meta_fmt: str = "fp32"):
+def make_persist_call(num_tiles: int, bq: int, fcap: int, depth: int,
+                      n_max: int, ring_cap: int, use_spheres: bool,
+                      interpret: bool, stream: bool, meta_fmt: str = "fp32",
+                      num_scenes: int = 1, wsub: int = 1024):
     """Build the whole-traversal pallas_call.
 
-    Inputs: scal (3 + depth+1,) f32 SMEM [scene_lo xyz, per-level cells];
-    per-level window chunk counts (depth+1,) int32 SMEM (zeros under the
-    resident layout); live query count (1,) int32 SMEM (the pool's
-    live prefix — pad slots past it never seed, see the sharded
-    executor); OBB table (num_tiles * bq, 15) f32, blocked per tile;
-    node_meta (depth+1, n_max, words) int32 packed per ``meta_fmt``
-    (fp32: 4 words, bf16: 2, u8: 1 — :mod:`repro.core.quantize`) — a
-    resident VMEM block, or an HBM-space (``pltpu.ANY``) table streamed
-    through the ping/pong window scratch when ``stream`` (the DMA
-    machinery is format-agnostic: only the row width changes); payload (num_tiles * bq,) int32 per-query
-    payload lane (all zeros for boolean plans).  Outputs per query tile:
-    ``best`` payload words (bq,) int32 (``PAYLOAD_INF`` = query never hit;
-    0 = a boolean hit), valid counts per level, exit histogram, packed work
-    scalars [nodes, leaf, axis_exec, axis_dec, sphere, overflow, spilled,
-    meta_rows], and the spill ring's (query, node) pairs.
+    Inputs: scal (S * (3 + depth+1),) f32 SMEM — per scene [scene_lo xyz,
+    per-level cells], flat scene-major; scene_off / scene_counts
+    (S * (depth+1),) int32 SMEM — per-scene flat sub-extents of the level
+    rows (offset 0 / total counts for a single scene); scene_of_tile
+    (num_tiles,) int32 SMEM; live query count (1,) int32 SMEM (the pool's
+    live prefix — pad slots past it never seed, see the sharded executor);
+    OBB table (num_tiles * bq, 15) f32, blocked per tile; node_meta
+    (depth+1, n_max, words) int32 packed per ``meta_fmt`` (fp32: 4 words,
+    bf16: 2, u8: 1 — :mod:`repro.core.quantize`) — a resident VMEM block,
+    or an HBM-space (``pltpu.ANY``) table streamed through the ping/pong
+    sub-level window scratch of ``wsub + 8`` rows per slot when ``stream``
+    (the DMA machinery is format-agnostic: only the row width changes);
+    payload (num_tiles * bq,) int32 per-query payload lane (all zeros for
+    boolean plans); owner_local (num_tiles * bq,) int32 per-slot verdict
+    group as the group's first tile-local slot, ``-1`` = pad (tile-local
+    identity for per-query plans).  Outputs per tile: ``best`` payload
+    words (bq,) int32 per owner slot (``PAYLOAD_INF`` = that group never
+    hit; 0 = a boolean hit), valid counts per level, exit histogram,
+    packed work scalars [nodes, leaf, axis_exec, axis_dec, sphere,
+    overflow, spilled, meta_rows], and the spill ring's (query, node)
+    pairs.
     """
     if pltpu is None:  # pragma: no cover - exercised only sans TPU extra
         raise RuntimeError("pallas TPU extension unavailable")
     if stream:
         assert n_max % META_ROW_ALIGN == 0, \
             "streamed node_meta needs META_ROW_ALIGN-aligned rows"
+        assert wsub % 8 == 0 and wsub > 0, \
+            "sub-level windows are whole 8-row DMA chunks"
     L = depth + 1
     vpf = META_FORMAT_WORDS[meta_fmt]
     kernel = functools.partial(
-        persist_kernel, num_queries=num_queries, bq=bq, fcap=fcap,
-        depth=depth, n_max=n_max, ring_cap=ring_cap,
-        use_spheres=use_spheres, stream=stream, meta_fmt=meta_fmt)
+        persist_kernel, bq=bq, fcap=fcap, depth=depth, n_max=n_max,
+        ring_cap=ring_cap, use_spheres=use_spheres, stream=stream,
+        meta_fmt=meta_fmt, wsub=wsub)
     meta_spec = (pl.BlockSpec(memory_space=pltpu.ANY) if stream
                  else pl.BlockSpec((L, n_max, vpf), lambda t: (0, 0, 0)))
     scratch = [
@@ -391,21 +488,24 @@ def make_persist_call(num_queries: int, num_tiles: int, bq: int, fcap: int,
         scratch.append(pltpu.VMEM((2, fcap), jnp.int32))  # own-code lane
     if stream:
         scratch += [
-            # meta window ping/pong pair, flat: slot s = rows
-            # [s * n_max, (s + 1) * n_max)
-            pltpu.VMEM((2 * n_max, vpf), jnp.int32),
-            pltpu.SemaphoreType.DMA((2,)),          # per-slot window DMAs
+            # sub-level window ping/pong pair, flat: slot s = rows
+            # [s * (wsub + 8), (s + 1) * (wsub + 8)) — constant in n_max.
+            pltpu.VMEM((2 * (wsub + 8), vpf), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),      # per-slot window DMAs
         ]
     return pl.pallas_call(
         kernel,
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),            # scal
-            pl.BlockSpec(memory_space=pltpu.SMEM),            # window chunks
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scene_off
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scene_counts
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scene_of_tile
             pl.BlockSpec(memory_space=pltpu.SMEM),            # live count
             pl.BlockSpec((bq, 15), lambda t: (t, 0)),         # OBB tile
             meta_spec,                                        # node meta
             pl.BlockSpec((bq,), lambda t: (t,)),              # payload lane
+            pl.BlockSpec((bq,), lambda t: (t,)),              # owner_local
         ],
         out_specs=[
             pl.BlockSpec((1, bq), lambda t: (t, 0)),

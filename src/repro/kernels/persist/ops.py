@@ -8,36 +8,46 @@ contract of :func:`repro.engine.executor._traverse_fused` — identical
 ``(collide, stats)`` including every work counter — so the engine's
 escalation policy and counter plumbing are mode-agnostic.
 
+**Every plan shape runs on the kernel arm.**  Plans whose pairs cannot be
+tiled per-query — cross-slot owner groups (swept-edge CCD) and ragged
+multi-scene batches — are lowered to a **tiled pool** first
+(:func:`build_tile_map`): pool slots are permuted so every verdict group
+lands in one ``bq``-slot tile, tiles never mix scenes, and pads sit at
+each tile's tail.  Both arms then consume the SAME permuted pool (the ref
+via a slot validity mask), so verdicts and all work counters stay
+bitwise-comparable; outputs are mapped back to query/group space in-graph.
+The only capability fallback left is an owner group too large for the
+largest tile (:data:`MAX_TILE_BQ`; :func:`persist_kernel_unsupported`
+names it so the executor can count and log the downgrade).
+
 **Metadata residency layouts x row formats.**  The megakernel holds node
 metadata in one of two layouts (:data:`META_LAYOUTS`, DESIGN.md §3):
 
 * ``resident`` — the whole ``(depth+1, n_max, words)`` table is a VMEM
   block (:func:`meta_table_bytes`); fastest when it fits.
-* ``streamed`` — the table stays in HBM and per-level row windows are
+* ``streamed`` — the table stays in HBM and each level is iterated
+  through fixed-size sub-level windows of :func:`sub_window_rows` rows,
   double-buffered through a ping/pong VMEM scratch pair
-  (:func:`meta_stream_bytes` resident bytes; the fetched rows are counted
-  into the ``meta_rows`` stat → ``Counters.meta_rows_streamed`` → priced
-  at the format's row width).
+  (:func:`meta_stream_bytes` resident bytes — constant in ``n_max``); the
+  row-exact fetched spans are counted into the ``meta_rows`` stat →
+  ``Counters.meta_rows_streamed`` → priced at the format's row width.
 
 Rows come in one of three formats (:data:`repro.core.quantize.META_FORMATS`:
 fp32 = 16 B, bf16 = 8 B, u8 = 4 B — see :mod:`repro.core.quantize` for the
 encodings and the soundness argument).  The format is a property of the
-packed :class:`DeviceOctree` (``dev.meta_format``); both arms decode it
-in-register and verdicts/counters are bitwise format-independent.
+packed :class:`DeviceOctree` / :class:`MultiSceneOctree`
+(``dev.meta_format``); both arms decode it in-register and
+verdicts/counters are bitwise format-independent.
 
 ``traverse_whole(streamed=None)`` picks the layout with
 :func:`choose_meta_layout` against :data:`DEFAULT_VMEM_BUDGET` (pinning
 the tree's own format); the engine's executor runs the full
 layout x format chooser per (mode, statics) traversal cache key and
 passes both down explicitly (``EngineConfig.stream_meta`` /
-``meta_format`` / ``vmem_budget`` override it).
-
-The ragged multi-scene frontier (``scene_of_query`` + a
-:class:`repro.core.octree.MultiSceneOctree` flat table) is served by the
-reference arm on every backend: one compiled call and one compaction pool
-for arbitrarily mixed scene sizes.  The megakernel keeps per-scene
-scalars in SMEM and is single-scene for now; streaming the flat
-multi-scene table is the follow-up (DESIGN.md §3).
+``meta_format`` / ``vmem_budget`` override it).  Ragged multi-scene
+tables stream and compress exactly like single scenes — the per-scene
+sub-extents (``MultiSceneOctree.scene_off`` / ``scene_counts``) key each
+tile's window schedule to its own scene.
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.counters import (BYTES_META_STREAM, BYTES_META_STREAM_BF16,
                                  BYTES_META_STREAM_U8)
@@ -80,23 +91,43 @@ META_FORMAT_BYTES = {"fp32": BYTES_META_STREAM,
 #: estimate so layout choice is backend-independent.
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
+#: Fixed sub-level window size in rows for the streamed layout: each
+#: level is iterated ``wsub`` rows at a time, so the VMEM window scratch
+#: is constant in ``n_max`` (a level narrower than this streams in one
+#: window, as the PR 5 whole-level windows did).
+SUB_WINDOW_ROWS = 1024
+
+#: Largest owner-group tile the megakernel will build.  A verdict group
+#: must fit in one tile (its fold cell is tile-local), so a plan whose
+#: largest owner group exceeds this many pairs is a genuine capability
+#: fallback to the ref arm (:func:`persist_kernel_unsupported`).
+MAX_TILE_BQ = 1024
+
 
 def meta_table_bytes(depth: int, n_max: int, fmt: str = "fp32") -> int:
     """VMEM bytes of the RESIDENT node-metadata table (aligned rows)."""
     return (depth + 1) * align_rows(n_max) * META_FORMAT_BYTES[fmt]
 
 
+def sub_window_rows(n_max: int) -> int:
+    """Streamed sub-level window size in rows for an ``n_max``-wide table
+    (the fixed :data:`SUB_WINDOW_ROWS`, shrunk to the aligned table width
+    when the whole table is narrower)."""
+    return min(SUB_WINDOW_ROWS, align_rows(n_max))
+
+
 def meta_stream_bytes(n_max: int, fmt: str = "fp32") -> int:
     """VMEM bytes of the STREAMED layout's ping/pong window pair.
 
-    A window covers a whole level's occupied extent, so the pair is sized
-    to the WIDEST level (``2 * n_max`` rows): streaming buys a
-    ``(depth+1)/2``x larger scene per VMEM byte over the resident table,
-    not an unbounded one.  Fixed-size sub-level windows (decoupling the
-    scratch from the widest level entirely) are the recorded follow-up
-    (ROADMAP).
+    Each slot holds one fixed-size sub-level window plus one 8-row DMA
+    chunk of slack (row-exact spans round the occupied extent OUT to
+    whole 8-row chunks, so a window's span can start up to 7 rows before
+    its first occupied row).  Constant in ``n_max`` once the table is
+    wider than :data:`SUB_WINDOW_ROWS`: VMEM scratch is fully decoupled
+    from the widest level, so arbitrarily large scenes stream through
+    the same budget.
     """
-    return 2 * align_rows(n_max) * META_FORMAT_BYTES[fmt]
+    return 2 * (sub_window_rows(n_max) + 8) * META_FORMAT_BYTES[fmt]
 
 
 class MetaChoice(NamedTuple):
@@ -163,54 +194,222 @@ def _use_pallas_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _window_rows(counts: jax.Array) -> jax.Array:
-    """Per-level window sizes in rows: occupied extent rounded up to whole
-    :data:`repro.core.octree.META_ROW_ALIGN`-row DMA chunks."""
-    w = META_ROW_ALIGN
-    return (((counts.astype(jnp.int32) + w - 1) // w) * w)
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
-def _kernel_whole(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
+class Tiling(NamedTuple):
+    """Traced-array view of a tiled pool (crosses jit; see TileMap).
+
+    The pool has ``num_tiles * bq`` slots; all four arrays are int32.
+    """
+    owner_local: jax.Array    # (Q',) slot's verdict group as the group's
+    #                           first tile-local slot; -1 = pad slot
+    scene_of_tile: jax.Array  # (T,) scene id per tile (0 = single scene)
+    slot_of_query: jax.Array  # (Q,) original query -> pool slot
+    group_slot: jax.Array     # (Q,) global group id -> the group's fold
+    #                           slot; -1 past the group count
+
+
+class TileMap(NamedTuple):
+    """Host-side owner-group tiling of a plan's pair pool.
+
+    ``perm[slot]`` is the original query index occupying the slot (-1 =
+    pad); callers permute their per-query arrays with ``np.maximum(perm,
+    0)`` (pad slots carry garbage rows, masked by ``owner_local < 0``).
+    """
+    tiles: Tiling             # numpy-backed Tiling arrays
+    perm: np.ndarray          # (Q',) int64
+    bq: int
+    num_tiles: int
+
+
+def build_tile_map(num_queries: int, bq: int,
+                   scene_of_query: Optional[np.ndarray] = None,
+                   owner_of_query: Optional[np.ndarray] = None,
+                   max_bq: int = MAX_TILE_BQ) -> TileMap:
+    """Pack a plan's pairs into scene-exclusive, owner-group-exclusive
+    tiles (host-side numpy; runs once per plan shape).
+
+    Pairs are ordered scene-major / owner-minor (stable, so real pools —
+    already sorted this way by the front ends — keep their order), and
+    each (scene, owner) run is placed whole into the first tile of its
+    scene with room, opening a new tile on scene change or overflow.
+    ``bq`` grows to the next power of two that fits the largest group
+    (capped at ``max_bq``: a larger group raises — the executor screens
+    with :func:`persist_kernel_unsupported` first).  Pads sit at each
+    tile's TAIL, so live slots form every tile's prefix.
+    """
+    Q = int(num_queries)
+    soq = (np.zeros(Q, np.int64) if scene_of_query is None
+           else np.asarray(scene_of_query, np.int64))
+    own = (np.arange(Q, dtype=np.int64) if owner_of_query is None
+           else np.asarray(owner_of_query, np.int64))
+    assert soq.shape == (Q,) and own.shape == (Q,)
+    order = np.lexsort((own, soq))
+    so, oo = soq[order], own[order]
+    new_run = np.ones(Q, bool)
+    if Q > 1:
+        new_run[1:] = (so[1:] != so[:-1]) | (oo[1:] != oo[:-1])
+    run_id = np.cumsum(new_run) - 1
+    run_starts = np.flatnonzero(new_run)
+    run_sizes = np.diff(np.append(run_starts, Q))
+    run_owner = oo[run_starts]
+    if owner_of_query is not None and \
+            len(np.unique(run_owner)) != len(run_owner):
+        raise ValueError("an owner group spans multiple scenes; "
+                         "its fold cell cannot be tile-local")
+    max_run = int(run_sizes.max()) if Q else 1
+    bq_eff = max(int(bq), _next_pow2(max_run))
+    if bq_eff > max_bq:
+        raise ValueError(
+            f"owner group of {max_run} pairs needs a {bq_eff}-slot tile "
+            f"(cap {max_bq}); screen with persist_kernel_unsupported")
+
+    nrun = len(run_starts)
+    tile_of_run = np.zeros(nrun, np.int64)
+    first_slot_of_run = np.zeros(nrun, np.int64)
+    run_scene = so[run_starts] if nrun else np.zeros(0, np.int64)
+    scene_of_tile = []
+    tile, used, cur_scene = -1, bq_eff, None
+    for r in range(nrun):
+        n = int(run_sizes[r])
+        s = int(run_scene[r])
+        if s != cur_scene or used + n > bq_eff:
+            tile += 1
+            used = 0
+            cur_scene = s
+            scene_of_tile.append(s)
+        tile_of_run[r] = tile
+        first_slot_of_run[r] = used
+        used += n
+    num_tiles = max(tile + 1, 1)
+    if not scene_of_tile:
+        scene_of_tile = [0]
+
+    rank_in_run = np.arange(Q) - run_starts[run_id] if Q else np.zeros(0)
+    slot_sorted = (tile_of_run[run_id] * bq_eff + first_slot_of_run[run_id]
+                   + rank_in_run).astype(np.int64)
+    slot_of_query = np.zeros(Q, np.int64)
+    slot_of_query[order] = slot_sorted
+    Qs = num_tiles * bq_eff
+    perm = np.full(Qs, -1, np.int64)
+    perm[slot_sorted] = order
+    owner_local = np.full(Qs, -1, np.int32)
+    owner_local[slot_sorted] = first_slot_of_run[run_id].astype(np.int32)
+    group_slot = np.full(Q, -1, np.int32)
+    if nrun:
+        group_slot[run_owner] = (tile_of_run * bq_eff
+                                 + first_slot_of_run).astype(np.int32)
+    tiles = Tiling(owner_local=owner_local,
+                   scene_of_tile=np.asarray(scene_of_tile, np.int32),
+                   slot_of_query=slot_of_query.astype(np.int32),
+                   group_slot=group_slot)
+    return TileMap(tiles=tiles, perm=perm, bq=bq_eff, num_tiles=num_tiles)
+
+
+def persist_kernel_unsupported(owner_of_query=None, scene_of_query=None,
+                               max_bq: int = MAX_TILE_BQ) -> Optional[str]:
+    """Name the reason a persistent-mode plan cannot run on the kernel
+    arm, or ``None`` if it can.
+
+    After owner-group tiling there are exactly two capability limits
+    left: an owner group too large for the largest tile, and an owner
+    group spanning scenes (no front end emits one).  The executor calls
+    this before tiling so a downgrade is counted
+    (``Counters.ref_arm_fallbacks``) and logged, never silent.
+    """
+    if owner_of_query is None:
+        return None
+    own = np.asarray(owner_of_query)
+    if own.size == 0:
+        return None
+    sizes = np.bincount(own.astype(np.int64))
+    mx = int(sizes.max())
+    if _next_pow2(mx) > max_bq:
+        return (f"owner group of {mx} pairs needs a {_next_pow2(mx)}-slot "
+                f"tile (cap {max_bq})")
+    if scene_of_query is not None:
+        soq = np.asarray(scene_of_query)
+        pairs = {(int(o), int(s)) for o, s in zip(own, soq)}
+        if len(pairs) != len(np.unique(own)):
+            return "an owner group spans multiple scenes"
+    return None
+
+
+def _scene_extents(dev) -> Tuple[jax.Array, jax.Array]:
+    """(S, depth+1) per-scene flat level sub-extents (offset, count)."""
+    L = dev.depth + 1
+    if isinstance(dev, MultiSceneOctree):
+        return (dev.scene_off.astype(jnp.int32),
+                dev.scene_counts.astype(jnp.int32))
+    return (jnp.zeros((1, L), jnp.int32),
+            jnp.reshape(dev.counts.astype(jnp.int32), (1, L)))
+
+
+def _kernel_whole(obb_c, obb_h, obb_r, dev, capacity: int,
                   use_spheres: bool, bq: int, ring_cap: int,
                   interpret: bool, stream: bool, payload=None,
-                  grouped: bool = False,
-                  num_valid=None) -> Tuple[jax.Array, dict]:
+                  num_valid=None, owner_local=None,
+                  scene_of_tile=None) -> Tuple[jax.Array, dict]:
+    """Run the megakernel; returns the RAW (num_tiles * bq,) per-slot
+    ``best`` words (PAYLOAD_INF = that owner slot never hit) + stats."""
     from repro.kernels.persist.kernel import make_persist_call
 
     M = obb_c.shape[0]
     L = dev.depth + 1
-    n_max = dev.codes.shape[-1]
-    num_tiles = max(math.ceil(M / bq), 1)
+    n_max = dev.node_meta.shape[-2]
     obb = pack_obbs(obb_c, obb_h, obb_r)
-    obb = jnp.pad(obb, ((0, num_tiles * bq - M), (0, 0)))
-    scal = jnp.concatenate([jnp.asarray(dev.scene_lo, jnp.float32),
-                            jnp.asarray(dev.cell_sizes, jnp.float32)])
     pay = (jnp.zeros((M,), jnp.int32) if payload is None
            else payload.astype(jnp.int32))
-    pay = jnp.pad(pay, (0, num_tiles * bq - M))
+    if owner_local is not None:
+        num_tiles = scene_of_tile.shape[0]
+        bq = M // num_tiles
+        assert num_tiles * bq == M, "tiled pools are exact tile multiples"
+        own = owner_local.astype(jnp.int32)
+        sot = scene_of_tile.astype(jnp.int32)
+    else:
+        num_tiles = max(math.ceil(M / bq), 1)
+        pad = num_tiles * bq - M
+        obb = jnp.pad(obb, ((0, pad), (0, 0)))
+        pay = jnp.pad(pay, (0, pad))
+        # Identity owners: every slot its own verdict group; validity
+        # comes from the SMEM live-prefix count alone.
+        own = jnp.tile(jnp.arange(bq, dtype=jnp.int32), num_tiles)
+        sot = jnp.zeros((num_tiles,), jnp.int32)
+    if isinstance(dev, MultiSceneOctree):
+        scal = jnp.concatenate(
+            [dev.scene_lo, dev.cell_sizes], axis=1
+        ).astype(jnp.float32).reshape(-1)
+        num_scenes = dev.num_scenes
+    else:
+        scal = jnp.concatenate([jnp.asarray(dev.scene_lo, jnp.float32),
+                                jnp.asarray(dev.cell_sizes, jnp.float32)])
+        num_scenes = 1
+    off, cnt = _scene_extents(dev)
     meta = dev.node_meta
     if stream and n_max % META_ROW_ALIGN:   # hand-built unaligned tables
-        pad = align_rows(n_max) - n_max
-        meta = jnp.pad(meta, ((0, 0), (0, pad), (0, 0)))
-        n_max = n_max + pad
-    nchunks = (_window_rows(dev.counts) // META_ROW_ALIGN if stream
-               else jnp.zeros((L,), jnp.int32))
+        padr = align_rows(n_max) - n_max
+        meta = jnp.pad(meta, ((0, 0), (0, padr), (0, 0)))
+        n_max = n_max + padr
     nvalid = jnp.reshape(jnp.asarray(M if num_valid is None else num_valid,
                                      jnp.int32), (1,))
-    call = make_persist_call(M, num_tiles, bq, capacity, dev.depth, n_max,
+    call = make_persist_call(num_tiles, bq, capacity, dev.depth, n_max,
                              ring_cap, use_spheres, interpret, stream,
-                             meta_fmt=getattr(dev, "meta_format", "fp32"))
-    words, per_level, hist, scalars, _ring = call(scal, nchunks, nvalid,
-                                                  obb, meta, pay)
-    best = words.reshape(-1)[:M]
-    verdict = best if grouped else best != PAYLOAD_INF
+                             meta_fmt=getattr(dev, "meta_format", "fp32"),
+                             num_scenes=num_scenes,
+                             wsub=sub_window_rows(n_max))
+    words, per_level, hist, scalars, _ring = call(
+        scal, off.reshape(-1), cnt.reshape(-1), sot, nvalid, obb, meta,
+        pay, own)
+    best = words.reshape(-1)
     tot = jnp.sum(scalars, axis=0)
     per = jnp.zeros((MAX_DEPTH + 1,), jnp.int32).at[:L].set(
         jnp.sum(per_level, axis=0))
     st = dict(nodes=tot[0], leaf=tot[1], axis_exec=tot[2], axis_dec=tot[3],
               sphere=tot[4], overflow=tot[5], per_level=per,
               exit_hist=jnp.sum(hist, axis=0), meta_rows=tot[7])
-    return verdict, st
+    return best, st
 
 
 def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
@@ -221,7 +420,8 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
                    payload: Optional[jax.Array] = None,
                    streamed: Optional[bool] = None,
                    bq: int = 128, ring_cap: int = 256, w_min: int = 128,
-                   num_valid=None) -> Tuple[jax.Array, dict]:
+                   num_valid=None,
+                   tiles: Optional[Tiling] = None) -> Tuple[jax.Array, dict]:
     """Whole multi-level traversal for one flat query set.
 
     ``dev`` is a single-scene :class:`DeviceOctree`, or a
@@ -235,16 +435,21 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     layout cannot change verdicts or work counters — only the ``meta_rows``
     stat (HBM window traffic, 0 under the resident layout) and the VMEM
     footprint move.  Both kernel and ref arms honor it, so kernel-vs-ref
-    runs stay bitwise-comparable per layout.
+    runs stay bitwise-comparable per layout, for every plan shape
+    (ragged and owner-tiled included).
 
     Payload lanes (:mod:`repro.engine.plan`): with owner / payload lanes
     the verdict is the (Q,) int32 ``best`` payload per verdict group
-    (compact owner ids; cells past the group count unused).  The
-    megakernel carries the payload lane in its VMEM frontier for
-    identity-owner plans (``owner_of_query is None`` — per-slot first
-    hit); plans with a cross-slot owner lane are served by the reference
-    arm, like the ragged multi-scene frontier, because a tile's queries
-    would no longer own their verdict groups exclusively (DESIGN.md §3).
+    (compact owner ids; cells past the group count are ``PAYLOAD_INF``).
+    Cross-slot owner groups and ragged multi-scene pools are lowered to
+    an owner-group tiled pool (:func:`build_tile_map`) and run on the
+    SAME arm machinery as identity plans: when such a plan arrives
+    untiled (and eager — tiling needs concrete ids; the executor
+    pre-tiles before jit), the tile map is built here, the pool permuted
+    into slot space, and outputs mapped back.  ``tiles`` given means the
+    caller already permuted ``obb_* / owner_of_query / payload`` into
+    slot space; outputs still come back in query/group space
+    (``slot_of_query`` / ``group_slot`` are carried by ``tiles``).
 
     ``num_valid`` (traced int32, default all Q) marks the live prefix of
     the pool: slots at and past it never seed the frontier and contribute
@@ -252,45 +457,143 @@ def traverse_whole(obb_c, obb_h, obb_r, dev, capacity: int, *,
     its unpadded prefix.  The sharded executor pads every shard's local
     pool to a common width and passes the true per-shard count.
     """
-    ragged = isinstance(dev, MultiSceneOctree) or scene_of_query is not None
-    assert not (isinstance(dev, MultiSceneOctree)
-                and scene_of_query is None), \
-        "a MultiSceneOctree needs scene_of_query (Q,) to map queries to scenes"
-    kernel_ok = not ragged and owner_of_query is None
+    ragged = isinstance(dev, MultiSceneOctree)
+    assert ragged or scene_of_query is None, \
+        "scene_of_query needs a MultiSceneOctree flat table"
+    obb_c = jnp.asarray(obb_c)
+    obb_h = jnp.asarray(obb_h)
+    obb_r = jnp.asarray(obb_r)
+    fmt = getattr(dev, "meta_format", "fp32")
+    n_max = dev.node_meta.shape[-2]
     if streamed is None:
-        streamed = (not ragged) and choose_meta_layout(
-            dev.depth, dev.codes.shape[-1],
-            fmt=getattr(dev, "meta_format", "fp32")).layout == "streamed"
+        streamed = choose_meta_layout(
+            dev.depth, n_max, fmt=fmt).layout == "streamed"
     if use_pallas is None:
-        use_pallas = _use_pallas_default() and kernel_ok
+        use_pallas = _use_pallas_default()
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if use_pallas and kernel_ok:
-        return _kernel_whole(obb_c, obb_h, obb_r, dev, capacity,
-                             use_spheres, bq, ring_cap, interpret,
-                             stream=streamed, payload=payload,
-                             grouped=payload is not None,
-                             num_valid=num_valid)
-    # DeviceOctree and MultiSceneOctree expose the same three table fields;
-    # scene_of_query switches the ref between scalar and per-pair gathers.
-    # The streamed-window model only applies where the kernel could run
-    # (single-scene, identity-owner): ragged and cross-slot-owner plans
-    # are ref-served with the table resident, so modeling window traffic
-    # for them would price HBM fetches no arm performs.
-    model = streamed and kernel_ok
+    grouped = owner_of_query is not None or payload is not None
+
+    if tiles is None and (ragged or owner_of_query is not None):
+        if any(isinstance(x, jax.core.Tracer)
+               for x in (scene_of_query, owner_of_query)):
+            # The tile map needs concrete ids; the executor pre-tiles for
+            # the kernel arm before jit, so a traced untiled call is the
+            # per-level modes' legacy ref routing (resident model only).
+            assert not use_pallas, \
+                "the kernel arm needs a pre-built tile map under jit"
+            return traverse_whole_ref(
+                obb_c, obb_h, obb_r, dev.node_meta, dev.cell_sizes,
+                dev.scene_lo, dev.depth, capacity, use_spheres,
+                scene_of_query=scene_of_query, w_min=w_min,
+                owner_of_query=owner_of_query, payload=payload,
+                num_valid=num_valid, meta_format=fmt,
+                codes=getattr(dev, "codes", None))
+        # Untiled non-identity plan: build the tile map eagerly (needs
+        # concrete scene/owner ids — the executor pre-tiles before jit)
+        # and re-enter in slot space.
+        assert not ragged or scene_of_query is not None, \
+            "a MultiSceneOctree needs scene_of_query (Q,) untiled"
+        reason = persist_kernel_unsupported(
+            None if owner_of_query is None else np.asarray(owner_of_query),
+            None if scene_of_query is None else np.asarray(scene_of_query))
+        if reason is not None:
+            # Capability gap: the ref arm serves the plan untiled (the
+            # executor counts and logs this routing).
+            assert not use_pallas, f"kernel arm unsupported: {reason}"
+            return traverse_whole_ref(
+                obb_c, obb_h, obb_r, dev.node_meta, dev.cell_sizes,
+                dev.scene_lo, dev.depth, capacity, use_spheres,
+                scene_of_query=scene_of_query, w_min=w_min,
+                owner_of_query=owner_of_query, payload=payload,
+                num_valid=num_valid, meta_format=fmt,
+                codes=getattr(dev, "codes", None))
+        tm = build_tile_map(
+            obb_c.shape[0], bq,
+            None if scene_of_query is None else np.asarray(scene_of_query),
+            None if owner_of_query is None else np.asarray(owner_of_query))
+        perm = np.maximum(tm.perm, 0)
+        return traverse_whole(
+            jnp.asarray(obb_c)[perm], jnp.asarray(obb_h)[perm],
+            jnp.asarray(obb_r)[perm], dev, capacity,
+            use_spheres=use_spheres, use_pallas=use_pallas,
+            interpret=interpret,
+            owner_of_query=(None if owner_of_query is None
+                            else jnp.asarray(owner_of_query)[perm]),
+            payload=(None if payload is None
+                     else jnp.asarray(payload)[perm]),
+            streamed=streamed, bq=tm.bq, ring_cap=ring_cap, w_min=w_min,
+            tiles=jax.tree.map(jnp.asarray, tm.tiles))
+
+    if tiles is not None:
+        Qs = obb_c.shape[0]
+        num_tiles = tiles.scene_of_tile.shape[0]
+        bq_t = Qs // num_tiles
+        assert num_tiles * bq_t == Qs, "tiled pools are exact multiples"
+        Q = tiles.slot_of_query.shape[0]
+        valid = tiles.owner_local >= 0
+        if use_pallas:
+            best, st = _kernel_whole(
+                obb_c, obb_h, obb_r, dev, capacity, use_spheres, bq_t,
+                ring_cap, interpret, stream=streamed, payload=payload,
+                owner_local=tiles.owner_local,
+                scene_of_tile=tiles.scene_of_tile)
+        else:
+            off, cnt = _scene_extents(dev)
+            soq_slot = (jnp.repeat(tiles.scene_of_tile, bq_t) if ragged
+                        else None)
+            best, st = traverse_whole_ref(
+                obb_c, obb_h, obb_r, dev.node_meta, dev.cell_sizes,
+                dev.scene_lo, dev.depth, capacity, use_spheres,
+                scene_of_query=soq_slot, w_min=w_min,
+                owner_of_query=owner_of_query, payload=payload,
+                stream_bq=bq_t if streamed else None,
+                stream_wsub=sub_window_rows(n_max) if streamed else None,
+                scene_off=off if streamed else None,
+                scene_counts=cnt if streamed else None,
+                scene_of_tile=tiles.scene_of_tile if streamed else None,
+                valid_of_query=valid, meta_format=fmt,
+                codes=getattr(dev, "codes", None))
+        if grouped:
+            if use_pallas:
+                # Kernel bests live at each group's fold slot; the ref's
+                # live at the global group id.  Cells past the group
+                # count are PAYLOAD_INF either way.
+                out = jnp.where(
+                    tiles.group_slot >= 0,
+                    best[jnp.clip(tiles.group_slot, 0, Qs - 1)],
+                    jnp.int32(PAYLOAD_INF))
+            else:
+                out = best[:Q]
+        else:
+            slot_best = (best != PAYLOAD_INF) if use_pallas else best
+            out = slot_best[tiles.slot_of_query]
+        return out, st
+
+    # ---- identity (single-scene, per-query groups) pools --------------
+    M = obb_c.shape[0]
+    if use_pallas:
+        best, st = _kernel_whole(obb_c, obb_h, obb_r, dev, capacity,
+                                 use_spheres, bq, ring_cap, interpret,
+                                 stream=streamed, payload=payload,
+                                 num_valid=num_valid)
+        best = best[:M]
+        return (best if grouped else best != PAYLOAD_INF), st
+    off, cnt = _scene_extents(dev)
     return traverse_whole_ref(obb_c, obb_h, obb_r, dev.node_meta,
                               dev.cell_sizes, dev.scene_lo, dev.depth,
                               capacity, use_spheres,
-                              scene_of_query=scene_of_query, w_min=w_min,
-                              owner_of_query=owner_of_query, payload=payload,
-                              stream_bq=bq if model else None,
-                              stream_window_rows=(
-                                  _window_rows(dev.counts) if model
-                                  else None),
+                              scene_of_query=None, w_min=w_min,
+                              owner_of_query=None, payload=payload,
+                              stream_bq=bq if streamed else None,
+                              stream_wsub=(sub_window_rows(n_max)
+                                           if streamed else None),
+                              scene_off=off if streamed else None,
+                              scene_counts=cnt if streamed else None,
+                              scene_of_tile=(
+                                  jnp.zeros((max(math.ceil(M / bq), 1),),
+                                            jnp.int32)
+                                  if streamed else None),
                               num_valid=num_valid,
-                              meta_format=getattr(dev, "meta_format",
-                                                  "fp32"),
-                              # MultiSceneOctree carries no codes plane;
-                              # it is fp32-only (executor pins it), and
-                              # only u8 decode needs the plane.
+                              meta_format=fmt,
                               codes=getattr(dev, "codes", None))

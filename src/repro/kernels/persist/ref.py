@@ -38,15 +38,20 @@ node ``s`` of the level-0 row.  One compiled call and one compaction pool
 serve arbitrarily mixed scene sizes with no per-scene padding.
 
 **Streamed-layout window model.**  Under the kernel's streamed metadata
-layout (DESIGN.md §3) each query tile DMAs its level-0 window at seed time
-and prefetches level ``l + 1``'s window whenever its frontier is still
-live at level ``l``.  With ``stream_bq`` / ``stream_window_rows`` given,
-the ref accumulates the *identical* per-tile schedule into the
-``meta_rows`` stat: lane query ids stay sorted through the in-register
-compaction (children inherit their parent's query, parent-major), so a
-kernel tile's liveness at level ``l`` is exactly "some valid lane has
-``q // bq == t``" on the global pool — bitwise on every clean run, like
-the other counters.
+layout (DESIGN.md §3) each query tile iterates a level through fixed-size
+sub-level windows of ``stream_wsub`` rows over its OWN scene's sub-extent
+of the (possibly concatenated multi-scene) level row, DMAing only the
+row-exact occupied span of each window it actually touches.  With
+``stream_bq`` / ``stream_wsub`` / ``scene_off`` / ``scene_counts`` /
+``scene_of_tile`` given, the ref accumulates the *identical* schedule into
+the ``meta_rows`` stat: lane query ids stay sorted through the
+in-register compaction (children inherit their parent's query,
+parent-major), so a kernel tile touches window ``w`` at level ``l``
+exactly when some valid lane has ``q // bq == t`` and ``(node - off) //
+wsub == w`` on the global pool — bitwise on every clean run, like the
+other counters.  The fetched span of a touched window is its occupied
+extent clipped to the window and rounded OUT to whole 8-row DMA chunks
+(``floor8(lo) .. ceil8(hi)``), the kernel's exact descriptor arithmetic.
 """
 from __future__ import annotations
 
@@ -151,8 +156,12 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
                        scene_of_query: Optional[jax.Array] = None,
                        w_min: int = 128, owner_of_query=None, payload=None,
                        stream_bq: Optional[int] = None,
-                       stream_window_rows: Optional[jax.Array] = None,
-                       num_valid=None, meta_format: str = "fp32",
+                       stream_wsub: Optional[int] = None,
+                       scene_off: Optional[jax.Array] = None,
+                       scene_counts: Optional[jax.Array] = None,
+                       scene_of_tile: Optional[jax.Array] = None,
+                       num_valid=None, valid_of_query=None,
+                       meta_format: str = "fp32",
                        codes: Optional[jax.Array] = None):
     """Whole-traversal reference arm; see module docstring for the contract.
 
@@ -178,13 +187,16 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         and a pair expands only while its payload could still beat its
         group's best — boolean early exit is the identity-owner,
         zero-payload special case.
-      stream_bq / stream_window_rows: model the megakernel's streamed
-        metadata layout (see module docstring): ``stream_bq`` is the
-        kernel's query-tile width and ``stream_window_rows`` the
-        (depth+1,) int32 per-level window sizes in rows (extent rounded up
-        to whole DMA chunks).  The ``meta_rows`` stat then counts the rows
-        the per-tile window schedule fetches; without them it stays 0
-        (resident layout / ragged multi-scene).
+      stream_bq / stream_wsub / scene_off / scene_counts / scene_of_tile:
+        model the megakernel's streamed metadata layout (see module
+        docstring): ``stream_bq`` is the kernel's query-tile width,
+        ``stream_wsub`` the fixed sub-level window size in rows,
+        ``scene_off`` / ``scene_counts`` the (S, depth+1) per-scene flat
+        sub-extents of the level rows (S = 1 and offset 0 for a single
+        scene), and ``scene_of_tile`` the (num_tiles,) scene id of each
+        query tile.  The ``meta_rows`` stat then counts the row-exact
+        spans the per-(tile, window) schedule fetches; without them it
+        stays 0 (resident layout).
       num_valid: optional live-prefix query count (int, possibly traced):
         only slots ``[0, num_valid)`` of the pool seed the frontier; the
         tail is padding that contributes ZERO work to any counter.  The
@@ -192,6 +204,12 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         passes each shard's true count here, which is what makes sharded
         counters bitwise-equal to single-device (``None`` = all Q slots
         are live).
+      valid_of_query: optional (Q,) bool mask of live pool slots for
+        tiled (owner-group / ragged) pools, whose pads sit at each
+        TILE's tail rather than the pool's.  Live slots seed the
+        frontier in ascending slot order; masked slots contribute zero
+        work, exactly like the ``num_valid`` tail.  Mutually exclusive
+        with ``num_valid``.
     Returns:
       (verdict, stats dict) — the ``_traverse_fused`` contract: (Q,) bool
       collide flags, or the (Q,) ``best`` array for grouped calls.
@@ -202,10 +220,15 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         "u8 rows need the codes plane to reconstruct lane geometry"
     ragged = scene_of_query is not None
     grouped = owner_of_query is not None or payload is not None
-    model_stream = stream_window_rows is not None
-    assert not (model_stream and ragged), \
-        "the streamed-window model is single-scene (kernel tiles are)"
-    num_tiles = (-(-Q // stream_bq) if model_stream else 0)
+    model_stream = stream_wsub is not None
+    if model_stream:
+        assert scene_off is not None and scene_counts is not None \
+            and scene_of_tile is not None and stream_bq is not None, \
+            "streamed-window model needs the full (bq, wsub, extents) spec"
+        num_tiles = -(-Q // stream_bq)
+        num_wins = -(-n_max // stream_wsub)   # static window grid per level
+    else:
+        num_tiles = num_wins = 0
     widths = frontier_widths(capacity, w_min)
     widths_arr = jnp.asarray(widths, jnp.int32)
 
@@ -282,14 +305,30 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
 
             # ---- streamed-window schedule model (kernel-identical) -------
             if model_stream:
-                # A kernel tile live at level l prefetches level l+1's
-                # window; tiles are contiguous q-ranges of the sorted pool.
-                tile_live = jnp.zeros((num_tiles,), jnp.int32).at[
-                    q // stream_bq].max(valid.astype(jnp.int32), mode="drop")
-                meta_rows = st["meta_rows"] + jnp.where(
-                    level < depth,
-                    jnp.sum(tile_live)
-                    * stream_window_rows[jnp.minimum(level + 1, depth)], 0)
+                # A kernel tile fetches window w of ITS scene's sub-extent
+                # at this level iff some valid lane of the tile points into
+                # it; the fetched span is the window's occupied extent
+                # rounded out to whole 8-row DMA chunks.
+                off_l = jax.lax.dynamic_index_in_dim(
+                    scene_off, level, axis=1, keepdims=False)       # (S,)
+                cnt_l = jax.lax.dynamic_index_in_dim(
+                    scene_counts, level, axis=1, keepdims=False)    # (S,)
+                off_lane = off_l[sid] if ragged else off_l[0]
+                win = jnp.clip((idx - off_lane) // stream_wsub,
+                               0, num_wins - 1)
+                live = jnp.zeros((num_tiles, num_wins), jnp.int32).at[
+                    q // stream_bq, win].max(valid.astype(jnp.int32),
+                                             mode="drop")
+                off_t = off_l[scene_of_tile][:, None]       # (T, 1)
+                cnt_t = cnt_l[scene_of_tile][:, None]
+                wlo = jnp.arange(num_wins, dtype=jnp.int32)[None, :] \
+                    * stream_wsub                           # (1, NW)
+                occ = jnp.clip(cnt_t - wlo, 0, stream_wsub)
+                g_lo = off_t + wlo
+                g_hi = g_lo + occ
+                span = jnp.where(occ > 0,
+                                 (-(-g_hi // 8)) * 8 - (g_lo // 8) * 8, 0)
+                meta_rows = st["meta_rows"] + jnp.sum(live * span)
             else:
                 meta_rows = st["meta_rows"]
 
@@ -319,26 +358,26 @@ def traverse_whole_ref(obb_c, obb_h, obb_r, node_meta, cell_sizes, scene_lo,
         return (level <= depth) & (n_live > 0)
 
     lane = jnp.arange(capacity, dtype=jnp.int32)
-    q0 = jnp.where(lane < Q, lane, 0)
+    if valid_of_query is not None:
+        assert num_valid is None, \
+            "valid_of_query and num_valid are mutually exclusive"
+        # Tiled pools pad at each TILE's tail: compact the live slots (in
+        # ascending slot order, preserving the tile-contiguous layout the
+        # window model keys on) into the frontier prefix.
+        (q0,) = jnp.nonzero(valid_of_query, size=capacity, fill_value=0)
+        q0 = q0.astype(jnp.int32)
+        n0 = jnp.sum(valid_of_query.astype(jnp.int32))
+    else:
+        q0 = jnp.where(lane < Q, lane, 0)
+        n0 = jnp.asarray(Q if num_valid is None else num_valid, jnp.int32)
     if ragged:
         # scene s's root sits at flat index s of the level-0 row.
-        node0 = jnp.where(lane < Q, scene_of_query[jnp.minimum(lane, Q - 1)],
-                          0).astype(jnp.int32)
+        node0 = scene_of_query[q0].astype(jnp.int32)
     else:
         node0 = jnp.zeros((capacity,), jnp.int32)
     verdict0 = (jnp.full((Q,), PAYLOAD_INF, jnp.int32) if grouped
                 else jnp.zeros((Q,), bool))
-    nv = Q if num_valid is None else num_valid
-    st0 = _empty_stats()
-    if model_stream:
-        # Every tile holding at least one LIVE query (ceil(nv / bq) of the
-        # ceil(Q / bq) grid tiles; pads sit at the pool's tail) fetches its
-        # level-0 window before the first level runs.
-        nt_live = (jnp.asarray(nv, jnp.int32) + stream_bq - 1) // stream_bq
-        st0["meta_rows"] = (nt_live * stream_window_rows[0]).astype(
-            jnp.int32)
-    carry0 = (jnp.int32(0),
-              jnp.minimum(jnp.asarray(nv, jnp.int32), jnp.int32(capacity)),
-              q0, node0, verdict0, st0)
+    carry0 = (jnp.int32(0), jnp.minimum(n0, jnp.int32(capacity)),
+              q0, node0, verdict0, _empty_stats())
     out = jax.lax.while_loop(cond, body, carry0)
     return out[4], out[5]

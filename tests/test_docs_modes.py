@@ -7,15 +7,18 @@ doc, one the landing page); these tests keep both in lockstep with
 ``ADMISSION_KNOBS``, the serve
 harness's ``SLO_METRICS``/``RELIABILITY_METRICS``, and the fault
 harness's ``FAILURE_MODES``."""
+import dataclasses
 import os
 import re
 
+from repro.core.counters import Counters
 from repro.core.wavefront import MODES
 from repro.engine.batcher import ADMISSION_KNOBS
 from repro.engine.faults import FAILURE_MODES
 from repro.core.quantize import META_FORMATS
-from repro.engine.plan import WORKLOADS
-from repro.kernels.persist.ops import META_LAYOUTS
+from repro.engine.plan import QueryPlan, WORKLOADS
+from repro.kernels.persist.ops import (MAX_TILE_BQ, META_LAYOUTS,
+                                       SUB_WINDOW_ROWS)
 from repro.launch.serve import RELIABILITY_METRICS, SLO_METRICS
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -117,3 +120,56 @@ def test_readme_reliability_section_lists_counters():
     for metric in RELIABILITY_METRICS:
         assert metric in cells, \
             f"README service-reliability table misses `{metric}`"
+
+
+# -- persistent kernel-arm coverage (DESIGN.md §2 table + §3 schedule) --
+
+# The optional QueryPlan lanes the §2 coverage table must map to kernel
+# mechanisms.  Listed explicitly (rather than via dataclasses.fields) so
+# a *new* optional lane fails the guard below until both the table and
+# this tuple are updated.
+_PLAN_LANES = ("scene_of_query", "owner_of_query", "payload")
+
+
+def _flat_text(path: str) -> str:
+    """File contents with runs of whitespace collapsed, so guards match
+    across markdown line wraps."""
+    with open(os.path.join(_ROOT, path)) as f:
+        return re.sub(r"\s+", " ", f.read())
+
+
+def test_design_coverage_table_lists_every_plan_lane():
+    plan_fields = {f.name for f in dataclasses.fields(QueryPlan)}
+    cells = _mode_table_cells("DESIGN.md")
+    for lane in _PLAN_LANES:
+        assert lane in plan_fields, f"QueryPlan lost lane `{lane}`"
+        assert lane in cells, \
+            f"DESIGN.md §2 kernel-arm coverage table misses `{lane}`"
+
+
+def test_docs_name_the_fallback_counter():
+    assert "ref_arm_fallbacks" in {f.name
+                                   for f in dataclasses.fields(Counters)}
+    for path in ("DESIGN.md", "README.md"):
+        assert "ref_arm_fallbacks" in _flat_text(path), \
+            f"{path} no longer documents Counters.ref_arm_fallbacks"
+
+
+def test_design_window_constants_match_code():
+    text = _flat_text("DESIGN.md")
+    assert f"`SUB_WINDOW_ROWS` = {SUB_WINDOW_ROWS}" in text, \
+        "DESIGN.md §3 window-schedule bullet disagrees with SUB_WINDOW_ROWS"
+    assert "2 * (SUB_WINDOW_ROWS + 8)" in text, \
+        "DESIGN.md no longer states the constant ping/pong VMEM footprint"
+    assert f"`MAX_TILE_BQ` = {MAX_TILE_BQ}" in text, \
+        "DESIGN.md §3 owner-tiling paragraph disagrees with MAX_TILE_BQ"
+    assert f"`MAX_TILE_BQ` ({MAX_TILE_BQ})" in text, \
+        "DESIGN.md §2 coverage table's capability bound disagrees with code"
+
+
+def test_readme_window_constants_match_code():
+    text = _flat_text("README.md")
+    assert f"{SUB_WINDOW_ROWS} rows/slot" in text, \
+        "README streamed-row cell disagrees with SUB_WINDOW_ROWS"
+    assert f"wider than {MAX_TILE_BQ} slots" in text, \
+        "README one-code-path paragraph disagrees with MAX_TILE_BQ"

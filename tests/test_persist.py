@@ -17,8 +17,9 @@ from repro.core.octree import (align_rows, build_octree,
 from repro.core.wavefront import (MODES, CollisionEngine, EngineConfig,
                                   query_batched_scenes, traversal_cache_info)
 from repro.data.robotics import make_scene, scene_trajectories
-from repro.kernels.persist.ops import (META_LAYOUTS, choose_meta_layout,
-                                       meta_stream_bytes, meta_table_bytes,
+from repro.kernels.persist.ops import (META_LAYOUTS, SUB_WINDOW_ROWS,
+                                       choose_meta_layout, meta_stream_bytes,
+                                       meta_table_bytes, sub_window_rows,
                                        traverse_whole)
 from repro.kernels.persist.ref import frontier_widths
 
@@ -306,10 +307,14 @@ def test_residency_estimator_and_override():
     assert choose_meta_layout(tree.depth, n_max, budget=table - 1,
                               fmt="fp32").layout == "streamed"
     assert set(META_LAYOUTS) == {"resident", "streamed"}
-    # the streamed ping/pong pair is sized to the WIDEST level: exactly
-    # (depth+1)/2x smaller than the resident table, not unbounded —
-    # fixed-size sub-level windows are the recorded follow-up (ROADMAP)
-    assert meta_stream_bytes(n_max) * (tree.depth + 1) == 2 * table
+    # the streamed ping/pong pair holds two FIXED-SIZE sub-level windows
+    # (plus one 8-row DMA chunk of slack each): its VMEM cost is fully
+    # decoupled from n_max — a 16x wider table streams through the same
+    # scratch — and a table narrower than one window shrinks the pair.
+    assert meta_stream_bytes(1 << 20) == meta_stream_bytes(1 << 24)
+    assert sub_window_rows(1 << 20) == SUB_WINDOW_ROWS
+    assert meta_stream_bytes(n_max) <= meta_stream_bytes(1 << 20)
+    assert meta_stream_bytes(64) < meta_stream_bytes(1 << 20)
     obbs = random_obbs(jax.random.PRNGKey(9), 24)
     runs = {}
     for layout, stream in (("resident", False), ("streamed", True)):
@@ -326,17 +331,29 @@ def test_residency_estimator_and_override():
     assert c_s.bytes_moved > c_r.bytes_moved
 
 
-def test_owner_plans_do_not_model_stream_traffic():
-    """Cross-slot owner (swept-edge) plans are ref-served with the table
-    resident — no arm performs window DMAs, so no window traffic may be
-    modeled even when the streamed layout is requested."""
+def test_owner_tiled_streamed_kernel_matches_ref():
+    """Cross-slot owner (swept-edge) plans run owner-group tiled on the
+    megakernel under BOTH metadata layouts: verdicts and every stats
+    field — including the streamed window schedule's meta_rows — bitwise
+    kernel == ref, and the streamed layout actually models traffic (the
+    old ref-only routing pinned these plans resident)."""
     dev = device_octree(_slab_scene())
-    obbs = random_obbs(jax.random.PRNGKey(2), 12)
-    owner = jnp.zeros((12,), jnp.int32)
-    _, st = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, 512,
-                           use_spheres=False, use_pallas=False,
-                           streamed=True, owner_of_query=owner, bq=8)
-    assert int(st["meta_rows"]) == 0
+    obbs = random_obbs(jax.random.PRNGKey(2), 24)
+    owner = jnp.asarray(np.repeat(np.arange(3), 8), jnp.int32)
+    payload = jnp.asarray(np.tile(np.arange(8), 3), jnp.int32)
+    kw = dict(use_spheres=False, owner_of_query=owner, payload=payload,
+              bq=8)
+    for streamed in (False, True):
+        ref = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, 512,
+                             use_pallas=False, streamed=streamed, **kw)
+        pal = traverse_whole(obbs.center, obbs.half, obbs.rot, dev, 512,
+                             use_pallas=True, interpret=True,
+                             streamed=streamed, **kw)
+        assert bool(jnp.all(ref[0][:3] == pal[0][:3])), streamed
+        for k in ref[1]:
+            assert bool(jnp.all(ref[1][k] == pal[1][k])), (streamed, k)
+        assert int(ref[1]["meta_rows"]) > 0 if streamed \
+            else int(ref[1]["meta_rows"]) == 0
 
 
 def test_cap_memo_rekeys_on_scene_growth():
