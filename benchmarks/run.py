@@ -820,7 +820,11 @@ def fig_serve(S):
          f"retried={rep['retried']};"
          f"deadline_missed={rep['deadline_missed']};"
          f"launch_splits={rep['launch_splits']};"
-         f"worker_restarts={rep['worker_restarts']}")
+         f"worker_restarts={rep['worker_restarts']};"
+         f"reshards={rep['reshards']};"
+         f"shards_lost={rep['shards_lost']};"
+         f"shard_rescales={rep['shard_rescales']};"
+         f"degraded_launches={rep['degraded_launches']}")
 
 
 # ---------------------------------------------------------------------------

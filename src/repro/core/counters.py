@@ -129,6 +129,17 @@ class Counters:
     launch_splits: int = 0              # bisect-retry splits isolating a
     #                                     poisoned request from co-riders
     worker_restarts: int = 0            # watchdog-detected worker deaths
+    reshards: int = 0                   # device-loss recoveries: sharded
+    #                                     launches re-sharded over the
+    #                                     surviving device set and relaunched
+    shards_lost: int = 0                # shard devices dropped from the
+    #                                     collision mesh by those recoveries
+    shard_rescales: int = 0             # elastic-width changes the batcher
+    #                                     applied between launches (queue
+    #                                     depth / p99 drifted past the SLO)
+    degraded_launches: int = 0          # launches served in declared
+    #                                     degraded mode (halved pad bucket,
+    #                                     capped max_depth) instead of shed
     wall_time_s: float = 0.0
 
     def merge_exit_codes(self, codes: np.ndarray, valid: np.ndarray) -> None:
@@ -163,6 +174,10 @@ class Counters:
         self.deadline_missed += other.deadline_missed
         self.launch_splits += other.launch_splits
         self.worker_restarts += other.worker_restarts
+        self.reshards += other.reshards
+        self.shards_lost += other.shards_lost
+        self.shard_rescales += other.shard_rescales
+        self.degraded_launches += other.degraded_launches
         self.exit_histogram += other.exit_histogram
         a, b = self.nodes_per_level, other.nodes_per_level
         self.nodes_per_level = [

@@ -6,9 +6,18 @@ with scene / owner / payload lanes; ``executor`` owns mode dispatch, the
 traversal cache, capacity escalation, and counter assembly for every plan
 alike.  ``repro.core.wavefront`` re-exports this package's public names
 for compatibility.
+
+The typed :class:`ServiceError` hierarchy the batcher resolves tickets
+with (DESIGN.md §7) is exported here too, so clients catch
+``repro.engine.Overloaded`` / ``DeviceLost`` / ... without importing
+``engine.batcher`` internals.
 """
-from repro.engine.executor import (CSR_MODES, DEVICE_MODES, MODES,
-                                   CollisionEngine, EngineConfig,
+from repro.engine.batcher import (BatcherClosed, DeadlineExceeded,
+                                  DeviceLost, LaunchStalled, Overloaded,
+                                  RequestBatcher, RequestStats,
+                                  ServiceError, WorkerDied)
+from repro.engine.executor import (CSR_MODES, DEPTH_CAP_MODES, DEVICE_MODES,
+                                   MODES, CollisionEngine, EngineConfig,
                                    frontier_capacity_bound,
                                    query_batched_scenes,
                                    traversal_cache_info)
@@ -17,8 +26,11 @@ from repro.engine.plan import (PAYLOAD_INF, QueryPlan, WORKLOADS, plan_batch,
                                plan_trajectory)
 
 __all__ = [
-    "CSR_MODES", "CollisionEngine", "DEVICE_MODES", "EngineConfig", "MODES",
-    "PAYLOAD_INF", "QueryPlan", "WORKLOADS", "frontier_capacity_bound",
-    "plan_batch", "plan_edges", "plan_queries", "plan_scenes",
-    "plan_trajectory", "query_batched_scenes", "traversal_cache_info",
+    "BatcherClosed", "CSR_MODES", "CollisionEngine", "DEPTH_CAP_MODES",
+    "DEVICE_MODES", "DeadlineExceeded", "DeviceLost", "EngineConfig",
+    "LaunchStalled", "MODES", "Overloaded", "PAYLOAD_INF", "QueryPlan",
+    "RequestBatcher", "RequestStats", "ServiceError", "WORKLOADS",
+    "WorkerDied", "frontier_capacity_bound", "plan_batch", "plan_edges",
+    "plan_queries", "plan_scenes", "plan_trajectory",
+    "query_batched_scenes", "traversal_cache_info",
 ]

@@ -78,6 +78,28 @@ MODES = ("naive", "rta_like", "staged_noexit", "predicated", "wavefront_host",
 DEVICE_MODES = ("wavefront", "wavefront_fused", "wavefront_persistent")
 #: CSR-frontier modes: multi-scene batches run on the ragged flat frontier.
 CSR_MODES = ("wavefront_fused", "wavefront_persistent")
+#: Modes whose traversal accepts a static ``max_depth`` cap — the coarser
+#: half of the declared degraded mode (DESIGN.md §7).  The per-level arms
+#: treat every cap-level node as terminal, so capped verdicts are a
+#: conservative superset of full-depth ones.  The persistent megakernel's
+#: in-kernel level schedule has no cap; degraded persistent launches
+#: shrink the pad bucket only.
+DEPTH_CAP_MODES = ("wavefront_host", "wavefront", "wavefront_fused")
+
+
+def device_loss_count(e: BaseException) -> Optional[int]:
+    """Classify an exception as device/mesh loss (DESIGN.md §7): the
+    number of shard devices lost, or None if this is not a device-loss
+    failure.  Injected :class:`repro.engine.faults.SimulatedDeviceLoss`
+    carries a ``device_loss`` attribute and a ``lost`` count; a real
+    runtime failure surfaces as an error whose message carries XLA's
+    DEVICE_LOST token (count unknown — assume one and let the relaunch
+    probe the rest)."""
+    if getattr(e, "device_loss", False):
+        return max(1, int(getattr(e, "lost", 1)))
+    if "DEVICE_LOST" in str(e):
+        return 1
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,7 +275,7 @@ def _lane_owner(owner, q_idx):
 
 def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
               use_spheres: bool, use_pallas: bool, owner=None, payload=None,
-              num_valid=None):
+              num_valid=None, max_depth: Optional[int] = None):
     """Full multi-level wavefront traversal for one query set / one scene.
 
     Pure function of device arrays; composes under jit and vmap.  Returns
@@ -265,10 +287,16 @@ def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     prefix: slots past it never seed the frontier and add zero work to
     every counter, so a padded pool traverses bitwise like its unpadded
     prefix (the sharded executor's per-shard padding relies on this).
+
+    ``max_depth`` (static) caps traversal at that level: every node of
+    the cap level is treated terminal, so an overlap there counts as a
+    hit.  Capped verdicts are a conservative SUPERSET of the full-depth
+    ones (possible false positives at cap-cell granularity, never a
+    missed collision) — the declared degraded mode of DESIGN.md §7.
     """
     M = obb_c.shape[0]
     grouped = owner is not None or payload is not None
-    depth = dev.depth
+    depth = dev.depth if max_depth is None else min(dev.depth, max_depth)
     lane = jnp.arange(capacity, dtype=jnp.int32)
     eight = jnp.arange(8, dtype=jnp.uint32)
 
@@ -346,7 +374,8 @@ def _traverse(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
 def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
                     use_spheres: bool, use_pallas: bool,
                     use_pallas_traverse: Optional[bool], owner=None,
-                    payload=None, num_valid=None):
+                    payload=None, num_valid=None,
+                    max_depth: Optional[int] = None):
     """Fused multi-level wavefront traversal (``mode="wavefront_fused"``).
 
     Same while_loop skeleton and work accounting as :func:`_traverse`, but
@@ -356,9 +385,19 @@ def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
     the staged SACT culls in two phases, and the per-level HBM-resident
     intermediates reduce to frontier-in / frontier-out.  Verdicts and work
     counters are bitwise-identical to :func:`_traverse`.
+
+    ``max_depth`` (static) stops traversal at that level; the step kernel
+    only treats TRUE leaves/full subtrees as terminal, so the cap level's
+    still-internal overlaps are folded into the verdict here — every
+    overlap at the cap counts as a hit, keeping capped verdicts the same
+    conservative superset :func:`_traverse` produces (boolean plans only;
+    the executor never routes grouped plans through a depth cap).
     """
     M = obb_c.shape[0]
-    depth = dev.depth
+    depth = dev.depth if max_depth is None else min(dev.depth, max_depth)
+    capped = depth < dev.depth
+    assert not (capped and (owner is not None or payload is not None)), \
+        "depth-capped traversal serves boolean plans only"
     lane = jnp.arange(capacity, dtype=jnp.int32)
 
     def body(carry):
@@ -369,6 +408,10 @@ def _traverse_fused(obb_c, obb_h, obb_r, dev: DeviceOctree, capacity: int,
             use_pallas=use_pallas_traverse, use_pallas_compact=use_pallas,
             owner=owner, payload=payload)
         res, valid, is_term = info["res"], info["valid"], info["is_term"]
+        if capped:
+            cap_hit = (res.collide & valid & ~is_term
+                       & (level == jnp.int32(depth)))
+            verdict = verdict.at[q_idx].max(cap_hit)
 
         # ---- work accounting (identical formulas to the unfused arm) -----
         n_valid = jnp.sum(valid.astype(jnp.int32))
@@ -410,7 +453,8 @@ _UNSET = object()
 @functools.lru_cache(maxsize=None)
 def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
                   use_pallas, use_pallas_traverse, streamed: bool = False,
-                  meta_format: str = "fp32"):
+                  meta_format: str = "fp32",
+                  max_depth: Optional[int] = None):
     """One jit-compiled traversal per (mode, batch kind, capacity, statics).
 
     The LRU gives every (mode, capacity, ...) configuration a *stable
@@ -428,12 +472,14 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
     engine shape flips format).
     """
     key = (mode, batch, capacity, use_spheres, use_pallas,
-           use_pallas_traverse, streamed, meta_format)
+           use_pallas_traverse, streamed, meta_format, max_depth)
 
     def base(c, h, r, d, soq=None, owner=None, payload=None, tiles=None):
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
         if mode == "wavefront_persistent" or soq is not None or \
                 tiles is not None:
+            assert max_depth is None, \
+                "the persistent/ragged arms have no depth cap (DESIGN.md §7)"
             # Whole-traversal megakernel / live-prefix ref; the ragged
             # multi-scene flat frontier (soq or a pre-built tile map)
             # also lands here for every CSR mode.  Only the persistent
@@ -451,9 +497,10 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
         if mode == "wavefront_fused":
             return _traverse_fused(c, h, r, d, capacity, use_spheres,
                                    use_pallas, use_pallas_traverse,
-                                   owner=owner, payload=payload)
+                                   owner=owner, payload=payload,
+                                   max_depth=max_depth)
         return _traverse(c, h, r, d, capacity, use_spheres, use_pallas,
-                         owner=owner, payload=payload)
+                         owner=owner, payload=payload, max_depth=max_depth)
 
     if batch == "single":
         fn = base
@@ -473,7 +520,7 @@ def _traversal_fn(mode: str, batch: str, capacity: int, use_spheres: bool,
 @functools.lru_cache(maxsize=None)
 def _sharded_traversal_fn(mode: str, capacity: int, use_spheres: bool,
                           use_pallas, use_pallas_traverse, streamed: bool,
-                          shards: int):
+                          shards: int, max_depth: Optional[int] = None):
     """Sharded sibling of :func:`_traversal_fn` (DESIGN.md §6).
 
     One shard_map-wrapped jit-compiled traversal per (mode, capacity,
@@ -489,11 +536,13 @@ def _sharded_traversal_fn(mode: str, capacity: int, use_spheres: bool,
     from repro.parallel.sharding import (make_collision_mesh,
                                          shard_collision_traversal)
     key = (mode, "sharded", capacity, use_spheres, use_pallas,
-           use_pallas_traverse, streamed, shards)
+           use_pallas_traverse, streamed, shards, max_depth)
 
     def local(nv, c, h, r, d):
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
         if mode == "wavefront_persistent":
+            assert max_depth is None, \
+                "the persistent arm has no depth cap (DESIGN.md §7)"
             return traverse_whole(c, h, r, d, capacity,
                                   use_spheres=use_spheres,
                                   use_pallas=use_pallas_traverse,
@@ -501,9 +550,9 @@ def _sharded_traversal_fn(mode: str, capacity: int, use_spheres: bool,
         if mode == "wavefront_fused":
             return _traverse_fused(c, h, r, d, capacity, use_spheres,
                                    use_pallas, use_pallas_traverse,
-                                   num_valid=nv)
+                                   num_valid=nv, max_depth=max_depth)
         return _traverse(c, h, r, d, capacity, use_spheres, use_pallas,
-                         num_valid=nv)
+                         num_valid=nv, max_depth=max_depth)
 
     mesh = make_collision_mesh(shards)
     sm = jax.jit(shard_collision_traversal(local, mesh))
@@ -644,6 +693,16 @@ class CollisionEngine:
         # rebind to a grown scene can never reuse a stale clean capacity
         # (which could skip the ladder and silently overflow-spill).
         self._cap_memo: dict = {}
+        # Device-loss seam (DESIGN.md §7): an optional callable invoked
+        # with the shard count at the top of every sharded launch attempt
+        # — the chaos harness installs one that raises SimulatedDeviceLoss
+        # so the re-shard/relaunch recovery below it is exercised, not
+        # just the batcher's typed-error translation.
+        self.device_fault_injector = None
+        # Surviving shard count after device loss (None = all of
+        # cfg.shards healthy).  Sticky across calls — lost devices do not
+        # come back on their own; ``set_shards`` re-probes the full set.
+        self._healthy_shards: Optional[int] = None
         self.rebind_octrees(octree)
 
     def rebind_octrees(self, octree: Union[Octree, List[Octree]]) -> None:
@@ -678,6 +737,50 @@ class CollisionEngine:
         # shapes of the CURRENT scene.
         self._cap_memo = {k: v for k, v in self._cap_memo.items()
                           if k[-1] == self._scene_sig}
+
+    # ------------------------------------------------------------------
+    # Elastic sharding surface (DESIGN.md §6/§7): the batcher reads
+    # active_shards / scene_nodes and rescales via set_shards.
+    # ------------------------------------------------------------------
+    @property
+    def scene_nodes(self) -> int:
+        """Total node count of the bound scene(s) — the per-query factor
+        of the service's predicted-work admission estimate."""
+        return sum(self._scene_sig)
+
+    @property
+    def active_shards(self) -> Optional[int]:
+        """Shards the next sharded launch will use: ``cfg.shards`` minus
+        devices lost to (possibly injected) device-loss recoveries; None
+        for an unsharded engine."""
+        if self.cfg.shards is None:
+            return None
+        return (self._healthy_shards if self._healthy_shards is not None
+                else self.cfg.shards)
+
+    @property
+    def supports_depth_cap(self) -> bool:
+        """Whether ``execute(plan, max_depth=...)`` can cap this engine's
+        traversal depth (the coarser half of the degraded mode)."""
+        return self.cfg.mode in DEPTH_CAP_MODES
+
+    def set_shards(self, shards: int) -> None:
+        """Elastic width: rebind the engine to an ``shards``-device
+        collision mesh (the batcher's autoscaler calls this between
+        launches).  Resets the device-loss bookkeeping — a rescale
+        re-probes the full device set, which is how a recovered device
+        rejoins the mesh."""
+        if self.cfg.shards is None:
+            raise ValueError(
+                "set_shards needs an engine constructed with cfg.shards; "
+                "unsharded engines have no collision mesh to resize")
+        n_dev = len(jax.devices())
+        if not 1 <= shards <= n_dev:
+            raise ValueError(
+                f"shards must be in [1, {n_dev}] (visible devices), "
+                f"got {shards}")
+        self.cfg = dataclasses.replace(self.cfg, shards=shards)
+        self._healthy_shards = None
 
     def _device_tree(self, fmt: str) -> DeviceOctree:
         """Padded level arrays packed in ``fmt``, cached per format."""
@@ -759,12 +862,20 @@ class CollisionEngine:
     # ------------------------------------------------------------------
     # The executor.
     # ------------------------------------------------------------------
-    def execute(self, plan: QueryPlan) -> Tuple[np.ndarray, Counters]:
+    def execute(self, plan: QueryPlan,
+                max_depth: Optional[int] = None
+                ) -> Tuple[np.ndarray, Counters]:
         """Run one lowered plan; returns (un-flattened verdicts, counters).
 
         Boolean plans yield bool verdicts in the plan's native shape;
         payload-lane plans yield the int32 per-group ``best`` payloads
         (``PAYLOAD_INF`` = group never hit).
+
+        ``max_depth`` caps traversal depth for degraded-mode service
+        (``DEPTH_CAP_MODES`` only; single-scene boolean plans): the cap
+        level is treated terminal, so verdicts are a conservative
+        superset of the full-depth run — coarser, never missing a
+        collision.
         """
         t0 = time.perf_counter()
         if plan.num_scenes != len(self.octrees):
@@ -777,14 +888,27 @@ class CollisionEngine:
             raise ValueError(
                 "owner/payload plans need a device-resident mode; lower to "
                 "a boolean plan and reduce on the host instead")
+        if max_depth is not None:
+            if not self.supports_depth_cap:
+                raise ValueError(
+                    f"max_depth needs a depth-cappable mode "
+                    f"({', '.join(DEPTH_CAP_MODES)}), not "
+                    f"{self.cfg.mode!r}")
+            if plan.grouped or plan.num_scenes > 1:
+                raise ValueError(
+                    "max_depth serves single-scene boolean plans (the "
+                    "degraded service path); grouped/multi-scene plans "
+                    "run at full depth")
+            if max_depth < 1:
+                raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         if self.cfg.shards is not None:
-            value, counters = self._exec_sharded(plan)
+            value, counters = self._exec_sharded(plan, max_depth)
         elif self.cfg.mode == "naive":
             value, counters = self._exec_naive(plan)
         elif self.cfg.device_resident:
-            value, counters = self._exec_device(plan)
+            value, counters = self._exec_device(plan, max_depth)
         else:
-            value, counters = self._exec_host(plan)
+            value, counters = self._exec_host(plan, max_depth)
         counters.wall_time_s = time.perf_counter() - t0
         counters.num_queries = plan.num_queries
         return plan.unflatten(value), counters
@@ -792,7 +916,7 @@ class CollisionEngine:
     # ------------------------------------------------------------------
     def _run(self, capacity: int, batch: str = "single",
              streamed: bool = False, meta_format: str = "fp32",
-             use_pallas_traverse=_UNSET):
+             use_pallas_traverse=_UNSET, max_depth: Optional[int] = None):
         """Cached jit-compiled traversal for this engine's config.
 
         ``use_pallas_traverse`` overrides the config's setting (the
@@ -803,9 +927,10 @@ class CollisionEngine:
         return _traversal_fn(self.cfg.mode, batch, capacity,
                              self.cfg.use_spheres,
                              self.cfg.use_pallas_compact,
-                             upt, streamed, meta_format)
+                             upt, streamed, meta_format, max_depth)
 
-    def _exec_device(self, plan: QueryPlan):
+    def _exec_device(self, plan: QueryPlan,
+                     max_depth: Optional[int] = None):
         cfg = self.cfg
         Q = plan.num_queries
         owner, payload = plan.owner_of_query, plan.payload
@@ -900,7 +1025,8 @@ class CollisionEngine:
                     plan.obb_r.reshape(S, M, 3, 3), dev),
                 M, worst, cfg, start=self._cap_memo.get(memo_key))
         else:
-            memo_key = ("single", Q, plan.grouped, self._scene_sig)
+            memo_key = ("single", Q, plan.grouped, max_depth,
+                        self._scene_sig)
             if tiled:
                 run = lambda cap: self._run(
                     cap, streamed=streamed, meta_format=fmt,
@@ -910,7 +1036,7 @@ class CollisionEngine:
             else:
                 run = lambda cap: self._run(
                     cap, streamed=streamed, meta_format=fmt,
-                    use_pallas_traverse=upt)(
+                    use_pallas_traverse=upt, max_depth=max_depth)(
                         plan.obb_c, plan.obb_h, plan.obb_r,
                         self.device_tree, None, owner, payload)
             verdict, st, cap, replays = _escalate(
@@ -931,7 +1057,8 @@ class CollisionEngine:
         return verdict, counters
 
     # ------------------------------------------------------------------
-    def _exec_sharded(self, plan: QueryPlan):
+    def _exec_sharded(self, plan: QueryPlan,
+                      max_depth: Optional[int] = None):
         """Sharded execute path (``cfg.shards``, DESIGN.md §6).
 
         The flat pool pads up to a multiple of the shard count (pad slots
@@ -943,6 +1070,20 @@ class CollisionEngine:
         bitwise-identical to single-device; escalation replays are
         coordinated by the global max over per-shard overflow flags.
 
+        **Device-loss recovery (DESIGN.md §7):** a launch attempt that
+        fails with a device-loss-classified error (see
+        :func:`device_loss_count`) does not fail the plan — the pool
+        re-pads and re-shards over the surviving device set and the
+        launch replays there.  Because verdicts and counters are
+        bitwise-identical across ANY shard count (the invariant above,
+        CI-enforced), the recovered run answers exactly like the healthy
+        mesh; only ``Counters.reshards`` / ``shards_lost`` (and the pad
+        count) betray that anything happened.  The reduced width is
+        sticky on the engine (``active_shards``) until ``set_shards``
+        re-probes the full device set; a loss with no survivors
+        propagates, which the batcher translates into the typed
+        ``DeviceLost`` service error.
+
         v1 serves single-scene boolean plans; ragged multi-scene pools
         and owner/payload lanes stay single-device (their frontiers are
         not partitioned by query slot).  The streamed metadata layout is
@@ -950,7 +1091,6 @@ class CollisionEngine:
         keep ``meta_rows`` partition-invariant.
         """
         cfg = self.cfg
-        shards = cfg.shards
         Q = plan.num_queries
         if plan.num_scenes != 1:
             raise ValueError(
@@ -960,26 +1100,62 @@ class CollisionEngine:
             raise ValueError(
                 "sharded execution serves boolean plans; owner/payload "
                 "verdict groups span shards and stay single-device")
-        q_shard = -(-Q // shards)
-        pad = q_shard * shards - Q
-        obb_c = jnp.pad(jnp.asarray(plan.obb_c), ((0, pad), (0, 0)))
-        obb_h = jnp.pad(jnp.asarray(plan.obb_h), ((0, pad), (0, 0)))
-        obb_r = jnp.pad(jnp.asarray(plan.obb_r), ((0, pad), (0, 0), (0, 0)))
-        counts = jnp.clip(
-            Q - jnp.arange(shards, dtype=jnp.int32) * q_shard, 0, q_shard)
-        memo_key = ("sharded", shards, Q, self._scene_sig)
-        verdict, st, cap, replays = _escalate(
-            lambda cap: _sharded_traversal_fn(
-                cfg.mode, cap, cfg.use_spheres, cfg.use_pallas_compact,
-                cfg.use_pallas_traverse, False, shards)(
-                    # Sharded runs pin the resident fp32 table (see the
-                    # docstring): per-device window traffic would break
-                    # the partition-invariance of ``meta_rows``.
-                    counts, obb_c, obb_h, obb_r, self._device_tree("fp32")),
-            Q, self._capacity(Q), cfg, start=self._cap_memo.get(memo_key))
+        shards = self.active_shards
+        reshards = 0
+        lost_total = 0
+        while True:
+            try:
+                if self.device_fault_injector is not None:
+                    self.device_fault_injector(shards)
+                q_shard = -(-Q // shards)
+                pad = q_shard * shards - Q
+                obb_c = jnp.pad(jnp.asarray(plan.obb_c), ((0, pad), (0, 0)))
+                obb_h = jnp.pad(jnp.asarray(plan.obb_h), ((0, pad), (0, 0)))
+                obb_r = jnp.pad(jnp.asarray(plan.obb_r),
+                                ((0, pad), (0, 0), (0, 0)))
+                counts = jnp.clip(
+                    Q - jnp.arange(shards, dtype=jnp.int32) * q_shard,
+                    0, q_shard)
+                memo_key = ("sharded", shards, Q, max_depth,
+                            self._scene_sig)
+                verdict, st, cap, replays = _escalate(
+                    lambda cap: _sharded_traversal_fn(
+                        cfg.mode, cap, cfg.use_spheres,
+                        cfg.use_pallas_compact, cfg.use_pallas_traverse,
+                        False, shards, max_depth)(
+                            # Sharded runs pin the resident fp32 table
+                            # (see the docstring): per-device window
+                            # traffic would break the partition-
+                            # invariance of ``meta_rows``.
+                            counts, obb_c, obb_h, obb_r,
+                            self._device_tree("fp32")),
+                    Q, self._capacity(Q), cfg,
+                    start=self._cap_memo.get(memo_key))
+                break
+            except Exception as e:
+                lost = device_loss_count(e)
+                if lost is None:
+                    raise
+                lost = min(lost, shards)
+                surviving = shards - lost
+                lost_total += lost
+                self._healthy_shards = max(surviving, 1)
+                if surviving < 1:
+                    logger.error(
+                        "collision mesh lost its last %d device(s); "
+                        "no survivors to re-shard onto: %s", lost, e)
+                    raise
+                reshards += 1
+                logger.warning(
+                    "device loss mid-launch (%d of %d shard devices); "
+                    "re-sharding the %d-query pool over the %d survivors",
+                    lost, shards, Q, surviving)
+                shards = surviving
         self._cap_memo[memo_key] = cap
         counters = _stats_to_counters(st, cfg.mode, replays)
         counters.pad_queries = pad
+        counters.reshards = reshards
+        counters.shards_lost = lost_total
         verdict = np.asarray(jax.device_get(verdict))[:Q]
         return verdict, counters
 
@@ -1004,13 +1180,19 @@ class CollisionEngine:
         return collide, c
 
     # ------------------------------------------------------------------
-    def _exec_host(self, plan: QueryPlan):
+    def _exec_host(self, plan: QueryPlan, max_depth: Optional[int] = None):
         """Legacy host-in-the-loop traversal (``wavefront_host`` and the
         predication/no-exit ablation arms): the frontier is re-bucketed on
-        the host between levels, which blocks jit across levels."""
+        the host between levels, which blocks jit across levels.
+
+        ``max_depth`` caps the level loop, treating the cap level as
+        terminal — same conservative-superset contract as the device
+        arms."""
         obbs = plan.obbs
         cfg = self.cfg
         oct_ = self.octree
+        depth_eff = (oct_.depth if max_depth is None
+                     else min(oct_.depth, max_depth))
         M = obbs.n
         c = Counters()
         decided = np.zeros(M, bool)           # queries confirmed colliding
@@ -1028,7 +1210,7 @@ class CollisionEngine:
         codes = jnp.pad(codes, (0, bucket - M))
         valid = jnp.arange(bucket) < n_live
 
-        for level in range(0, oct_.depth + 1):
+        for level in range(0, depth_eff + 1):
             if n_live == 0:
                 break
             cell = oct_.cell_size(level)
@@ -1038,8 +1220,9 @@ class CollisionEngine:
                               obbs.rot[q_idx], node_c, node_h, valid,
                               use_spheres=cfg.use_spheres,
                               stage_split=cfg.stage_split)
-            # Terminal nodes: leaves, or full internal subtrees.
-            if level == oct_.depth:
+            # Terminal nodes: leaves, full internal subtrees, or (when a
+            # degraded max_depth caps the loop) everything at the cap.
+            if level == depth_eff:
                 is_term = jnp.ones_like(valid)
             else:
                 pos = jnp.searchsorted(self._level_codes[level], codes)
@@ -1079,7 +1262,7 @@ class CollisionEngine:
             if cfg.early_exit:
                 decided |= hit_q
 
-            if level == oct_.depth:
+            if level == depth_eff:
                 break
 
             # ---- expansion -------------------------------------------

@@ -37,7 +37,8 @@ from repro.engine.plan import QueryPlan, plan_queries
 #: failure-mode table and the README reliability table (drift-guarded by
 #: tests/test_docs_modes like ADMISSION_KNOBS/SLO_METRICS).
 FAILURE_MODES = ("malformed_plan", "engine_exception", "worker_death",
-                 "launch_stall", "device_oom", "overload", "deadline_miss")
+                 "launch_stall", "device_oom", "overload", "deadline_miss",
+                 "device_loss")
 
 #: Ways :func:`poison_obbs` can corrupt a request, each one a condition
 #: ``repro.engine.plan.validate_plan`` must catch at submit.
@@ -59,6 +60,25 @@ class SimulatedOOM(RuntimeError):
 class InjectedFault(RuntimeError):
     """Injected non-transient engine exception (a poisoned launch): the
     batcher bisect-retries the batch to isolate the poisoned request."""
+
+
+class SimulatedDeviceLoss(RuntimeError):
+    """Injected stand-in for the runtime's DEVICE_LOST: ``lost`` shard
+    devices dropped out of the collision mesh mid-launch.  The sharded
+    executor classifies it (``device_loss`` attribute or a DEVICE_LOST
+    token in the message, matching how XLA surfaces real device loss),
+    re-shards the flat pair pool over the surviving device set, and
+    relaunches; only a mesh with no survivors propagates it to the
+    batcher, which fails the batch with the typed ``DeviceLost`` error."""
+
+    device_loss = True
+
+    def __init__(self, lost: int, shards: int):
+        super().__init__(
+            f"DEVICE_LOST (injected): {lost} of {shards} shard devices "
+            f"dropped out of the collision mesh mid-launch")
+        self.lost = int(lost)
+        self.shards = int(shards)
 
 
 class WorkerKill(BaseException):
@@ -88,6 +108,12 @@ class FaultPlan:
     oom_rate: float = 0.0          # transient SimulatedOOM
     stall_rate: float = 0.0        # artificial launch stall
     crash_rate: float = 0.0        # kill the worker thread (WorkerKill)
+    device_loss_rate: float = 0.0  # drop shard devices from the mesh
+    #                                (sharded engines only; fires at the
+    #                                per-attempt injector seam inside
+    #                                _exec_sharded, so the recovery path —
+    #                                not just the batcher — is exercised)
+    devices_lost: int = 1          # shard devices dropped per injection
     stall_s: float = 0.5           # injected stall duration
     poison_nan: bool = False       # any non-finite pool raises
     max_faults: Optional[int] = None   # stop injecting after this many
@@ -95,7 +121,7 @@ class FaultPlan:
 
     def __post_init__(self):
         for f in ("malformed_rate", "exception_rate", "oom_rate",
-                  "stall_rate", "crash_rate"):
+                  "stall_rate", "crash_rate", "device_loss_rate"):
             v = getattr(self, f)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{f} must be in [0, 1], got {v}")
@@ -169,7 +195,19 @@ class FaultyEngine:
         self.faults = faults
         self.calls = 0
         self.injected = {"exception": 0, "oom": 0, "stall": 0, "crash": 0,
-                         "poison": 0}
+                         "poison": 0, "device_loss": 0}
+        if faults.device_loss_rate > 0.0:
+            # Device loss must fire INSIDE the sharded launch attempt (the
+            # recovery loop lives in _exec_sharded, below the execute
+            # boundary every other fault uses), so it rides the engine's
+            # per-attempt injector seam.
+            engine.device_fault_injector = self._lose_devices
+
+    def _lose_devices(self, shards: int) -> None:
+        f = self.faults
+        if shards > 0 and f._fire(f.device_loss_rate):
+            self.injected["device_loss"] += 1
+            raise SimulatedDeviceLoss(min(f.devices_lost, shards), shards)
 
     # The batcher reads these off the engine it serves.
     @property
@@ -180,7 +218,27 @@ class FaultyEngine:
     def cfg(self):
         return self.inner.cfg
 
-    def execute(self, plan: QueryPlan) -> Tuple[np.ndarray, Counters]:
+    @property
+    def scene_nodes(self):
+        return self.inner.scene_nodes
+
+    @property
+    def active_shards(self):
+        return self.inner.active_shards
+
+    @property
+    def supports_depth_cap(self):
+        return self.inner.supports_depth_cap
+
+    def set_shards(self, shards: int) -> None:
+        self.inner.set_shards(shards)
+
+    def rebind_octrees(self, octree) -> None:
+        self.inner.rebind_octrees(octree)
+
+    def execute(self, plan: QueryPlan,
+                max_depth: Optional[int] = None) -> Tuple[np.ndarray,
+                                                          Counters]:
         self.calls += 1
         f = self.faults
         if f.poison_nan and not bool(
@@ -201,9 +259,14 @@ class FaultyEngine:
         if f._fire(f.exception_rate):
             self.injected["exception"] += 1
             raise InjectedFault("injected: engine exception mid-launch")
-        return self.inner.execute(plan)
+        # Like the batcher, only forward max_depth when set, so wrapped
+        # duck-typed engines with an execute(plan)-only signature keep
+        # working un-degraded.
+        if max_depth is None:
+            return self.inner.execute(plan)
+        return self.inner.execute(plan, max_depth=max_depth)
 
 
 __all__ = ["FAILURE_MODES", "FaultPlan", "FaultyEngine", "InjectedFault",
-           "POISON_KINDS", "SimulatedOOM", "WorkerKill", "poison_obbs",
-           "poisoned_plan"]
+           "POISON_KINDS", "SimulatedDeviceLoss", "SimulatedOOM",
+           "WorkerKill", "poison_obbs", "poisoned_plan"]

@@ -112,6 +112,15 @@ class QueryPlan:
         return (f"{self.kind}[Q={self.num_queries} S={self.num_scenes} "
                 f"G={self.groups} lanes={'+'.join(lanes) or 'none'}]")
 
+    def work_units(self, scene_nodes: int) -> int:
+        """Predicted traversal work for admission control (DESIGN.md §6):
+        scene node count x query count — the worst-case (query, node)
+        pair universe traversal cost actually scales with, unlike the raw
+        request count the v1 admission queue bounded.  The batcher
+        calibrates it against the measured exec-EWMA to turn units into
+        seconds."""
+        return int(scene_nodes) * self.num_queries
+
     def unflatten(self, flat) -> np.ndarray:
         """Map flat group verdicts back to the front-end's native shape.
 

@@ -48,10 +48,15 @@ SLO_METRICS = ("p50_ms", "p99_ms", "qps")
 
 #: Reliability counters in every report (drift-guarded against the
 #: DESIGN.md §7 reliability table): requests shed at admission, transient
-#: launch retries, pre-launch deadline kills, bisect-retry splits, and
-#: watchdog worker restarts.  All zero on a healthy run.
+#: launch retries, pre-launch deadline kills, bisect-retry splits,
+#: watchdog worker restarts, device-loss re-shard relaunches and the
+#: shard devices lost to them, elastic shard-width rescales, and
+#: launches served in declared degraded mode.  All zero on a healthy,
+#: unloaded run.
 RELIABILITY_METRICS = ("rejected", "retried", "deadline_missed",
-                       "launch_splits", "worker_restarts")
+                       "launch_splits", "worker_restarts", "reshards",
+                       "shards_lost", "shard_rescales",
+                       "degraded_launches")
 
 
 def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
@@ -63,6 +68,11 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
                 max_queue: int = 4096,
                 launch_timeout_s: Optional[float] = None,
                 max_retries: int = 2,
+                max_queue_work: Optional[int] = None,
+                degrade_queue: Optional[int] = None,
+                degraded_max_depth: Optional[int] = None,
+                autoscale_shards: bool = False,
+                target_p99_ms: Optional[float] = None,
                 chaos: Optional[FaultPlan] = None) -> dict:
     """Drive ``clients`` closed-loop clients, ``requests`` requests each.
 
@@ -115,7 +125,12 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
     with RequestBatcher(served, max_batch=max_batch,
                         max_wait_ms=max_wait_ms, max_queue=max_queue,
                         launch_timeout_s=launch_timeout_s,
-                        max_retries=max_retries) as batcher:
+                        max_retries=max_retries,
+                        max_queue_work=max_queue_work,
+                        degrade_queue=degrade_queue,
+                        degraded_max_depth=degraded_max_depth,
+                        autoscale_shards=autoscale_shards,
+                        target_p99_ms=target_p99_ms) as batcher:
         batcher.submit(plan_queries(reqs[0])).result(timeout=600)
         launches0 = batcher.num_launches
 
@@ -188,6 +203,11 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
         "deadline_missed": totals.deadline_missed,
         "launch_splits": totals.launch_splits,
         "worker_restarts": totals.worker_restarts,
+        "reshards": totals.reshards,
+        "shards_lost": totals.shards_lost,
+        "shard_rescales": totals.shard_rescales,
+        "degraded_launches": totals.degraded_launches,
+        "degraded_requests": sum(1 for s in flat if s.degraded),
         "counters": totals,
     }
 
@@ -195,10 +215,12 @@ def run_service(octree: Octree, *, clients: int = 8, requests: int = 32,
 def default_fault_plan(seed: int = 0) -> FaultPlan:
     """The ``--chaos`` rates: every §7 failure mode fires on a smoke-sized
     run, while most launches stay healthy so the SLO percentiles remain
-    meaningful."""
+    meaningful.  ``device_loss_rate`` only bites on sharded engines (the
+    injector seam lives inside ``_exec_sharded``); single-device chaos
+    runs simply never draw it."""
     return FaultPlan(malformed_rate=0.08, exception_rate=0.06,
                      oom_rate=0.05, stall_rate=0.02, crash_rate=0.01,
-                     stall_s=2.5, seed=seed)
+                     device_loss_rate=0.03, stall_s=2.5, seed=seed)
 
 
 def main() -> None:
@@ -223,9 +245,25 @@ def main() -> None:
                     help="inject faults (FaultPlan) and report graceful "
                          "degradation; implies a deadline and launch "
                          "timeout unless given explicitly")
+    ap.add_argument("--max-queue-work", type=int, default=None,
+                    help="work-based admission cap: shed when queued "
+                         "scene_nodes x queries would exceed this")
+    ap.add_argument("--degrade-queue", type=int, default=None,
+                    help="queue depth past which launches run in declared "
+                         "degraded mode instead of shedding")
+    ap.add_argument("--degraded-max-depth", type=int, default=None,
+                    help="traversal depth cap used by degraded launches "
+                         "(default: scene depth - 1)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="let the batcher rescale EngineConfig.shards "
+                         "between launches (sharded engines only)")
+    ap.add_argument("--target-p99-ms", type=float, default=None,
+                    help="latency SLO the autoscaler steers toward")
+    ap.add_argument("--soak-s", type=float, default=None,
+                    help="repeat the whole run (fresh seed each pass) "
+                         "until this much wall time has elapsed; reports "
+                         "aggregate per-pass reliability counters")
     args = ap.parse_args()
-
-    chaos = default_fault_plan(args.seed) if args.chaos else None
     deadline_ms = args.deadline_ms
     launch_timeout_s = args.launch_timeout_s
     if args.chaos:
@@ -237,12 +275,41 @@ def main() -> None:
     rs = np.random.RandomState(args.seed)
     pts = rs.uniform(-1, 1, (args.points, 3)).astype(np.float32)
     tree = build_octree(pts, depth=args.depth)
-    rep = run_service(
-        tree, clients=args.clients, requests=args.requests,
-        queries_per_request=args.queries, max_batch=args.max_batch,
-        max_wait_ms=args.max_wait_ms, mode=args.mode, shards=args.shards,
-        seed=args.seed, deadline_ms=deadline_ms,
-        launch_timeout_s=launch_timeout_s, chaos=chaos)
+
+    # --soak-s repeats the whole closed-loop run (fresh seed per pass, so
+    # the chaos draw sequence differs) until the wall clock budget runs
+    # out — the CI soak profile drives device-loss recovery through many
+    # re-shard cycles instead of the one-shot PR smoke.
+    t_start = time.perf_counter()
+    passes = 0
+    while True:
+        seed = args.seed + passes
+        chaos = default_fault_plan(seed) if args.chaos else None
+        rep = run_service(
+            tree, clients=args.clients, requests=args.requests,
+            queries_per_request=args.queries, max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms, mode=args.mode,
+            shards=args.shards, seed=seed, deadline_ms=deadline_ms,
+            launch_timeout_s=launch_timeout_s,
+            max_queue_work=args.max_queue_work,
+            degrade_queue=args.degrade_queue,
+            degraded_max_depth=args.degraded_max_depth,
+            autoscale_shards=args.autoscale,
+            target_p99_ms=args.target_p99_ms, chaos=chaos)
+        passes += 1
+        if args.soak_s is not None:
+            print(f"--- soak pass {passes} "
+                  f"({time.perf_counter() - t_start:.1f}s elapsed) ---")
+        _print_report(rep)
+        if args.soak_s is None or \
+                time.perf_counter() - t_start >= args.soak_s:
+            break
+    if args.soak_s is not None:
+        print(f"soak: {passes} passes, every submit resolved, "
+              f"{time.perf_counter() - t_start:.1f}s total")
+
+
+def _print_report(rep: dict) -> None:
     print(f"served {rep['requests']}/{rep['submitted']} requests "
           f"/ {rep['queries']} queries from {rep['clients']} clients "
           f"in {rep['wall_s']:.2f}s")
@@ -255,7 +322,14 @@ def main() -> None:
           f"retried {rep['retried']}  "
           f"deadline_missed {rep['deadline_missed']}  "
           f"launch_splits {rep['launch_splits']}  "
-          f"worker_restarts {rep['worker_restarts']}")
+          f"worker_restarts {rep['worker_restarts']}  "
+          f"reshards {rep['reshards']}  "
+          f"shards_lost {rep['shards_lost']}  "
+          f"shard_rescales {rep['shard_rescales']}  "
+          f"degraded_launches {rep['degraded_launches']}")
+    if rep["degraded_requests"]:
+        print(f"degraded (declared, conservative-superset verdicts): "
+              f"{rep['degraded_requests']} requests")
     if rep["failed"]:
         kinds = ", ".join(f"{k}={v}" for k, v in
                           sorted(rep["failures"].items()))

@@ -215,6 +215,153 @@ def test_run_service_reports_slos():
     assert rep["counters"].num_queries >= 24
 
 
+def test_engine_exports_typed_service_errors():
+    """Satellite: clients catch service errors from ``repro.engine``
+    without reaching into batcher internals."""
+    import repro.engine as E
+    for name in ("ServiceError", "Overloaded", "DeadlineExceeded",
+                 "LaunchStalled", "WorkerDied", "BatcherClosed",
+                 "DeviceLost", "RequestBatcher", "RequestStats",
+                 "DEPTH_CAP_MODES"):
+        assert name in E.__all__ and hasattr(E, name), name
+    for err in (E.Overloaded, E.DeadlineExceeded, E.LaunchStalled,
+                E.WorkerDied, E.BatcherClosed, E.DeviceLost):
+        assert issubclass(err, E.ServiceError)
+    assert not issubclass(E.ServiceError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# Depth-capped traversal (degraded mode substrate)
+# ---------------------------------------------------------------------------
+
+def test_depth_cap_conservative_superset_and_mode_agreement():
+    """execute(max_depth=k) treats level-k cells as terminal: verdicts are
+    a conservative SUPERSET of the exact ones (never a missed collision),
+    identical across every DEPTH_CAP_MODES member, and full-depth
+    max_depth is a no-op."""
+    from repro.engine.executor import DEPTH_CAP_MODES
+    tree = _tree(11)
+    obbs = random_obbs(jax.random.PRNGKey(12), 64)
+    plan = plan_queries(obbs)
+    exact = np.asarray(CollisionEngine(
+        tree, EngineConfig(mode="wavefront_fused")).execute(plan)[0])
+    for k in (1, 2, tree.depth):
+        capped = {}
+        for mode in DEPTH_CAP_MODES:
+            eng = CollisionEngine(tree, EngineConfig(mode=mode))
+            assert eng.supports_depth_cap
+            v, _ = eng.execute(plan, max_depth=k)
+            capped[mode] = np.asarray(v)
+            assert not (exact & ~capped[mode]).any(), (mode, k)
+        ref = capped[DEPTH_CAP_MODES[0]]
+        for mode, v in capped.items():
+            assert (v == ref).all(), (mode, k)
+        if k == tree.depth:
+            assert (ref == exact).all()
+    # Sharded capped equals single-device capped (shards=1 in-process).
+    v1, _ = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_fused", shards=1)).execute(plan, max_depth=2)
+    v0, _ = CollisionEngine(tree, EngineConfig(
+        mode="wavefront_fused")).execute(plan, max_depth=2)
+    assert (np.asarray(v1) == np.asarray(v0)).all()
+
+
+def test_depth_cap_rejected_where_unsupported():
+    tree = _tree(13, n=800, depth=3)
+    eng = CollisionEngine(tree, EngineConfig(mode="wavefront_persistent"))
+    assert not eng.supports_depth_cap
+    obbs = random_obbs(jax.random.PRNGKey(14), 4)
+    with pytest.raises(ValueError, match="max_depth"):
+        eng.execute(plan_queries(obbs), max_depth=1)
+    eng2 = CollisionEngine(tree, EngineConfig(mode="wavefront_fused"))
+    with pytest.raises(ValueError):
+        eng2.execute(plan_queries(obbs), max_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Live rebind + elastic shard width (service v2)
+# ---------------------------------------------------------------------------
+
+def test_rebind_under_live_batcher_streaming_clients():
+    """Satellite regression: swapping the bound scene while clients stream
+    requests is safe — every verdict matches the request's queries against
+    scene A or scene B (never a torn mix), rebind() is FIFO with the
+    requests around it, and submits after it see scene B exactly."""
+    tree_a = _tree(15, n=1200, depth=3)
+    tree_b = _tree(16, n=1200, depth=3)
+    cfg = EngineConfig(mode="wavefront_fused")
+    ref_a = CollisionEngine(tree_a, cfg)
+    ref_b = CollisionEngine(tree_b, cfg)
+    n_clients, n_reqs = 3, 8
+    reqs = [[random_obbs(jax.random.PRNGKey(100 * ci + ri), 4 + ri % 3)
+             for ri in range(n_reqs)] for ci in range(n_clients)]
+    refs = [[(np.asarray(ref_a.execute(plan_queries(o))[0]),
+              np.asarray(ref_b.execute(plan_queries(o))[0]))
+             for o in per_client] for per_client in reqs]
+
+    live = CollisionEngine(tree_a, cfg)
+    results = [[None] * n_reqs for _ in range(n_clients)]
+    errors = []
+
+    with RequestBatcher(live, max_wait_ms=1.0) as b:
+        def client(ci):
+            try:
+                for ri in range(n_reqs):
+                    v, _ = b.submit(reqs[ci][ri]).result(timeout=120)
+                    results[ci][ri] = np.asarray(v)
+            except BaseException as e:        # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(ci,))
+                   for ci in range(n_clients)]
+        for t in threads:
+            t.start()
+        b.rebind(tree_b)                      # mid-stream, worker-routed
+        probe = random_obbs(jax.random.PRNGKey(999), 6)
+        v_after, _ = b.submit(probe).result(timeout=120)
+        for t in threads:
+            t.join()
+    assert not errors, errors
+    assert (np.asarray(v_after)
+            == np.asarray(ref_b.execute(plan_queries(probe))[0])).all()
+    for ci in range(n_clients):
+        for ri in range(n_reqs):
+            v = results[ci][ri]
+            va, vb = refs[ci][ri]
+            assert (v == va).all() or (v == vb).all(), (ci, ri)
+
+
+def test_autoscale_widens_shards_under_load_on_eight_devices():
+    """The elastic batcher scales EngineConfig.shards up between launches
+    when p99 drifts past the SLO, and verdicts stay bitwise-correct
+    across the rescale."""
+    out = run_devices("""
+    from repro.core.geometry import random_obbs
+    from repro.core.octree import build_octree
+    from repro.engine.batcher import RequestBatcher
+    from repro.engine.executor import CollisionEngine, EngineConfig
+    from repro.engine.plan import plan_queries
+
+    rs = np.random.RandomState(0)
+    tree = build_octree(rs.uniform(-1, 1, (1500, 3)).astype(np.float32),
+                        depth=3)
+    eng = CollisionEngine(tree, EngineConfig(mode="wavefront_fused",
+                                             shards=1))
+    reqs = [random_obbs(jax.random.PRNGKey(i), 5 + i % 7)
+            for i in range(14)]
+    refs = [np.asarray(eng.execute(plan_queries(o))[0]) for o in reqs]
+    with RequestBatcher(eng, max_wait_ms=1.0, autoscale_shards=True,
+                        target_p99_ms=0.01) as b:   # unmeetable SLO
+        for o, ref in zip(reqs, refs):
+            v, _ = b.submit(o).result(timeout=120)
+            assert (np.asarray(v) == ref).all()
+    assert b.totals.shard_rescales >= 1, b.totals.shard_rescales
+    assert eng.cfg.shards > 1, eng.cfg.shards
+    print("AUTOSCALE_OK", eng.cfg.shards, b.totals.shard_rescales)
+    """)
+    assert "AUTOSCALE_OK" in out
+
+
 def test_run_service_sharded_on_eight_devices():
     """The full service stack (shard_map engine under the batcher under
     concurrent clients) on 8 virtual devices."""
